@@ -1,0 +1,69 @@
+"""Paper Tables 2+3: index construction time and index size, plus the tree
+height vs the Lemma-1 bound. Sequential vs chunked merge quantifies the
+intra-node-parallelism analog (the paper's 3.27x build speedup claim class).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import IRangeGraph
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.data import make_dataset
+
+from .common import SCALES, save_results, scaled_spec
+
+
+def run(scale: str = "small", datasets=("laion", "youtube")):
+    s = SCALES[scale]
+    rows = []
+    for ds in datasets:
+        spec = scaled_spec(ds, scale)
+        vecs, attrs = make_dataset(spec)
+        khi_seq = KHIIndex.build(vecs, attrs,
+                                 KHIConfig(M=s["M"], merge_chunk=1))
+        khi_par = KHIIndex.build(vecs, attrs,
+                                 KHIConfig(M=s["M"], merge_chunk=64))
+        khi_bulk = KHIIndex.build(vecs, attrs,
+                                  KHIConfig(M=s["M"], builder="bulk"))
+        irg = IRangeGraph.build(vecs, attrs, M=s["M"])
+        h = khi_par.height - 1
+        bound = khi_par.tree.height_bound()
+        row = dict(
+            dataset=ds, n=spec.n,
+            khi_seq_s=khi_seq.build_seconds,
+            khi_chunked_s=khi_par.build_seconds,
+            khi_bulk_s=khi_bulk.build_seconds,
+            irange_s=irg.build_seconds,
+            chunk_speedup=khi_seq.build_seconds / khi_par.build_seconds,
+            build_vs_irange=irg.build_seconds / khi_par.build_seconds,
+            khi_size_mb=khi_par.graph_size_bytes() / 2**20,
+            irange_size_mb=irg.graph_size_bytes() / 2**20,
+            size_ratio=khi_par.graph_size_bytes()
+            / max(irg.graph_size_bytes(), 1),
+            tree_height=h, height_bound=bound,
+        )
+        rows.append(row)
+        print(f"[build] {ds}: khi chunked {row['khi_chunked_s']:.1f}s "
+              f"(seq {row['khi_seq_s']:.1f}s, x{row['chunk_speedup']:.2f}) "
+              f"irange {row['irange_s']:.1f}s; size "
+              f"{row['khi_size_mb']:.1f}MB vs {row['irange_size_mb']:.1f}MB; "
+              f"height {h} <= bound {bound:.1f}", flush=True)
+        assert h <= np.ceil(bound) + 1
+    save_results("build_and_size", rows)
+    return rows
+
+
+def csv_lines(rows):
+    out = []
+    for r in rows:
+        out.append(f"table2_build_{r['dataset']},"
+                   f"{r['khi_chunked_s'] * 1e6:.0f},"
+                   f"chunk_speedup={r['chunk_speedup']:.2f}"
+                   f";vs_irange={r['build_vs_irange']:.2f}")
+        out.append(f"table3_size_{r['dataset']},"
+                   f"{r['khi_size_mb'] * 1e3:.0f},"
+                   f"ratio_vs_irange={r['size_ratio']:.2f}")
+    return out

@@ -1,0 +1,75 @@
+"""Paper Fig. 5: evolution of the distance threshold (worst of best-so-far)
+during search — KHI should tighten within few hops, iRangeGraph slowly."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import query_ref as qr
+from repro.data import make_dataset, make_queries
+
+from .common import SCALES, build_methods, save_results, scaled_spec
+
+
+def run(scale: str = "small", dataset: str = "youtube", k: int = 10,
+        ef: int = 128):
+    s = SCALES[scale]
+    spec = scaled_spec(dataset, scale)
+    vecs, attrs = make_dataset(spec)
+    methods = build_methods(vecs, attrs, M=s["M"], which=("khi", "irange"))
+    out = {}
+    for sname, sigma in (("1/16", 1 / 16), ("1/64", 1 / 64),
+                         ("1/256", 1 / 256)):
+        Q, preds = make_queries(vecs, attrs, n_queries=30, sigma=sigma,
+                                seed=5)
+        traces = {"khi": [], "irange": []}
+        for q, p in zip(Q, preds):
+            _, st = qr.query(methods["khi"], q, p, k, ef=ef,
+                             return_stats=True)
+            traces["khi"].append(st["threshold_trace"])
+            _, st = methods["irange"].query(q, p, k, ef=ef,
+                                            return_stats=True)
+            traces["irange"].append(st["threshold_trace"])
+
+        def mean_trace(ts, n=60):
+            grid = []
+            for h in range(n):
+                vals = [t[min(h, len(t) - 1)] for t in ts
+                        if len(t) and np.isfinite(t[min(h, len(t) - 1)])]
+                grid.append(float(np.mean(vals)) if vals else None)
+            return grid
+
+        # hops to reach within 5% of final threshold
+        def hops_to_converge(ts):
+            hs = []
+            for t in ts:
+                if not t or not np.isfinite(t[-1]):
+                    continue
+                tgt = t[-1] * 1.05
+                for h, v in enumerate(t):
+                    if v <= tgt:
+                        hs.append(h)
+                        break
+            return float(np.mean(hs)) if hs else None
+
+        out[sname] = {
+            "khi_trace": mean_trace(traces["khi"]),
+            "irange_trace": mean_trace(traces["irange"]),
+            "khi_hops_to_converge": hops_to_converge(traces["khi"]),
+            "irange_hops_to_converge": hops_to_converge(traces["irange"]),
+        }
+        print(f"[convergence] sigma={sname}: khi converges in "
+              f"{out[sname]['khi_hops_to_converge']} hops vs irange "
+              f"{out[sname]['irange_hops_to_converge']}", flush=True)
+    save_results("convergence", out)
+    return out
+
+
+def csv_lines(out):
+    lines = []
+    for sname, r in out.items():
+        kk = r["khi_hops_to_converge"] or 0
+        ii = r["irange_hops_to_converge"] or 0
+        lines.append(f"fig5_hops_{sname.replace('/', '_')},{kk:.1f},"
+                     f"irange={ii:.1f}")
+    return lines

@@ -1,0 +1,83 @@
+"""Kernel + engine microbenchmarks: Pallas (interpret) vs jnp oracle
+correctness-at-scale, and the jitted batched engine's QPS vs the numpy
+reference engine."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import query_ref as qr
+from repro.core.engine import SearchParams, device_put_index, make_search_fn
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.data import make_dataset, make_queries
+from repro.kernels import ops
+from repro.kernels.ref import l2dist_qn_ref
+
+from .common import SCALES, save_results, scaled_spec
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(scale: str = "small"):
+    s = SCALES[scale]
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # kernel: all-pairs distance (the Prefiltering/bulk-build hot spot)
+    B, N, D = 8, 4096, 128
+    q = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    t_ref = _time(jax.jit(l2dist_qn_ref), q, c)
+    t_pal = _time(lambda a, b: ops.l2dist(a, b, interpret=True), q, c)
+    err = float(jnp.max(jnp.abs(ops.l2dist(q, c, interpret=True)
+                                - l2dist_qn_ref(q, c))))
+    out["l2dist_qn"] = dict(shape=[B, N, D], ref_us=t_ref * 1e6,
+                            pallas_interpret_us=t_pal * 1e6, max_err=err)
+    print(f"[kernels] l2dist_qn ref {t_ref*1e6:.0f}us, interpret "
+          f"{t_pal*1e6:.0f}us (CPU interpret overhead expected), err {err:.1e}",
+          flush=True)
+
+    # engine: jitted batched search vs numpy reference
+    spec = scaled_spec("laion", scale)
+    vecs, attrs = make_dataset(spec)
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=s["M"], builder="bulk"))
+    Q, preds = make_queries(vecs, attrs, n_queries=64, sigma=1 / 16, seed=3)
+    di = device_put_index(idx)
+    params = SearchParams(k=10, ef=64, c_e=10, c_n=s["M"])
+    fn = make_search_fn(params)
+    qlo = jnp.asarray(np.stack([p.lo for p in preds]))
+    qhi = jnp.asarray(np.stack([p.hi for p in preds]))
+    qv = jnp.asarray(Q)
+    t_jit = _time(fn, di, qv, qlo, qhi)
+    t0 = time.perf_counter()
+    for q_, p_ in zip(Q, preds):
+        qr.query(idx, q_, p_, 10, ef=64)
+    t_np = time.perf_counter() - t0
+    out["engine"] = dict(batch=64, jit_batch_ms=t_jit * 1e3,
+                         jit_qps=64 / t_jit, numpy_qps=64 / t_np)
+    print(f"[kernels] engine jit {64/t_jit:.0f} QPS vs numpy ref "
+          f"{64/t_np:.0f} QPS (CPU)", flush=True)
+    save_results("kernels", out)
+    return out
+
+
+def csv_lines(out):
+    k = out["l2dist_qn"]
+    return [
+        f"kernel_l2dist_qn,{k['pallas_interpret_us']:.0f},"
+        f"ref_us={k['ref_us']:.0f};max_err={k['max_err']:.1e}",
+        f"engine_jit_batch64,{out['engine']['jit_batch_ms'] * 1e3:.0f},"
+        f"jit_qps={out['engine']['jit_qps']:.0f}"
+        f";numpy_qps={out['engine']['numpy_qps']:.0f}",
+    ]

@@ -1,0 +1,71 @@
+"""Paper Fig. 4: recall-QPS tradeoff, 4 datasets x sigma in {1/16,1/64,1/256}.
+
+Reports QPS at recall 0.95 (0.9 on youtube, as in the paper) and the
+KHI/iRangeGraph + KHI/Prefiltering speedups, plus the visited-work ratio.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import make_dataset, make_queries
+
+from .common import (SCALES, build_methods, qps_at_recall, run_queries,
+                     save_results, scaled_spec)
+
+SIGMAS = {"1/16": 1 / 16, "1/64": 1 / 64, "1/256": 1 / 256}
+
+
+def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
+        k: int = 10):
+    s = SCALES[scale]
+    rows = []
+    for ds in datasets:
+        spec = scaled_spec(ds, scale)
+        vecs, attrs = make_dataset(spec)
+        methods = build_methods(vecs, attrs, M=s["M"])
+        target = s["target"] - (0.05 if ds == "youtube" else 0.0)
+        for sname, sigma in SIGMAS.items():
+            Q, preds = make_queries(vecs, attrs, n_queries=s["n_queries"],
+                                    sigma=sigma, seed=11)
+            points = {}
+            for mname, m in methods.items():
+                pts = [run_queries(mname, m, vecs, attrs, Q, preds, k, ef)
+                       for ef in (s["efs"] if mname != "prefilter" else (0,))]
+                points[mname] = pts
+            qk = qps_at_recall(points["khi"], target)
+            qi = qps_at_recall(points["irange"], target)
+            qp = points["prefilter"][0]["qps"]
+            # work ratio at matched recall
+            vk = min((p["visited"] for p in points["khi"]
+                      if p["recall"] >= target), default=None)
+            vi = min((p["visited"] for p in points["irange"]
+                      if p["recall"] >= target), default=None)
+            row = dict(dataset=ds, sigma=sname, target_recall=target,
+                       khi_qps=qk, irange_qps=qi, prefilter_qps=qp,
+                       speedup_vs_irange=(qk / qi) if qk and qi else None,
+                       speedup_vs_prefilter=(qk / qp) if qk else None,
+                       khi_visited=vk, irange_visited=vi,
+                       work_ratio=(vi / vk) if vk and vi else None,
+                       points=points)
+            rows.append(row)
+            print(f"[qps_recall] {ds:8s} sigma={sname:6s} "
+                  f"khi={qk and round(qk)} irg={qi and round(qi)} "
+                  f"pre={round(qp)} x_irg="
+                  f"{row['speedup_vs_irange'] and round(row['speedup_vs_irange'], 2)} "
+                  f"work_ratio={row['work_ratio'] and round(row['work_ratio'], 2)}",
+                  flush=True)
+    save_results("qps_recall", rows)
+    return rows
+
+
+def csv_lines(rows):
+    out = []
+    for r in rows:
+        qps = r["khi_qps"] or 0.0
+        us = 1e6 / qps if qps else 0.0
+        out.append(
+            f"fig4_{r['dataset']}_{r['sigma'].replace('/', '_')},"
+            f"{us:.1f},x_irange={r['speedup_vs_irange'] or 0:.2f}"
+            f";work_ratio={r['work_ratio'] or 0:.2f}")
+    return out

@@ -1,0 +1,41 @@
+"""Paper Fig. 7: QPS at matched recall while predicate cardinality |B|
+varies (dblp, m=4). Gains grow with cardinality."""
+
+from __future__ import annotations
+
+from repro.data import make_dataset, make_queries
+
+from .common import (SCALES, build_methods, qps_at_recall, run_queries,
+                     save_results, scaled_spec)
+
+
+def run(scale: str = "small", dataset: str = "dblp", sigma: float = 1 / 64,
+        k: int = 10):
+    s = SCALES[scale]
+    spec = scaled_spec(dataset, scale)
+    vecs, attrs = make_dataset(spec)
+    methods = build_methods(vecs, attrs, M=s["M"])
+    rows = []
+    for card in range(2, spec.m + 1):
+        Q, preds = make_queries(vecs, attrs, n_queries=s["n_queries"],
+                                sigma=sigma, cardinality=card, seed=17)
+        pts = {m: [run_queries(m, methods[m], vecs, attrs, Q, preds, k, ef)
+                   for ef in (s["efs"] if m != "prefilter" else (0,))]
+               for m in methods}
+        qk = qps_at_recall(pts["khi"], s["target"])
+        qi = qps_at_recall(pts["irange"], s["target"])
+        rows.append(dict(cardinality=card, khi_qps=qk, irange_qps=qi,
+                         prefilter_qps=pts["prefilter"][0]["qps"],
+                         speedup=(qk / qi) if qk and qi else None))
+        print(f"[vary_card] |B|={card}: khi={qk and round(qk)} "
+              f"irg={qi and round(qi)} "
+              f"x{rows[-1]['speedup'] and round(rows[-1]['speedup'], 2)}",
+              flush=True)
+    save_results("vary_card", rows)
+    return rows
+
+
+def csv_lines(rows):
+    return [f"fig7_card{r['cardinality']},"
+            f"{1e6 / r['khi_qps'] if r['khi_qps'] else 0:.1f},"
+            f"x_irange={r['speedup'] or 0:.2f}" for r in rows]

@@ -1,0 +1,39 @@
+"""Paper Fig. 6: QPS at matched recall while k varies in {10, 20, 50, 100}
+(laion). The KHI/iRangeGraph gap should widen with k."""
+
+from __future__ import annotations
+
+from repro.data import make_dataset, make_queries
+
+from .common import (SCALES, build_methods, qps_at_recall, run_queries,
+                     save_results, scaled_spec)
+
+
+def run(scale: str = "small", dataset: str = "laion", sigma: float = 1 / 64,
+        ks=(10, 20, 50, 100)):
+    s = SCALES[scale]
+    spec = scaled_spec(dataset, scale)
+    vecs, attrs = make_dataset(spec)
+    methods = build_methods(vecs, attrs, M=s["M"])
+    Q, preds = make_queries(vecs, attrs, n_queries=s["n_queries"],
+                            sigma=sigma, seed=13)
+    rows = []
+    for k in ks:
+        pts = {m: [run_queries(m, methods[m], vecs, attrs, Q, preds, k, ef)
+                   for ef in (s["efs"] if m != "prefilter" else (0,))]
+               for m in methods}
+        qk = qps_at_recall(pts["khi"], s["target"])
+        qi = qps_at_recall(pts["irange"], s["target"])
+        rows.append(dict(k=k, khi_qps=qk, irange_qps=qi,
+                         prefilter_qps=pts["prefilter"][0]["qps"],
+                         speedup=(qk / qi) if qk and qi else None))
+        print(f"[vary_k] k={k}: khi={qk and round(qk)} irg={qi and round(qi)}"
+              f" x{rows[-1]['speedup'] and round(rows[-1]['speedup'], 2)}",
+              flush=True)
+    save_results("vary_k", rows)
+    return rows
+
+
+def csv_lines(rows):
+    return [f"fig6_k{r['k']},{1e6 / r['khi_qps'] if r['khi_qps'] else 0:.1f},"
+            f"x_irange={r['speedup'] or 0:.2f}" for r in rows]

@@ -1,0 +1,47 @@
+"""End-to-end training driver: train a ~20M-param mamba2-family model for a
+few hundred steps on the synthetic LM stream; loss must drop. Exercises the
+full production loop: deterministic data, async checkpointing, restart-
+resume, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+
+import argparse
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.launch.train import main as train_main
+
+
+def run(steps: int = 300):
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        # phase 1: first half of training, checkpointing as it goes
+        losses1 = train_main([
+            "--arch", "mamba2-780m", "--smoke",
+            "--steps", str(steps // 2), "--batch", "8", "--seq", "128",
+            "--lr", "3e-3", "--ckpt-dir", ckpt, "--ckpt-every", "50"])
+        # phase 2: simulate a crash + restart — resumes from the checkpoint
+        print("\n--- simulated restart (resume from checkpoint) ---\n")
+        losses2 = train_main([
+            "--arch", "mamba2-780m", "--smoke",
+            "--steps", str(steps), "--batch", "8", "--seq", "128",
+            "--lr", "3e-3", "--ckpt-dir", ckpt, "--ckpt-every", "50"])
+        first = np.mean(losses1[:10])
+        last = np.mean(losses2[-10:])
+        print(f"\nloss {first:.3f} -> {last:.3f}")
+        assert last < first - 0.3, "loss did not drop — training is broken"
+        print("train_e2e OK")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    run(ap.parse_args().steps)

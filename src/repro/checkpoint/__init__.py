@@ -1,0 +1,7 @@
+from .manager import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+    restore_into,
+    save_checkpoint,
+)

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §2): a checkpoint is a directory ``step_<N>/`` holding one
+``arrays.npz`` (leaves keyed by their pytree path) plus ``meta.json``. Writes
+are atomic (tmp dir + rename), so a host dying mid-save can never corrupt
+the latest checkpoint; restart resumes from ``latest_step``.
+
+Restore is *mesh-independent*: leaves are loaded on host and re-placed with
+``device_put`` against a template tree (values or ShapeDtypeStructs with
+shardings), so a checkpoint taken on one mesh restores onto another — the
+elastic-scaling path (scale 256 -> 512 chips or recover with fewer hosts)
+is just save + restore with a different template.
+
+``AsyncCheckpointer`` snapshots device arrays to host synchronously (cheap)
+and does the serialization/write on a background thread — training never
+blocks on disk. ``keep`` bounds retained checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "restore_into",
+           "latest_step", "AsyncCheckpointer"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    meta: Optional[dict] = None) -> pathlib.Path:
+    base = pathlib.Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    tmp = base / f".tmp_step_{step}"
+    final = base / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "meta.json").write_text(json.dumps(
+        {"step": step, **(meta or {})}, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in base.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None):
+    """Returns (arrays dict path->np.ndarray, meta dict)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = pathlib.Path(ckpt_dir) / f"step_{step}"
+    z = np.load(d / "arrays.npz")
+    meta = json.loads((d / "meta.json").read_text())
+    return {k: z[k] for k in z.files}, meta
+
+
+def restore_into(template: Any, arrays: dict) -> Any:
+    """Rebuild the pytree of ``template`` from saved leaves, placing each on
+    the template's sharding (cross-mesh restore / elastic rescale)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, t in flat:
+        key = _path_str(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        v = arrays[key]
+        if hasattr(t, "shape") and tuple(t.shape) != tuple(v.shape):
+            raise ValueError(f"{key}: shape {v.shape} != template {t.shape}")
+        sharding = getattr(t, "sharding", None)
+        if sharding is not None and not isinstance(
+                sharding, jax.sharding.SingleDeviceSharding):
+            leaves.append(jax.device_put(v, sharding))
+        else:
+            dtype = getattr(t, "dtype", None)
+            leaves.append(jax.numpy.asarray(v, dtype=dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+class AsyncCheckpointer:
+    """Non-blocking checkpointer with bounded retention."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()  # one outstanding save at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot now
+
+        def work():
+            try:
+                save_checkpoint(str(self.dir), step, host_tree, meta)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

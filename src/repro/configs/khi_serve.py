@@ -1,0 +1,29 @@
+"""khi-serve: the paper's own serving configuration — distributed KHI over a
+16-shard corpus (1M objects/shard, d=768, m=4 attrs, M=32) with batched
+RFANNS queries. Lowered via repro.core.sharded for the dry-run."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KHIServeConfig:
+    name: str = "khi-serve"
+    n_per_shard: int = 1_000_000
+    d: int = 768
+    m: int = 4
+    M: int = 32
+    height: int = 24
+    nodes_per_shard: int = 1 << 20
+    k: int = 10
+    ef: int = 128
+    c_e: int = 10
+    c_n: int = 32
+
+
+def config() -> KHIServeConfig:
+    return KHIServeConfig()
+
+
+def smoke_config() -> KHIServeConfig:
+    return KHIServeConfig(name="khi-serve-smoke", n_per_shard=2000, d=32,
+                          m=3, M=8, height=12, nodes_per_shard=4096, ef=32)

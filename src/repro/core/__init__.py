@@ -1,0 +1,12 @@
+"""KHI — the paper's contribution: skew-aware attribute-space partitioning
+tree + per-node filtered HNSW graphs + range-filtering greedy search."""
+
+from .khi import KHIConfig, KHIIndex  # noqa: F401
+from .query_ref import Predicate, brute_force, query  # noqa: F401
+from .engine import (  # noqa: F401
+    DeviceIndex,
+    SearchParams,
+    device_put_index,
+    make_search_fn,
+    search_batch,
+)

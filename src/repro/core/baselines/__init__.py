@@ -1,0 +1,2 @@
+from .irange import IRangeGraph  # noqa: F401
+from .simple import Prefiltering, Postfiltering  # noqa: F401

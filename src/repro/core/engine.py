@@ -1,0 +1,349 @@
+"""Jitted, batched KHI query engine — the TPU-native form of Algorithms 1-3.
+
+Everything is a fixed-shape array program (see DESIGN.md §2):
+
+  * RangeFilter's DFS        -> ``lax.while_loop`` over an explicit stack
+                                (depth <= tree height + 1 for DFS order);
+  * ReconsNbr's early-exit   -> gather all H*M neighbor ids at once, then an
+                                exclusive-cumsum prefix cap reproduces the
+                                sequential c_n budget *and* its partial
+                                visited-marking semantics exactly;
+  * the two priority queues  -> one distance-sorted pool of size ef with
+                                expanded flags (beam form; equivalent to
+                                Alg. 3 because R-hat never shrinks, so
+                                candidates worse than the ef-th best can
+                                never be expanded);
+  * visited set              -> dense per-query bool mask (n,).
+
+``search_batch`` vmaps the per-query program and jits the whole thing;
+distance evaluation is pluggable (pure jnp or the Pallas ``l2dist`` kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .khi import KHIIndex
+
+__all__ = ["DeviceIndex", "SearchParams", "device_put_index", "search_batch",
+           "make_search_fn"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceIndex:
+    """KHI flattened onto device arrays. A pytree — shard/replicate freely."""
+
+    vecs: jax.Array    # (n, d) float32
+    attrs: jax.Array   # (n, m) float32
+    nbrs: jax.Array    # (n, H, M) int32  (object-major for one-gather rows)
+    # tree
+    left: jax.Array    # (P,) int32
+    right: jax.Array   # (P,) int32
+    dim: jax.Array     # (P,) int32
+    bl: jax.Array      # (P,) int32 bitmask
+    lo: jax.Array      # (P, m) float32
+    hi: jax.Array      # (P, m) float32
+    start: jax.Array   # (P,) int32
+    count: jax.Array   # (P,) int32
+    order: jax.Array   # (n,) int32
+    root: jax.Array    # () int32
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return self.vecs.shape[0]
+
+    @property
+    def height(self) -> int:
+        return self.nbrs.shape[1]
+
+
+def device_put_index(index: KHIIndex, *, pad_nodes: Optional[int] = None,
+                     pad_n: Optional[int] = None,
+                     pad_height: Optional[int] = None,
+                     vec_dtype=None) -> DeviceIndex:
+    """Flatten a host KHIIndex into device arrays (optionally padded so that
+    multiple shards can be stacked into one leading-axis array).
+
+    ``vec_dtype=jnp.bfloat16`` stores corpus vectors in bf16 (distances still
+    accumulate in f32) — halves the dominant HBM term of the search engine
+    (§Perf iteration)."""
+    t = index.tree
+    n, H = index.n, index.height
+    P = t.num_nodes
+    nbrs = np.ascontiguousarray(np.transpose(index.nbrs, (1, 0, 2)))  # (n,H,M)
+
+    pn = pad_n or n
+    pP = pad_nodes or P
+    pH = pad_height or H
+
+    def padn(a, fill=0):
+        out = np.full((pn,) + a.shape[1:], fill, a.dtype)
+        out[:n] = a
+        return out
+
+    def padp(a, fill=0):
+        out = np.full((pP,) + a.shape[1:], fill, a.dtype)
+        out[:P] = a
+        return out
+
+    nb = np.full((pn, pH, nbrs.shape[2]), -1, np.int32)
+    nb[:n, :H] = nbrs
+    root = int(np.nonzero(t.parent < 0)[0][0])
+    vd = vec_dtype or jnp.float32
+    return DeviceIndex(
+        vecs=jnp.asarray(padn(index.vecs), dtype=vd),
+        attrs=jnp.asarray(padn(index.attrs, fill=np.float32(np.inf))),
+        nbrs=jnp.asarray(nb),
+        left=jnp.asarray(padp(t.left, -1)),
+        right=jnp.asarray(padp(t.right, -1)),
+        dim=jnp.asarray(padp(t.dim, -1)),
+        bl=jnp.asarray(padp(t.bl.astype(np.int32), 0)),
+        lo=jnp.asarray(padp(t.lo, np.float32(np.inf))),
+        hi=jnp.asarray(padp(t.hi, np.float32(-np.inf))),
+        start=jnp.asarray(padp(t.start)),
+        count=jnp.asarray(padp(t.count)),
+        order=jnp.asarray(padn(t.order)),
+        root=jnp.asarray(root, jnp.int32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Static search configuration (hashable; becomes part of the jit key)."""
+
+    k: int = 10
+    ef: int = 64
+    c_e: int = 10            # paper: k
+    c_n: int = 32            # paper: M
+    stack_cap: int = 64      # DFS stack depth bound (height + slack)
+    max_steps: int = 4096    # RangeFilter pop budget
+    scan_budget: int = 64    # entry-scan window per candidate node
+    max_hops: int = 0        # 0 => ef * 4 (generous; loop exits on its own)
+
+    def hops(self) -> int:
+        return self.max_hops or self.ef * 4
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1: RangeFilter
+# --------------------------------------------------------------------------
+
+def _range_filter(di: DeviceIndex, qlo: jax.Array, qhi: jax.Array,
+                  p: SearchParams) -> jax.Array:
+    """Returns entry-point object ids (c_e,), -1 padded."""
+    m = di.attrs.shape[1]
+    full = (1 << m) - 1
+    S = p.stack_cap
+
+    # D seeded with dims the root rectangle already covers.
+    root_cov = ((di.lo[di.root] >= qlo) & (di.hi[di.root] <= qhi))
+    D0 = jnp.sum(jnp.where(root_cov, 1 << jnp.arange(m), 0)).astype(jnp.int32)
+
+    def scan_entry(node):
+        s = di.start[node]
+        win = jax.lax.dynamic_slice(
+            jnp.pad(di.order, (0, p.scan_budget)), (s,), (p.scan_budget,))
+        in_node = jnp.arange(p.scan_budget) < di.count[node]
+        a = di.attrs[win]
+        ok = in_node & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+        idx = jnp.argmax(ok)
+        return jnp.where(ok.any(), win[idx], -1).astype(jnp.int32)
+
+    State = tuple  # (stack_node, stack_D, sp, entries, n_e, steps)
+    stack_node = jnp.full((S,), -1, jnp.int32).at[0].set(di.root)
+    stack_D = jnp.zeros((S,), jnp.int32).at[0].set(D0)
+    entries = jnp.full((p.c_e,), -1, jnp.int32)
+    state: State = (stack_node, stack_D, jnp.int32(1), entries,
+                    jnp.int32(0), jnp.int32(0))
+
+    def cond(st):
+        _, _, sp, _, n_e, steps = st
+        return (sp > 0) & (n_e < p.c_e) & (steps < p.max_steps)
+
+    def body(st):
+        stack_node, stack_D, sp, entries, n_e, steps = st
+        node = stack_node[sp - 1]
+        D = stack_D[sp - 1] | di.bl[node]
+        sp = sp - 1
+
+        is_full = D == full
+        is_leaf = di.left[node] < 0
+
+        # entry scan for covered nodes AND leaves (leaf fallback — see
+        # query_ref.range_filter for the rationale)
+        do_scan = is_full | is_leaf
+        e = jnp.where(do_scan, scan_entry(node), -1)
+        got = do_scan & (e >= 0)
+        entries = entries.at[jnp.where(got, n_e, p.c_e)].set(e, mode="drop")
+        n_e = n_e + got.astype(jnp.int32)
+
+        # children pushes (only when internal & not full)
+        dsp = di.dim[node]
+        cl, cr = di.left[node], di.right[node]
+        covered = ((D >> dsp) & 1) == 1
+
+        def child_push(pc):
+            lc = di.lo[pc, dsp]
+            rc = di.hi[pc, dsp]
+            disjoint = (lc > qhi[dsp]) | (rc < qlo[dsp])
+            contained = (lc >= qlo[dsp]) & (rc <= qhi[dsp])
+            newD = jnp.where(contained, D | (1 << dsp), D)
+            valid = ~disjoint
+            # covered split dim: always push with unchanged D
+            newD = jnp.where(covered, D, newD)
+            valid = jnp.where(covered, True, valid)
+            return valid & ~is_full & ~is_leaf, newD
+
+        vl, Dl = child_push(cl)
+        vr, Dr = child_push(cr)
+        # push left first (popped last) to match the reference DFS order
+        slot_l = jnp.where(vl, sp, S)
+        stack_node = stack_node.at[slot_l].set(cl, mode="drop")
+        stack_D = stack_D.at[slot_l].set(Dl, mode="drop")
+        sp = sp + vl.astype(jnp.int32)
+        slot_r = jnp.where(vr, sp, S)
+        stack_node = stack_node.at[slot_r].set(cr, mode="drop")
+        stack_D = stack_D.at[slot_r].set(Dr, mode="drop")
+        sp = sp + vr.astype(jnp.int32)
+        sp = jnp.minimum(sp, S)  # overflow clamp (documented bound)
+        return (stack_node, stack_D, sp, entries, n_e, steps + 1)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return state[3]
+
+
+# --------------------------------------------------------------------------
+# Algorithms 2+3: greedy search with on-the-fly neighbor reconstruction
+# --------------------------------------------------------------------------
+
+def _dist_jnp(q: jax.Array, cand: jax.Array) -> jax.Array:
+    # subtract/square in the CORPUS dtype (downcasting q — a (d,) vector),
+    # accumulating the reduction in f32 via the reduce's accumulator rather
+    # than a standalone convert: an explicit upcast of the gathered rows
+    # gets algebraically hoisted above the gather into a full-corpus f32
+    # convert (observed: +25% HBM term and +1.4 GiB peak in the bf16 §Perf
+    # iteration).
+    diff = cand - q.astype(cand.dtype)[None, :]
+    return jnp.sum(diff * diff, axis=-1, dtype=jnp.float32)
+
+
+def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
+               p: SearchParams, dist_fn) -> tuple[jax.Array, jax.Array, jax.Array]:
+    n = di.n
+    H, M = di.nbrs.shape[1], di.nbrs.shape[2]
+    HM = H * M
+    INF = jnp.float32(jnp.inf)
+
+    entries = _range_filter(di, qlo, qhi, p)
+    e_safe = jnp.maximum(entries, 0)
+    e_valid = entries >= 0
+    e_dist = jnp.where(e_valid, dist_fn(q, di.vecs[e_safe]), INF)
+
+    visited = jnp.zeros((n,), jnp.bool_)
+    visited = visited.at[jnp.where(e_valid, entries, n)].set(True, mode="drop")
+
+    # pool: ids/dists/expanded, ascending by dist; physical size ef + c_n
+    pool = p.ef + p.c_n
+    ids0 = jnp.full((pool,), -1, jnp.int32).at[: p.c_e].set(entries)
+    d0 = jnp.full((pool,), INF).at[: p.c_e].set(e_dist)
+    exp0 = jnp.ones((pool,), jnp.bool_).at[: p.c_e].set(~e_valid)
+    srt = jnp.argsort(d0)
+    ids0, d0, exp0 = ids0[srt], d0[srt], exp0[srt]
+
+    def cond(st):
+        ids, dists, expanded, visited, hops = st
+        frontier = ~expanded[: p.ef] & jnp.isfinite(dists[: p.ef])
+        return frontier.any() & (hops < p.hops())
+
+    def body(st):
+        ids, dists, expanded, visited, hops = st
+        u_slot = jnp.argmin(jnp.where(expanded[: p.ef], INF, dists[: p.ef]))
+        u = ids[u_slot]
+        expanded = expanded.at[u_slot].set(True)
+
+        # -------- ReconsNbr (Alg. 2), vectorized with exact budget semantics
+        rows = di.nbrs[u]                       # (H, M)
+        nid = rows.reshape(HM)
+        valid = nid >= 0
+        nid_safe = jnp.where(valid, nid, 0)
+        # intra-scan dedup: the sequential scan marks-then-skips, so only the
+        # first occurrence of an id (in level order) counts. Stable argsort
+        # groups equal ids keeping original order; mark group heads.
+        sidx = jnp.argsort(nid)
+        snid = nid[sidx]
+        head = jnp.concatenate([jnp.array([True]), snid[1:] != snid[:-1]])
+        is_first = jnp.zeros((HM,), jnp.bool_).at[sidx].set(head)
+        fresh = valid & is_first & ~visited[nid_safe]
+        a = di.attrs[nid_safe]
+        in_range = valid & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+        append = fresh & in_range
+        napp_excl = jnp.cumsum(append) - append.astype(jnp.int32)
+        scanned = napp_excl < p.c_n             # loop alive when reaching j
+        mark = fresh & scanned
+        visited = visited.at[jnp.where(mark, nid, n)].set(True, mode="drop")
+        keep = append & scanned
+        # compact kept ids into c_n slots (slot = #appends before j)
+        slots = jnp.where(keep, napp_excl, p.c_n)
+        buf = jnp.full((p.c_n,), -1, jnp.int32).at[slots].set(nid, mode="drop")
+
+        bsafe = jnp.maximum(buf, 0)
+        bvalid = buf >= 0
+        bd = jnp.where(bvalid, dist_fn(q, di.vecs[bsafe]), INF)
+
+        # -------- pool merge (Alg. 3 lines 10-13)
+        ids = ids.at[p.ef :].set(buf)
+        dists = dists.at[p.ef :].set(bd)
+        expanded = expanded.at[p.ef :].set(~bvalid)
+        srt = jnp.argsort(dists)
+        ids, dists, expanded = ids[srt], dists[srt], expanded[srt]
+        ids = ids.at[p.ef :].set(-1)
+        dists = dists.at[p.ef :].set(INF)
+        expanded = expanded.at[p.ef :].set(True)
+        return ids, dists, expanded, visited, hops + 1
+
+    ids, dists, expanded, visited, hops = jax.lax.while_loop(
+        cond, body, (ids0, d0, exp0, visited, jnp.int32(0)))
+    return ids[: p.k], dists[: p.k], hops
+
+
+def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False):
+    """Builds jit(search)(di, queries (B,d), qlo (B,m), qhi (B,m)) ->
+    (ids (B,k) int32, dists (B,k) f32, hops (B,) int32)."""
+    dist_fn = dist_fn or _dist_jnp
+
+    @functools.partial(jax.jit, static_argnames=())
+    def search(di: DeviceIndex, queries, qlo, qhi):
+        fn = functools.partial(_query_one, p=p, dist_fn=dist_fn)
+        return jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(queries, qlo, qhi)
+
+    return search
+
+
+def search_batch(index_or_di, queries: np.ndarray, preds, params: SearchParams,
+                 *, dist_fn=None):
+    """Convenience host API: accepts a host KHIIndex or a DeviceIndex plus a
+    list of ``Predicate``s; returns numpy (ids, dists, hops)."""
+    di = index_or_di
+    if isinstance(di, KHIIndex):
+        di = device_put_index(di)
+    qlo = np.stack([pr.lo for pr in preds]).astype(np.float32)
+    qhi = np.stack([pr.hi for pr in preds]).astype(np.float32)
+    fn = make_search_fn(params, dist_fn=dist_fn)
+    ids, dists, hops = fn(di, jnp.asarray(queries), jnp.asarray(qlo),
+                          jnp.asarray(qhi))
+    return np.asarray(ids), np.asarray(dists), np.asarray(hops)

@@ -1,0 +1,140 @@
+"""KHI index container: partitioning tree + per-level filtered HNSW graphs.
+
+``KHIIndex.build`` runs Algorithm 4 (tree) then Algorithm 5 (graphs) and
+flattens everything into dense arrays consumable both by the numpy reference
+query engine (`core.query_ref`) and the jitted TPU engine (`core.engine`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import hnsw
+from .tree import PartitionTree, build_tree
+
+__all__ = ["KHIConfig", "KHIIndex"]
+
+
+@dataclasses.dataclass
+class KHIConfig:
+    """Build-time parameters (defaults follow the paper)."""
+
+    M: int = 32                 # max degree of every node-level graph
+    ef_b: Optional[int] = None  # build exploration factor (paper: = M)
+    tau: float = 3.0            # balance threshold (> 1)
+    leaf_capacity: int = 2      # c_l
+    merge_chunk: int = 64       # intra-node parallelism analog; 1 = sequential
+    symmetric_reverse: bool = False  # beyond-paper Alg.5 variant
+    builder: str = "incremental"     # "incremental" (paper) | "bulk" (TPU-native)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass
+class KHIIndex:
+    vecs: np.ndarray     # (n, d) float32
+    attrs: np.ndarray    # (n, m) float32
+    tree: PartitionTree
+    nbrs: np.ndarray     # (H, n, M) int32, -1 padded
+    config: KHIConfig
+    build_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        vecs: np.ndarray,
+        attrs: np.ndarray,
+        config: Optional[KHIConfig] = None,
+        *,
+        verbose: bool = False,
+    ) -> "KHIIndex":
+        config = config or KHIConfig()
+        vecs = np.ascontiguousarray(vecs, dtype=np.float32)
+        attrs = np.ascontiguousarray(attrs, dtype=np.float32)
+        if vecs.shape[0] != attrs.shape[0]:
+            raise ValueError("vecs/attrs length mismatch")
+        t0 = time.perf_counter()
+        tree = build_tree(attrs, tau=config.tau, leaf_capacity=config.leaf_capacity)
+        if config.builder == "bulk":
+            nbrs = hnsw.build_graphs_bulk(tree, vecs, M=config.M,
+                                          ef_b=config.ef_b, verbose=verbose)
+        elif config.builder == "incremental":
+            nbrs = hnsw.build_graphs(
+                tree, vecs, M=config.M, ef_b=config.ef_b,
+                merge_chunk=config.merge_chunk,
+                symmetric_reverse=config.symmetric_reverse, verbose=verbose)
+        else:
+            raise ValueError(f"unknown builder {config.builder!r}")
+        dt = time.perf_counter() - t0
+        return cls(vecs=vecs, attrs=attrs, tree=tree, nbrs=nbrs,
+                   config=config, build_seconds=dt)
+
+    # ------------------------------------------------------------- properties
+    @property
+    def n(self) -> int:
+        return int(self.vecs.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.vecs.shape[1])
+
+    @property
+    def m(self) -> int:
+        return int(self.attrs.shape[1])
+
+    @property
+    def height(self) -> int:
+        return int(self.nbrs.shape[0])
+
+    def graph_size_bytes(self) -> int:
+        """Index size excluding raw vectors (paper Table 3 convention counts
+        the full artifact; ``total_size_bytes`` adds vectors/attrs)."""
+        tree_bytes = sum(a.nbytes for a in (
+            self.tree.left, self.tree.right, self.tree.parent, self.tree.dim,
+            self.tree.split, self.tree.bl, self.tree.level, self.tree.lo,
+            self.tree.hi, self.tree.order, self.tree.start, self.tree.count,
+            self.tree.path))
+        # -1 padding compresses away in practice; count occupied slots + tree
+        occupied = int((self.nbrs >= 0).sum()) * 4
+        return occupied + tree_bytes
+
+    def total_size_bytes(self) -> int:
+        return self.graph_size_bytes() + self.vecs.nbytes + self.attrs.nbytes
+
+    # ------------------------------------------------------------------ io
+    def save(self, path: str) -> None:
+        t = self.tree
+        np.savez_compressed(
+            path,
+            vecs=self.vecs, attrs=self.attrs, nbrs=self.nbrs,
+            left=t.left, right=t.right, parent=t.parent, dim=t.dim,
+            split=t.split, bl=t.bl, level=t.level, lo=t.lo, hi=t.hi,
+            order=t.order, start=t.start, count=t.count, path=t.path,
+            meta=np.frombuffer(json.dumps({
+                "config": dataclasses.asdict(self.config),
+                "tau": t.tau, "leaf_capacity": t.leaf_capacity, "m": t.m,
+                "build_seconds": self.build_seconds,
+            }).encode(), dtype=np.uint8),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "KHIIndex":
+        z = np.load(path)
+        meta = json.loads(bytes(z["meta"]).decode())
+        tree = PartitionTree(
+            left=z["left"], right=z["right"], parent=z["parent"], dim=z["dim"],
+            split=z["split"], bl=z["bl"], level=z["level"], lo=z["lo"],
+            hi=z["hi"], order=z["order"], start=z["start"], count=z["count"],
+            path=z["path"], tau=meta["tau"],
+            leaf_capacity=meta["leaf_capacity"], m=meta["m"])
+        return cls(vecs=z["vecs"], attrs=z["attrs"], tree=tree, nbrs=z["nbrs"],
+                   config=KHIConfig(**meta["config"]),
+                   build_seconds=meta["build_seconds"])

@@ -1,0 +1,220 @@
+"""Numpy reference implementation of the KHI query path (Algorithms 1-3).
+
+This is the line-by-line faithful oracle: explicit DFS stack, heapq priority
+queues, sequential early-exit neighbor reconstruction. The jitted engine in
+``core.engine`` is validated against it. Distances are squared L2 (monotone
+with L2, as in standard HNSW implementations).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .khi import KHIIndex
+
+__all__ = ["Predicate", "range_filter", "recons_nbr", "query", "brute_force"]
+
+
+class Predicate:
+    """Range predicate B: per-attribute [lo, hi], ±inf when unconstrained."""
+
+    def __init__(self, lo: Sequence[float], hi: Sequence[float]):
+        self.lo = np.asarray(lo, dtype=np.float32)
+        self.hi = np.asarray(hi, dtype=np.float32)
+        assert self.lo.shape == self.hi.shape
+
+    @classmethod
+    def from_bounds(cls, m: int, bounds: dict[int, tuple[float, float]]) -> "Predicate":
+        lo = np.full(m, -np.inf, dtype=np.float32)
+        hi = np.full(m, np.inf, dtype=np.float32)
+        for i, (l, r) in bounds.items():
+            lo[i], hi[i] = l, r
+        return cls(lo, hi)
+
+    def matches(self, attrs: np.ndarray) -> np.ndarray:
+        """attrs (…, m) -> bool (…)."""
+        return ((attrs >= self.lo) & (attrs <= self.hi)).all(axis=-1)
+
+    @property
+    def cardinality(self) -> int:
+        return int((np.isfinite(self.lo) | np.isfinite(self.hi)).sum())
+
+
+def brute_force(index_vecs: np.ndarray, attrs: np.ndarray, q: np.ndarray,
+                pred: Predicate, k: int) -> np.ndarray:
+    """Exact ground truth over O_B (the paper's Prefiltering baseline)."""
+    mask = pred.matches(attrs)
+    ids = np.nonzero(mask)[0]
+    if len(ids) == 0:
+        return ids.astype(np.int64)
+    diff = index_vecs[ids] - q
+    d2 = np.einsum("nd,nd->n", diff, diff)
+    k = min(k, len(ids))
+    top = np.argpartition(d2, kth=k - 1)[:k]
+    return ids[top[np.argsort(d2[top], kind="stable")]].astype(np.int64)
+
+
+def range_filter(index: KHIIndex, pred: Predicate, c_e: int,
+                 *, scan_budget: Optional[int] = None,
+                 faithful_budget: bool = False) -> List[int]:
+    """Algorithm 1 (RangeFilter): collect <= c_e entry points in O_B.
+
+    Deviation (DESIGN.md §6): the pseudocode stops the DFS after c_e
+    *candidate nodes*; when dimensions were blacklisted (BL ⊆ D) a candidate
+    node's rectangle need not be contained in B, so its scan can come up
+    empty and the literal algorithm may return zero entry points even though
+    O_B is large (observed on skewed discrete attributes). We therefore
+    budget *entries found* — scan each candidate as soon as it is collected
+    and keep exploring until c_e entries exist or the stack empties.
+    ``faithful_budget=True`` restores the literal pseudocode.
+    """
+    t = index.tree
+    m = index.m
+    full = (1 << m) - 1
+    qlo, qhi = pred.lo, pred.hi
+
+    root = int(np.nonzero(t.parent < 0)[0][0])
+    # D's definition (paper §4.2) is "dims i with pi_i(R(p)) ⊆ b_i, plus
+    # BL(p)"; the stack only maintains it incrementally on split dims, so
+    # seed the root with its already-covered dims.
+    D0 = 0
+    for i in range(m):
+        if t.lo[root, i] >= qlo[i] and t.hi[root, i] <= qhi[i]:
+            D0 |= 1 << i
+
+    def scan_entry(p: int) -> Optional[int]:
+        objs = t.node_objects(p)
+        if scan_budget is not None:
+            objs = objs[:scan_budget]
+        ok = pred.matches(index.attrs[objs])
+        hit = np.nonzero(ok)[0]
+        return int(objs[hit[0]]) if len(hit) else None
+
+    entries: List[int] = []
+    n_cands = 0
+    stack: List[Tuple[int, int]] = [(root, D0)]
+    while stack:
+        if faithful_budget:
+            if n_cands >= c_e:
+                break
+        elif len(entries) >= c_e:
+            break
+        p, D = stack.pop()
+        D |= int(t.bl[p])
+        if D == full:
+            n_cands += 1
+            e = scan_entry(p)
+            if e is not None:
+                entries.append(e)
+            continue
+        if t.is_leaf(p):
+            # Deviation (DESIGN.md §6): the pseudocode skips leaves with
+            # |D| < m, which starves entry selection when leaf cells are
+            # wider than the query window (small corpora / per-shard
+            # indexes). Leaves hold <= c_l objects, so an exact predicate
+            # scan is O(c_l) and restores the guarantee that entries exist
+            # whenever O_B intersects an explored branch.
+            e = scan_entry(p)
+            if e is not None:
+                entries.append(e)
+            continue
+        dsp = int(t.dim[p])
+        children = (int(t.left[p]), int(t.right[p]))
+        if (D >> dsp) & 1:
+            for pc in children:
+                stack.append((pc, D))
+            continue
+        for pc in children:
+            lc, rc = float(t.lo[pc, dsp]), float(t.hi[pc, dsp])
+            if lc > qhi[dsp] or rc < qlo[dsp]:
+                continue  # disjoint
+            if lc >= qlo[dsp] and rc <= qhi[dsp]:
+                stack.append((pc, D | (1 << dsp)))
+            else:
+                stack.append((pc, D))
+    return entries
+
+
+def recons_nbr(index: KHIIndex, o: int, pred: Predicate, c_n: int,
+               visited: np.ndarray) -> List[int]:
+    """Algorithm 2 (ReconsNbr): root->leaf aggregation of in-range neighbors.
+
+    Marks every *scanned* neighbor visited (in or out of range), stopping as
+    soon as c_n in-range fresh neighbors have been appended — exactly the
+    sequential early-exit semantics of the pseudocode.
+    """
+    out: List[int] = []
+    path = index.tree.path[o]
+    for lvl in range(index.height):
+        if path[lvl] < 0:
+            break
+        for v in index.nbrs[lvl, o]:
+            v = int(v)
+            if v < 0:
+                continue
+            if visited[v]:
+                continue
+            visited[v] = True
+            if pred.matches(index.attrs[v]):
+                out.append(v)
+                if len(out) == c_n:
+                    return out
+    return out
+
+
+def query(
+    index: KHIIndex,
+    q: np.ndarray,
+    pred: Predicate,
+    k: int,
+    *,
+    ef: int = 64,
+    c_e: Optional[int] = None,
+    c_n: Optional[int] = None,
+    scan_budget: Optional[int] = None,
+    return_stats: bool = False,
+):
+    """Algorithm 3 (Query): greedy best-first search over O_B."""
+    c_e = c_e if c_e is not None else k         # paper: c_e = k
+    c_n = c_n if c_n is not None else index.config.M  # paper: c_n = M
+    visited = np.zeros(index.n, dtype=bool)
+    q = np.asarray(q, dtype=np.float32)
+
+    entries = range_filter(index, pred, c_e, scan_budget=scan_budget)
+    # result queue: bounded max-heap of size ef (python: store negative dist)
+    result: List[Tuple[float, int]] = []
+    candq: List[Tuple[float, int]] = []
+    for o in entries:
+        dv = index.vecs[o] - q
+        dist = float(dv @ dv)
+        heapq.heappush(candq, (dist, o))
+        heapq.heappush(result, (-dist, o))
+        visited[o] = True
+    while len(result) > ef:
+        heapq.heappop(result)
+
+    hops = 0
+    threshold_trace: List[float] = []
+    while candq and (len(result) < ef or candq[0][0] <= -result[0][0]):
+        dist_u, u = heapq.heappop(candq)
+        hops += 1
+        for v in recons_nbr(index, u, pred, c_n, visited):
+            dv = index.vecs[v] - q
+            dist = float(dv @ dv)
+            heapq.heappush(candq, (dist, v))
+            heapq.heappush(result, (-dist, v))
+            if len(result) > ef:
+                heapq.heappop(result)
+        if return_stats:
+            threshold_trace.append(float(np.sqrt(-result[0][0])) if result else np.inf)
+
+    items = sorted([(-nd, o) for nd, o in result])[:k]
+    ids = np.asarray([o for _, o in items], dtype=np.int64)
+    if return_stats:
+        return ids, {"hops": hops, "entries": len(entries),
+                     "threshold_trace": threshold_trace,
+                     "visited": int(visited.sum())}
+    return ids

@@ -1,0 +1,181 @@
+"""Corpus-sharded distributed KHI search (DESIGN.md §2 "Distribution").
+
+Industry-standard fan-out design (Milvus/Vespa): the `model` mesh axis holds
+S independent KHI shards, each built over n/S objects; queries are replicated
+across `model`, data-parallel across (`pod` x) `data`. Each shard answers
+top-k locally; one small all_gather + merge-k produces the global answer —
+the only collective is S*k*(id+dist) = O(S k) bytes per query.
+
+Per-shard index arrays are padded to common shapes and stacked on a leading
+shard axis, so the whole sharded index is ONE pytree whose leaves are sharded
+on axis 0 over `model` — `jax.jit` in/out shardings handle the rest.
+
+Fault tolerance: every shard is an independent artifact ((shard_id, epoch)
+keyed .npz). A lost host reloads only its shard; `elastic_reshard` (see
+repro.distributed.elastic) re-partitions object ids and rebuilds only moved
+shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import DeviceIndex, SearchParams, _query_one, _dist_jnp, device_put_index
+from .khi import KHIConfig, KHIIndex
+
+__all__ = ["ShardedKHI", "build_sharded", "make_sharded_search_fn",
+           "sharded_input_specs", "search_sharded_emulated"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedKHI:
+    """Stacked per-shard DeviceIndex (leading axis = shard) + global offsets."""
+
+    di: DeviceIndex          # every leaf has leading dim S
+    offsets: jax.Array       # (S,) int32 global-id base per shard
+
+    def tree_flatten(self):
+        return (self.di, self.offsets), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_shards(self) -> int:
+        return self.offsets.shape[0]
+
+
+def build_sharded(vecs: np.ndarray, attrs: np.ndarray, n_shards: int,
+                  config: Optional[KHIConfig] = None) -> ShardedKHI:
+    """Round-robin partition + per-shard build + pad&stack."""
+    config = config or KHIConfig()
+    n = vecs.shape[0]
+    shard_of = np.arange(n) % n_shards
+    locals_, offsets, id_maps = [], [], []
+    for s in range(n_shards):
+        ids = np.nonzero(shard_of == s)[0]
+        id_maps.append(ids)
+        idx = KHIIndex.build(vecs[ids], attrs[ids], config)
+        locals_.append(idx)
+    max_n = max(ix.n for ix in locals_)
+    max_p = max(ix.tree.num_nodes for ix in locals_)
+    max_h = max(ix.height for ix in locals_)
+    dis = [device_put_index(ix, pad_n=max_n, pad_nodes=max_p, pad_height=max_h)
+           for ix in locals_]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *dis)
+    # global-id recovery: object j of shard s has global id j * S + s under
+    # round-robin — encode as offsets for the affine map below.
+    offsets = jnp.arange(n_shards, dtype=jnp.int32)
+    return ShardedKHI(di=stacked, offsets=offsets)
+
+
+def _local_to_global(local_ids: jax.Array, shard: jax.Array,
+                     n_shards: int) -> jax.Array:
+    """Round-robin inverse: global = local * S + shard (keeps -1 invalid)."""
+    return jnp.where(local_ids >= 0, local_ids * n_shards + shard, -1)
+
+
+def _shard_search(di: DeviceIndex, shard_id: jax.Array, n_shards: int,
+                  queries, qlo, qhi, p: SearchParams, dist_fn):
+    fn = functools.partial(_query_one, p=p, dist_fn=dist_fn)
+    ids, dists, hops = jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(
+        queries, qlo, qhi)
+    gids = _local_to_global(ids, shard_id, n_shards)
+    dists = jnp.where(gids >= 0, dists, jnp.inf)
+    return gids, dists, hops
+
+
+def _merge_topk(gids, dists, k):
+    """gids/dists (S, B, k) -> global (B, k) by merge-k."""
+    S, B, kk = gids.shape
+    flat_i = jnp.transpose(gids, (1, 0, 2)).reshape(B, S * kk)
+    flat_d = jnp.transpose(dists, (1, 0, 2)).reshape(B, S * kk)
+    neg, sel = jax.lax.top_k(-flat_d, k)
+    return jnp.take_along_axis(flat_i, sel, axis=1), -neg
+
+
+def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
+                           model_axis: str = "model",
+                           data_axes: Sequence[str] = ("data",),
+                           dist_fn=None):
+    """Returns jit(search)(skhi, queries, qlo, qhi) -> (ids, dists) with the
+    production sharding: index on `model`, batch on data axes, one all_gather
+    on `model` for the merge."""
+    dist_fn = dist_fn or _dist_jnp
+    n_shards = mesh.shape[model_axis]
+    dspec = P(tuple(data_axes))
+
+    from jax.experimental.shard_map import shard_map
+
+    def local(di_blk, off_blk, queries, qlo, qhi):
+        di = jax.tree.map(lambda x: x[0], di_blk)      # squeeze shard axis
+        shard_id = off_blk[0]
+        gids, dists, hops = _shard_search(di, shard_id, n_shards,
+                                          queries, qlo, qhi, params, dist_fn)
+        allg = jax.lax.all_gather(gids, model_axis)    # (S, B, k)
+        alld = jax.lax.all_gather(dists, model_axis)
+        mi, md = _merge_topk(allg, alld, params.k)
+        return mi, md
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(model_axis), P(model_axis), dspec, dspec, dspec),
+        out_specs=(dspec, dspec),
+        check_rep=False,
+    )
+    return jax.jit(lambda skhi, q, qlo, qhi: fn(skhi.di, skhi.offsets, q, qlo, qhi))
+
+
+def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
+                            params: SearchParams, *, dist_fn=None):
+    """Single-device semantic equivalent of the shard_map program (vmap over
+    the shard axis instead of devices) — used by tests on this 1-CPU box."""
+    dist_fn = dist_fn or _dist_jnp
+    n_shards = skhi.num_shards
+
+    @jax.jit
+    def run(skhi, queries, qlo, qhi):
+        def per_shard(di, off):
+            return _shard_search(di, off, n_shards, queries, qlo, qhi,
+                                 params, dist_fn)
+        gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
+        mi, md = _merge_topk(gids, dists, params.k)
+        return mi, md, hops
+
+    return run(skhi, jnp.asarray(queries), jnp.asarray(qlo), jnp.asarray(qhi))
+
+
+def sharded_input_specs(*, n_per_shard: int, d: int, m: int, height: int,
+                        nodes_per_shard: int, M: int, n_shards: int,
+                        batch: int, vec_dtype=None):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    f32, i32 = jnp.float32, jnp.int32
+    vd = vec_dtype or f32
+
+    def sd(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    S, n, Pn = n_shards, n_per_shard, nodes_per_shard
+    di = DeviceIndex(
+        vecs=sd((S, n, d), vd), attrs=sd((S, n, m), f32),
+        nbrs=sd((S, n, height, M), i32),
+        left=sd((S, Pn), i32), right=sd((S, Pn), i32), dim=sd((S, Pn), i32),
+        bl=sd((S, Pn), i32), lo=sd((S, Pn, m), f32), hi=sd((S, Pn, m), f32),
+        start=sd((S, Pn), i32), count=sd((S, Pn), i32), order=sd((S, n), i32),
+        root=sd((S,), i32),
+    )
+    skhi = ShardedKHI(di=di, offsets=sd((S,), i32))
+    return skhi, {
+        "queries": sd((batch, d), f32),
+        "qlo": sd((batch, m), f32),
+        "qhi": sd((batch, m), f32),
+    }

@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    DatasetSpec,
+    make_dataset,
+    make_queries,
+    DATASET_PRESETS,
+)

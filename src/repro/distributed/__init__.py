@@ -1,0 +1,5 @@
+from .elastic import (  # noqa: F401
+    elastic_reshard,
+    reshard_checkpoint,
+    shard_assignments,
+)

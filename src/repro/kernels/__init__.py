@@ -1,0 +1,1 @@
+from .ops import gather_l2, l2dist, use_pallas_default  # noqa: F401

@@ -1,0 +1,53 @@
+"""Fused gather + squared-L2 Pallas kernel (scalar-prefetch DMA gather).
+
+The KHI engine's expansion step gathers candidate rows ``corpus[idx]`` from
+HBM and immediately reduces them against the query — on TPU the idiomatic
+form is a *scalar-prefetched* index stream driving the input BlockSpec's
+index_map, so each grid step DMAs exactly the needed corpus row into VMEM
+(no materialized (B, C, d) gather in HBM). This removes the intermediate
+HBM round-trip: bytes move HBM->VMEM once instead of HBM->HBM->VMEM.
+
+The row-per-step grid here is the semantics-bearing validation form; the
+production variant coalesces TC rows per DMA descriptor (same index_map
+mechanism, wider blocks). Distances are accumulated in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_l2_kernel", "gather_l2_raw"]
+
+
+def gather_l2_kernel(idx_ref, corpus_ref, q_ref, o_ref):
+    """Grid (B, C): step (i, j) holds corpus row idx[i, j] and query row i."""
+    j = pl.program_id(1)
+    d = q_ref[...].astype(jnp.float32) - corpus_ref[...].astype(jnp.float32)
+    val = jnp.sum(d * d)
+    o_ref[:, pl.dslice(j, 1)] = val[None, None]
+
+
+def gather_l2_raw(idx: jax.Array, corpus: jax.Array, q: jax.Array,
+                  *, interpret: bool = False) -> jax.Array:
+    """idx (B, C) int32, corpus (N, d), q (B, d) -> (B, C) f32."""
+    B, C = idx.shape
+    N, D = corpus.shape
+    return pl.pallas_call(
+        gather_l2_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, C),
+            in_specs=[
+                # corpus row selected by the prefetched index stream
+                pl.BlockSpec((1, D), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+                # query row for this i (re-used across all j)
+                pl.BlockSpec((1, D), lambda i, j, idx_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, C), lambda i, j, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(idx, corpus, q)

@@ -1,0 +1,91 @@
+"""Jit'd public wrappers: padding, dtype handling, interpret dispatch.
+
+On this CPU container the kernels execute through ``interpret=True`` (the
+kernel body runs step-by-step in Python/XLA-CPU); on a real TPU the same
+calls lower to Mosaic. ``interpret=None`` auto-selects by backend.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import gather_l2 as _gather
+from . import l2dist as _l2
+from . import ref as _ref
+
+__all__ = ["l2dist", "gather_l2", "use_pallas_default"]
+
+
+def use_pallas_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tb", "tn", "td"))
+def _l2dist_qn(q, c, interpret: bool, tb: int, tn: int, td: int):
+    B, N = q.shape[0], c.shape[0]
+    qp = _pad_to(_pad_to(q, 0, tb), 1, td)
+    cp = _pad_to(_pad_to(c, 0, tn), 1, td)
+    out = _l2.l2dist_qn_raw(qp, cp, tb=tb, tn=tn, td=td, interpret=interpret)
+    return out[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tb", "tc", "td"))
+def _l2dist_qc(q, c, interpret: bool, tb: int, tc: int, td: int):
+    B, C = q.shape[0], c.shape[1]
+    qp = _pad_to(_pad_to(q, 0, tb), 1, td)
+    cp = _pad_to(_pad_to(_pad_to(c, 0, tb), 1, tc), 2, td)
+    out = _l2.l2dist_qc_raw(qp, cp, tb=tb, tc=tc, td=td, interpret=interpret)
+    return out[:B, :C]
+
+
+def l2dist(q: jax.Array, c: jax.Array, *, interpret: Optional[bool] = None,
+           tb: int = 8, tn: int = 128, td: int = 128) -> jax.Array:
+    """Squared L2 distances.
+
+    q (B, d) with c (N, d)    -> (B, N)   [all-pairs]
+    q (B, d) with c (B, C, d) -> (B, C)   [per-query candidates]
+    """
+    interp = _auto_interpret(interpret)
+    if c.ndim == 2:
+        return _l2dist_qn(q, c, interp, tb, tn, td)
+    if c.ndim == 3:
+        return _l2dist_qc(q, c, interp, tb, tn, td)
+    raise ValueError(f"bad candidate rank {c.ndim}")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_l2(idx, corpus, q, interpret: bool):
+    return _gather.gather_l2_raw(idx, corpus, q, interpret=interpret)
+
+
+def gather_l2(idx: jax.Array, corpus: jax.Array, q: jax.Array,
+              *, interpret: Optional[bool] = None) -> jax.Array:
+    """Fused gather+distance: idx (B, C) into corpus (N, d), q (B, d) ->
+    (B, C). Indices must be in-range (clamp upstream)."""
+    return _gather_l2(idx, corpus, q, _auto_interpret(interpret))
+
+
+# re-export oracles for convenience
+l2dist_qn_ref = _ref.l2dist_qn_ref
+l2dist_qc_ref = _ref.l2dist_qc_ref
+gather_l2_ref = _ref.gather_l2_ref

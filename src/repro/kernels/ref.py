@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref"]
+
+
+def l2dist_qn_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared L2: q (B, d), c (N, d) -> (B, N), f32."""
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    qs = jnp.sum(q * q, axis=-1, keepdims=True)          # (B, 1)
+    cs = jnp.sum(c * c, axis=-1)[None, :]                # (1, N)
+    return qs + cs - 2.0 * (q @ c.T)
+
+
+def l2dist_qc_ref(q: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """Per-query candidates: q (B, d), cand (B, C, d) -> (B, C), f32."""
+    q = q.astype(jnp.float32)
+    cand = cand.astype(jnp.float32)
+    diff = cand - q[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def gather_l2_ref(idx: jnp.ndarray, corpus: jnp.ndarray,
+                  q: jnp.ndarray) -> jnp.ndarray:
+    """Fused gather+distance: idx (B, C) int32 rows of corpus (N, d),
+    q (B, d) -> (B, C), f32."""
+    rows = corpus[idx]                                   # (B, C, d)
+    return l2dist_qc_ref(q, rows)

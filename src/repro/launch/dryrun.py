@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, record memory/cost/collective analysis (EXPERIMENTS.md §Dry-run).
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and only this launcher should see 512 fake host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --cell train_4k --mesh single
+Results cache to experiments/dryrun/<mesh>/<arch>__<cell>.json; pass
+--force to recompute.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
+from repro.launch.specs import CELLS, build_lowering, cell_supported  # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, cell: str, mesh_name: str, *, force: bool = False,
+             n_micro=None, tag: str = "", variant: str = "") -> dict:
+    out_dir = OUT_DIR / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_file = out_dir / f"{arch}__{cell}{suffix}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = int(len(mesh.devices.reshape(-1)))
+    rec = dict(arch=arch, cell=cell, mesh=mesh_name, n_chips=n_chips, tag=tag)
+    t0 = time.perf_counter()
+    try:
+        if arch != "khi-serve":
+            ok, why = cell_supported(get_config(arch), cell)
+            if not ok:
+                rec.update(status="skipped", reason=why)
+                out_file.write_text(json.dumps(rec, indent=1))
+                return rec
+        lower_fn, meta = build_lowering(arch, cell, mesh, n_micro=n_micro,
+                                        variant=variant)
+        rec.update(meta)
+        lowered = lower_fn()
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        }
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        mf = RL.model_flops(rec.get("kind", ""), rec.get("n_params", 0),
+                            rec.get("n_active", 0), rec.get("batch", 0),
+                            rec.get("seq", 0))
+        # trip-count-corrected costs (raw cost_analysis counts each while
+        # body once — see hlo_cost module docstring)
+        from repro.launch import hlo_cost as HC
+        hc = HC.analyze(hlo)
+        # the KHI engine's search loop is data-dependent (no known_trip_
+        # count), so scale its per-hop body by the configured hop bound —
+        # a documented worst-case multiplier (one-time entry/seed costs are
+        # conservatively scaled too).
+        scale = 1.0
+        if arch == "khi-serve" and hc.max_trip_product <= 2.0:
+            scale = float(meta.get("max_hops", meta.get("ef", 1)))
+            rec["khi_hops_bound_scale"] = scale
+        rl = RL.terms_from(flops=hc.flops * scale,
+                           bytes_accessed=hc.bytes_accessed * scale,
+                           coll_bytes=hc.collective_bytes * scale,
+                           n_chips=n_chips,
+                           model_flops_global=mf)
+        rec["roofline"] = rl.to_dict()
+        rec["collectives"] = {**hc.coll_by_kind,
+                              "total": hc.collective_bytes,
+                              "max_trip_product": hc.max_trip_product}
+        rec["xla_cost_raw"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "uncorrected: while bodies counted once",
+        }
+        rec["status"] = "ok"
+        print(f"[dryrun] OK  {mesh_name:6s} {arch:24s} {cell:12s} "
+              f"compile={rec['compile_s']:.0f}s "
+              f"dom={rl.dominant} bound={rl.bound_s*1e3:.2f}ms "
+              f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB",
+              flush=True)
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] ERR {mesh_name:6s} {arch:24s} {cell:12s} {e}",
+              flush=True)
+    out_file.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (or 'khi-serve')")
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every supported cell on both meshes")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--tag", default="", help="variant tag for perf runs")
+    ap.add_argument("--variant", default="", help="ep<N>|bf16vec|nofsdp")
+    args = ap.parse_args()
+
+    if args.all:
+        for mesh_name in ("single", "multi"):
+            for arch in ARCH_IDS + ["khi-serve"]:
+                cells = (["serve_b256"] if arch == "khi-serve"
+                         else list(CELLS))
+                for cell in cells:
+                    run_cell(arch, cell, mesh_name, force=args.force,
+                             tag=args.tag)
+        return
+    if not args.arch or not args.cell:
+        ap.error("--arch/--cell required unless --all")
+    run_cell(args.arch, args.cell, args.mesh, force=args.force,
+             n_micro=args.n_micro, tag=args.tag or args.variant,
+             variant=args.variant)
+
+
+if __name__ == "__main__":
+    main()

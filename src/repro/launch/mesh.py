@@ -1,0 +1,45 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axis_sizes", "sharding_rules"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — the "
+            "dry-run launcher must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    dev_array = np.asarray(devs[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def sharding_rules(mesh) -> dict:
+    """Logical-axis -> mesh-axis rules (models/sharding.py consumes)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return {
+        "batch": batch_axes,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ffn": "model",
+        "seq_kv": "model",
+        "zero": "data",
+        "fsdp": "data",
+    }

@@ -1,0 +1,180 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e per-chip constants (targets; this box only compiles):
+    peak bf16  : 197 TFLOP/s
+    HBM bw     : 819 GB/s
+    ICI link   : ~50 GB/s per link
+
+Conventions. ``compiled.cost_analysis()`` on an SPMD-partitioned executable
+reports the PER-DEVICE program (flops / bytes of one partition), so the
+roofline terms divide by per-chip peaks directly — equivalent to the
+global-FLOPs / (chips x peak) form. Collective bytes are NOT in
+cost_analysis: we parse the HLO and convert each op to ring-algorithm
+bytes-on-wire per device:
+
+    all-reduce       2 * size * (g-1)/g      (reduce-scatter + all-gather)
+    all-gather       size_out * (g-1)/g
+    reduce-scatter   size_out * (g-1)
+    all-to-all       size * (g-1)/g
+    collective-permute  size
+
+where g is the replica-group size parsed from the op line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(line: str) -> float:
+    """Bytes of the op's result (first shape after '='); tuples: sum all."""
+    total = 0.0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", line.split("=", 1)[1]):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+        # first shape only unless tuple — heuristically stop after 4 shapes
+        if total and not line.split("=", 1)[1].lstrip().startswith("("):
+            break
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 2) -> Dict[str, float]:
+    """Per-device ring bytes-on-wire, bucketed by collective kind."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        size = _shape_bytes(line)
+        g = _group_size(line, default_group)
+        if g <= 1:
+            wire = 0.0
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-gather":
+            wire = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+        out[f"{kind}_count"] = out.get(f"{kind}_count", 0) + 1
+    out["total"] = sum(v for k, v in out.items()
+                       if not k.endswith("_count") and k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-device-normalized)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "dominant": self.dominant, "bound_s": self.bound_s,
+                "useful_fraction": self.useful_fraction}
+
+
+def roofline_terms(cost: dict, hlo_text: str, *, n_chips: int,
+                   model_flops_global: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll["total"] / ICI_BW,
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=coll["total"],
+        model_flops=model_flops_global / n_chips,
+    )
+
+
+def terms_from(*, flops: float, bytes_accessed: float, coll_bytes: float,
+               n_chips: int, model_flops_global: float = 0.0) -> Roofline:
+    """Roofline from explicit per-device costs (the trip-count-corrected
+    hlo_cost.analyze values — raw cost_analysis counts loop bodies once)."""
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        coll_bytes=coll_bytes,
+        model_flops=model_flops_global / n_chips,
+    )
+
+
+def model_flops(kind: str, n_params: int, n_active: int, batch: int,
+                seq: int, n_micro: int = 1) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference forward; decode D=batch
+    tokens. MoE uses active params."""
+    N = n_active or n_params
+    if kind == "train":
+        return 6.0 * N * batch * seq
+    if kind == "prefill":
+        return 2.0 * N * batch * seq
+    if kind == "decode":
+        return 2.0 * N * batch  # one token per sequence
+    return 0.0

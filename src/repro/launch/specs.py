@@ -1,0 +1,294 @@
+"""Per-(arch x shape-cell) input specs and lowering targets.
+
+Every cell resolves to a jit-able step function + ShapeDtypeStruct inputs +
+NamedShardings (weak-type-correct, shardable, no device allocation):
+
+  train_4k    -> train_step(params, opt_state, batch)     seq 4096,  gb 256
+  prefill_32k -> forward(params, batch)                   seq 32768, gb 32
+  decode_32k  -> decode_step(params, cache, tok, pos)     cache 32k, gb 128
+  long_500k   -> decode_step with a 524288-token cache,   gb 1
+
+Skip policy (DESIGN.md §4): encoder-only archs have no decode cells;
+long_500k requires sub-quadratic layers. ``khi-serve`` has its own cell
+(serve_b256) lowering the sharded fan-out search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..models.sharding import axis_rules, logical_to_spec
+from ..optim import AdamWConfig, init_opt_state, opt_logical_axes
+from ..train import make_train_step
+from .mesh import mesh_axis_sizes, sharding_rules
+
+__all__ = ["CELLS", "cell_supported", "build_lowering", "pick_n_micro"]
+
+CELLS: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg, cell: str) -> Tuple[bool, str]:
+    if getattr(cfg, "name", "").startswith("khi-serve"):
+        return cell == "serve_b256", "khi-serve has its own serve cell"
+    kind = CELLS[cell]["kind"]
+    if cfg.encoder_only and kind == "decode":
+        return False, "encoder-only arch: no decode step"
+    if cell == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped"
+    return True, ""
+
+
+def pick_n_micro(cfg: ModelConfig, batch: int, seq: int, sizes: dict) -> int:
+    """Choose grad-accum microbatches so the per-device logits slice stays
+    under ~1 GB (bf16 logits + f32 softmax ~ 6 B/elt). FSDP-class archs
+    (>8B params, full remat) go straight to per-device microbatch 1: their
+    activation footprint, not throughput, binds first."""
+    data = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_local = max(batch // data, 1)
+    if cfg.n_params() > 8e9:
+        return b_local
+    vshard = sizes.get("model", 1) if cfg.vocab % sizes.get("model", 1) == 0 else 1
+    budget = 1.0e9
+    n = 1
+    while (b_local / n) * seq * (cfg.vocab / vshard) * 6 > budget and n < b_local:
+        n *= 2
+    return n
+
+
+# ----------------------------------------------------------------- SDS utils
+
+def _sds(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def _batch_sds(cfg: ModelConfig, B: int, S: int, *, with_targets: bool):
+    b: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        b["features"] = _sds((B, S, cfg.frontend_dim), cfg.jdtype)
+        if with_targets:
+            b["targets"] = _sds((B, S), jnp.int32)
+            b["mask"] = _sds((B, S), jnp.bool_)
+        return b
+    b["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.frontend == "vision":
+        b["patches"] = _sds((B, cfg.n_patches, cfg.d_model), cfg.jdtype)
+        b["mrope_pos"] = _sds((B, 3, S), jnp.int32)
+    return b
+
+
+def _batch_logical(cfg: ModelConfig, batch_sds) -> dict:
+    ax = {"tokens": ("batch", None), "features": ("batch", None, None),
+          "targets": ("batch", None), "mask": ("batch", None),
+          "patches": ("batch", None, None), "mrope_pos": ("batch", None, None)}
+    return {k: ax[k] for k in batch_sds}
+
+
+def _cache_logical(cfg: ModelConfig):
+    def for_spec(spec):
+        if spec.mixer == "ssm":
+            return {"conv": (None, "batch", None, "ffn"),
+                    "ssm": (None, "batch", "heads", None, None)}
+        if cfg.mla is not None:
+            return {"c": (None, "batch", "seq_kv", None),
+                    "kr": (None, "batch", "seq_kv", None)}
+        return {"k": (None, "batch", "seq_kv", "kv_heads", None),
+                "v": (None, "batch", "seq_kv", "kv_heads", None)}
+    return [
+        {f"l{j}": for_spec(spec) for j, spec in enumerate(stage.body)}
+        for stage in cfg.stages]
+
+
+def _to_shardings(mesh, axes_tree, sds_tree):
+    return jax.tree.map(
+        lambda ax, s: NamedSharding(mesh, logical_to_spec(ax, s.shape)),
+        axes_tree, sds_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _zero_shardings(mesh, pshard_tree, sds_tree):
+    """ZeRO-1 moment shardings: the param's spec plus `data` on the first
+    free dim whose size divides the data axis (shape-aware — the logical
+    zeroify can land on a non-divisible scan dim and silently replicate)."""
+    sizes = mesh_axis_sizes(mesh)
+    data = sizes.get("data", 1)
+
+    def one(ps: NamedSharding, s):
+        spec = list(ps.spec) + [None] * (len(s.shape) - len(ps.spec))
+        used = {a for e in spec
+                for a in (e if isinstance(e, tuple) else (e,)) if a}
+        if "data" not in used and data > 1:
+            for i, (e, dim) in enumerate(zip(spec, s.shape)):
+                if e is None and dim % data == 0:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, pshard_tree, sds_tree)
+
+
+# ----------------------------------------------------------------- lowering
+
+def build_lowering(arch: str, cell: str, mesh, *,
+                   n_micro: Optional[int] = None, variant: str = ""):
+    """Returns (lower_fn, meta). ``lower_fn()`` runs jit(...).lower(...) under
+    the mesh + axis-rule contexts and returns the Lowered object.
+
+    ``variant`` selects §Perf hillclimb transforms:
+      ep<N>     pad the MoE expert axis to N (enables EP when E∤mesh)
+      bf16vec   khi-serve: bf16 corpus vectors
+      nofsdp    disable FSDP on train cells
+      qc<N>     attention q-chunk override (via models.layers.Q_CHUNK)
+    """
+    sizes = mesh_axis_sizes(mesh)
+    rules = sharding_rules(mesh)
+    if variant == "fsdppod" and "pod" in mesh.axis_names:
+        # §Perf: fully-shard params across BOTH pod and data (32-way) —
+        # halves weight shards at the cost of cross-pod gathers
+        rules = {**rules, "fsdp": ("pod", "data")}
+
+    if arch == "khi-serve":
+        return _build_khi_lowering(cell, mesh, sizes, rules, variant=variant)
+
+    cfg = get_config(arch)
+    if variant.startswith("ep") and cfg.moe is not None:
+        # "ep48" or "ep48cap10" (pad experts; optionally capacity 1.0)
+        pad = int(variant[2:].split("cap")[0])
+        cap = 1.0 if "cap10" in variant else cfg.moe.capacity_factor
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, pad_to=pad,
+                                         capacity_factor=cap))
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        raise ValueError(f"{arch} x {cell} unsupported: {why}")
+    info = CELLS[cell]
+    B, S = info["batch"], info["seq"]
+
+    params_sds = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                _sds((2,), jnp.uint32))
+
+    # FSDP (ZeRO-3) for every train cell: TP alone leaves params/grads
+    # replicated across the data axis — fatal for archs whose head counts
+    # don't divide the model axis (qwen1.5: 20 heads, minicpm3: 40).
+    use_fsdp = CELLS[cell]["kind"] == "train" and variant != "nofsdp"
+    with axis_rules(rules, sizes):
+        paxes = M.param_logical_axes(cfg, fsdp=use_fsdp)
+        pshard = _to_shardings(mesh, paxes, params_sds)
+
+    meta = dict(arch=arch, cell=cell, kind=info["kind"], batch=B, seq=S,
+                n_params=int(sum(np.prod(x.shape) for x in
+                                 jax.tree.leaves(params_sds))),
+                n_active=cfg.n_active_params())
+
+    if info["kind"] == "train":
+        nm = n_micro or pick_n_micro(cfg, B, S, sizes)
+        meta["n_micro"] = nm
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        batch_sds = _batch_sds(cfg, B, S, with_targets=True)
+        with axis_rules(rules, sizes):
+            mom = _zero_shardings(mesh, pshard, opt_sds["mu"])
+            oshard = {"mu": mom, "nu": mom,
+                      "step": NamedSharding(mesh, P())}
+            bshard = _to_shardings(mesh, _batch_logical(cfg, batch_sds),
+                                   batch_sds)
+        step = make_train_step(cfg, AdamWConfig(), n_micro=nm)
+
+        def lower_fn():
+            with mesh, axis_rules(rules, sizes):
+                return jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                               donate_argnums=(0, 1)).lower(
+                    params_sds, opt_sds, batch_sds)
+        return lower_fn, meta
+
+    if info["kind"] == "prefill":
+        batch_sds = _batch_sds(cfg, B, S, with_targets=False)
+        with axis_rules(rules, sizes):
+            bshard = _to_shardings(mesh, _batch_logical(cfg, batch_sds),
+                                   batch_sds)
+
+        def pre(params, batch):
+            # serving prefill: last-token logits + populated decode cache
+            return M.prefill(params, cfg, batch)
+
+        cache_sds = jax.eval_shape(
+            lambda p, b: M.prefill(p, cfg, b), params_sds, batch_sds)[1]
+        with axis_rules(rules, sizes):
+            out_shard = (NamedSharding(mesh, P(tuple(
+                a for a in ("pod", "data") if a in mesh.axis_names))),
+                _to_shardings(mesh, _cache_logical(cfg), cache_sds))
+
+        def lower_fn():
+            with mesh, axis_rules(rules, sizes):
+                return jax.jit(pre, in_shardings=(pshard, bshard),
+                               out_shardings=out_shard).lower(
+                    params_sds, batch_sds)
+        return lower_fn, meta
+
+    # decode
+    cache_sds = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    tok_sds = _sds((B, 1), jnp.int32)
+    with axis_rules(rules, sizes):
+        cshard = _to_shardings(mesh, _cache_logical(cfg), cache_sds)
+
+    def dec(params, cache, tok, pos):
+        return M.decode_step(params, cfg, cache, tok, pos)
+
+    def lower_fn():
+        with mesh, axis_rules(rules, sizes):
+            return jax.jit(
+                dec,
+                in_shardings=(pshard, cshard, NamedSharding(mesh, P()),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, tok_sds,
+                    _sds((), jnp.int32))
+    return lower_fn, meta
+
+
+def _build_khi_lowering(cell: str, mesh, sizes, rules, variant: str = ""):
+    """khi-serve: lower the sharded fan-out search (serve_step)."""
+    from ..configs.khi_serve import config as khi_config
+    from ..core.engine import SearchParams
+    from ..core.sharded import make_sharded_search_fn, sharded_input_specs
+
+    kc = khi_config()
+    batch = 256 * sizes.get("pod", 1)
+    n_shards = sizes["model"]
+    skhi_sds, q_sds = sharded_input_specs(
+        n_per_shard=kc.n_per_shard, d=kc.d, m=kc.m, height=kc.height,
+        nodes_per_shard=kc.nodes_per_shard, M=kc.M, n_shards=n_shards,
+        batch=batch,
+        vec_dtype=jnp.bfloat16 if variant == "bf16vec" else None)
+    hops = 64 if variant == "hops64" else kc.ef
+    params = SearchParams(k=kc.k, ef=kc.ef, c_e=kc.c_e, c_n=kc.c_n,
+                          max_hops=hops)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fn = make_sharded_search_fn(params, mesh, data_axes=data_axes)
+
+    mspec = NamedSharding(mesh, P("model"))
+    dspec = NamedSharding(mesh, P(data_axes))
+    skhi_shard = jax.tree.map(lambda _: mspec, skhi_sds)
+    meta = dict(arch="khi-serve", cell=cell, kind="serve", batch=batch,
+                seq=kc.n_per_shard, n_params=0, n_active=0,
+                d=kc.d, M=kc.M, ef=kc.ef, max_hops=hops, height=kc.height)
+
+    def lower_fn():
+        with mesh:
+            return jax.jit(
+                fn, in_shardings=(skhi_shard,
+                                  dspec, dspec, dspec)).lower(
+                skhi_sds, q_sds["queries"], q_sds["qlo"], q_sds["qhi"])
+    return lower_fn, meta

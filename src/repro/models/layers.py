@@ -1,0 +1,365 @@
+"""Layer primitives: norms, RoPE (incl. M-RoPE), attention variants
+(GQA / sliding-window / bidirectional / MLA), dense FFN, MoE.
+
+Weight layout conventions (sharding rules in models/sharding.py):
+  attention: wq (D, H, hd) / wk,wv (D, KV, hd) / wo (H, hd, D)
+  mlp:       wi (D, F) wg (D, F) wo (F, D)        (SwiGLU)
+  moe:       router (D, E), wi/wg (E, D, Fe), wo (E, Fe, D)
+  mla:       wq_a (D, rq) wq_b (rq, H, nope+rope)
+             wkv_a (D, rkv + rope) wkv_b_k (rkv, H, nope)
+             wkv_b_v (rkv, H, v) wo (H, v, D)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, ModelConfig
+from .sharding import constrain
+
+__all__ = ["rms_norm", "rope_angles", "apply_rope", "apply_mrope",
+           "attention", "mla_attention", "dense_ffn", "moe_ffn",
+           "attn_decode", "mla_decode"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions (..., S) -> cos/sin (..., S, dim/2), f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def apply_rope(q, k, positions, theta):
+    """Standard RoPE. positions (B, S)."""
+    cos, sin = rope_angles(positions, q.shape[-1], theta)
+    return (_rotate(q, cos, sin).astype(q.dtype),
+            _rotate(k, cos, sin).astype(k.dtype))
+
+
+def apply_mrope(q, k, positions3, sections, theta):
+    """M-RoPE (Qwen2-VL): positions3 (B, 3, S); ``sections`` are half-dim
+    section sizes (t, h, w) summing to head_dim/2. Each frequency band takes
+    its angle from the section's positional stream."""
+    hd = q.shape[-1]
+    cos_t, sin_t = [], []
+    for i in range(3):
+        c, s = rope_angles(positions3[:, i], hd, theta)  # (B, S, hd/2)
+        cos_t.append(c)
+        sin_t.append(s)
+    sec = jnp.asarray(np.repeat(np.arange(3), np.asarray(sections)))  # (hd/2,)
+    cos = jnp.take_along_axis(jnp.stack(cos_t, -1), sec[None, None, :, None],
+                              axis=-1)[..., 0]
+    sin = jnp.take_along_axis(jnp.stack(sin_t, -1), sec[None, None, :, None],
+                              axis=-1)[..., 0]
+    return (_rotate(q, cos, sin).astype(q.dtype),
+            _rotate(k, cos, sin).astype(k.dtype))
+
+
+# ---------------------------------------------------------------- attention
+
+def _mask_bias(S_q: int, S_kv: int, *, causal: bool, window: Optional[int],
+               offset: int = 0) -> jax.Array:
+    """(S_q, S_kv) additive bias in f32. ``offset`` = absolute position of
+    query row 0 (used at decode: S_q=1, offset=pos)."""
+    qi = jnp.arange(S_q)[:, None] + offset
+    ki = jnp.arange(S_kv)[None, :]
+    ok = jnp.ones((S_q, S_kv), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) with GQA head grouping."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+# Query blocks above this length are processed by the chunked (blockwise)
+# path so the (S x T) score matrix never materializes — the pure-JAX
+# equivalent of flash attention's memory behavior (exact softmax per row;
+# O(q_chunk x T) live scores instead of O(S x T)).
+Q_CHUNK = 1024
+
+
+def _attn_core(q, k, v, *, causal: bool, window: Optional[int],
+               q_chunk: int = Q_CHUNK):
+    """Dispatch full vs q-chunked attention. Sliding-window layers slice the
+    KV stream per block (kv length = q_chunk + window), so local-attention
+    FLOPs scale with the window, not the sequence."""
+    B, S, H, hd = q.shape
+    if S <= q_chunk or S % q_chunk != 0:
+        return _sdpa(q, k, v, _mask_bias(S, S, causal=causal, window=window))
+    nq = S // q_chunk
+    qb = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+
+    if window is not None and causal:
+        w = ((window + q_chunk - 1) // q_chunk) * q_chunk  # align slice
+        kv_len = q_chunk + w
+        kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+        def blk(i, qi):
+            start = i * q_chunk  # in padded coords: block begins at start + w
+            ks = jax.lax.dynamic_slice_in_dim(kp, start, kv_len, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, start, kv_len, axis=1)
+            # absolute positions: query rows start+arange(qc); keys
+            # (start - w + arange(kv_len)), negatives = padding
+            qpos = start + jnp.arange(q_chunk)[:, None]
+            kpos = start - w + jnp.arange(kv_len)[None, :]
+            ok = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - window)
+            bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+            return _sdpa(qi, ks, vs, bias)
+    else:
+        def blk(i, qi):
+            start = i * q_chunk
+            qpos = start + jnp.arange(q_chunk)[:, None]
+            kpos = jnp.arange(S)[None, :]
+            ok = (kpos <= qpos) if causal else jnp.ones((1, S), bool)
+            bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+            return _sdpa(qi, k, v, bias)
+
+    def body(_, inp):
+        i, qi = inp
+        return None, blk(i, qi)
+
+    _, ys = jax.lax.scan(body, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+
+
+def attention(x, p, cfg: ModelConfig, positions, *, window, mrope_pos=None):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.mrope_sections is not None:
+        q, k = apply_mrope(q, k, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q, k = apply_rope(q, k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, None, None)
+    out = _attn_core(q, k, v, causal=not cfg.encoder_only, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, "batch", None, None), (k, v)
+
+
+def attn_decode(x, p, cfg: ModelConfig, cache_k, cache_v, pos, *, window,
+                mrope_pos=None, write_idx=None):
+    """One-token decode. x (B, 1, D); cache_k/v (B, T, KV, hd); pos () int =
+    absolute position (drives RoPE + mask). ``write_idx`` is the cache slot
+    to write (defaults to pos; sliding-window layers pass pos % window into a
+    window-sized ring cache — RoPE bakes absolute positions into k, so slot
+    order is irrelevant, and mask ``slot <= pos`` is exact for both layouts).
+    Returns (out, new_k, new_v)."""
+    B, _, D = x.shape
+    T = cache_k.shape[1]
+    if write_idx is None:
+        write_idx = pos
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        # decode: all three streams advance with the text position
+        p3 = jnp.broadcast_to(posb[:, None, :], (B, 3, 1))
+        q, k = apply_mrope(q, k, p3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q, k = apply_rope(q, k, posb, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), write_idx, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), write_idx, axis=1)
+    ki = jnp.arange(T)
+    ok = ki <= pos
+    if window is not None:
+        ok &= ki > pos - window
+    bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    out = _sdpa(q, cache_k, cache_v, bias)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------- MLA
+
+def _mla_qk(x, p, mla: MLAConfig, cfg):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])  # (B,S,H,nope+rope)
+    q_nope = q[..., : mla.qk_nope_dim]
+    q_rope = q[..., mla.qk_nope_dim :]
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = ckv_full[..., : mla.kv_lora_rank]
+    k_rope = ckv_full[..., mla.kv_lora_rank :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(x, p, cfg: ModelConfig, positions):
+    """Training/prefill MLA in the absorbed form: scores live in latent
+    space, so the cacheable state is (c_kv, k_rope) only."""
+    mla = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qk(x, p, mla, cfg)
+    # rope on the rope-slices (shared single-head k_rope)
+    cos, sin = rope_angles(positions, mla.qk_rope_dim, cfg.rope_theta)
+    q_rope = _rotate(q_rope, cos, sin).astype(x.dtype)
+    k_rope = _rotate(k_rope[..., None, :], cos, sin)[..., 0, :].astype(x.dtype)
+    # absorb: q_lat (B,S,H,rkv) = q_nope @ wkv_b_k^T
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wkv_b_k"])
+    scale = 1.0 / np.sqrt(mla.qk_nope_dim + mla.qk_rope_dim)
+
+    def blk(start, ql, qr):
+        scores = (jnp.einsum("bshr,btr->bhst", ql, c_kv)
+                  + jnp.einsum("bshk,btk->bhst", qr, k_rope))
+        qpos = start + jnp.arange(ql.shape[1])[:, None]
+        ok = jnp.arange(S)[None, :] <= qpos
+        bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+        probs = jax.nn.softmax(scores.astype(jnp.float32) * scale + bias,
+                               axis=-1)
+        return jnp.einsum("bhst,btr->bshr", probs.astype(x.dtype), c_kv)
+
+    qc = 256  # latent scores are (B,H,qc,S) f32 — chunk q to bound them
+    if S <= qc or S % qc != 0:
+        lat = blk(0, q_lat, q_rope)
+    else:
+        nq = S // qc
+        qlb = jnp.moveaxis(q_lat.reshape(B, nq, qc, H, -1), 1, 0)
+        qrb = jnp.moveaxis(q_rope.reshape(B, nq, qc, H, -1), 1, 0)
+        _, ys = jax.lax.scan(
+            lambda _, inp: (None, blk(inp[0] * qc, inp[1], inp[2])),
+            None, (jnp.arange(nq), qlb, qrb))
+        lat = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, -1)
+    out = jnp.einsum("bshr,rhv->bshv", lat, p["wkv_b_v"])
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return constrain(out, "batch", None, None), (c_kv, k_rope)
+
+
+def mla_decode(x, p, cfg: ModelConfig, cache_c, cache_kr, pos):
+    """Decode with the compressed latent cache — MLA's raison d'être."""
+    mla = cfg.mla
+    B = x.shape[0]
+    T = cache_c.shape[1]
+    q_nope, q_rope, c_kv, k_rope = _mla_qk(x, p, mla, cfg)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    cos, sin = rope_angles(posb, mla.qk_rope_dim, cfg.rope_theta)
+    q_rope = _rotate(q_rope, cos, sin).astype(x.dtype)
+    k_rope = _rotate(k_rope[..., None, :], cos, sin)[..., 0, :].astype(x.dtype)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_kv.astype(cache_c.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, k_rope.astype(cache_kr.dtype), pos, axis=1)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wkv_b_k"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, cache_c)
+              + jnp.einsum("bshk,btk->bhst", q_rope, cache_kr))
+    scale = 1.0 / np.sqrt(mla.qk_nope_dim + mla.qk_rope_dim)
+    ok = jnp.arange(T) <= pos
+    bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    probs = jax.nn.softmax(scores.astype(jnp.float32) * scale + bias, axis=-1)
+    lat = jnp.einsum("bhst,btr->bshr", probs.astype(x.dtype), cache_c)
+    out = jnp.einsum("bshr,rhv->bshv", lat, p["wkv_b_v"])
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, cache_c, cache_kr
+
+
+# ---------------------------------------------------------------- FFN
+
+def dense_ffn(x, p):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi"])
+    h = constrain(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def moe_ffn(x, p, moe, *, return_aux: bool = True):
+    """Top-k routed MoE with static-capacity slot dispatch.
+
+    Instead of the (T, E, C) one-hot dispatch tensor, we sort token-expert
+    assignments by expert and gather tokens into (E, C, D) slots — same
+    dropping semantics, O(T K log) bookkeeping, and the expert einsum shards
+    cleanly on the expert axis (EP) or the expert-FFN axis (TP).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.n_padded, moe.top_k
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    if moe.n_padded != moe.n_experts:
+        # padded experts are dead: -inf logits, never routed to
+        logits = jnp.where(jnp.arange(E) < moe.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    C = max(1, int(np.ceil(T * K / E * moe.capacity_factor)))
+    flat_e = experts.reshape(-1)                          # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)                           # group by expert
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert = position - start(expert)
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - starts[se]
+    keep = rank < C                                        # token dropping
+    slot = jnp.where(keep, se * C + rank, E * C)
+    sel_tok = jnp.full((E * C,), T, jnp.int32).at[slot].set(
+        st.astype(jnp.int32), mode="drop")
+    sel_gate = jnp.zeros((E * C,), jnp.float32).at[slot].set(sg, mode="drop")
+
+    xs = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)])[sel_tok]
+    xs = xs.reshape(E, C, D)
+    xs = constrain(xs, "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xs, p["wi"])
+    ys = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    ys = (ys.reshape(E * C, D)
+          * sel_gate[:, None].astype(ys.dtype))
+    out = jnp.zeros((T + 1, D), ys.dtype).at[sel_tok].add(ys)[:T]
+
+    if not return_aux:
+        return out.reshape(B, S, D), 0.0
+    # load-balance + router-z losses (Switch/ST-MoE style)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(experts, E).sum(1) > 0).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = (moe.aux_loss_weight * E * jnp.sum(frac_tokens * frac_probs)
+           + moe.router_z_weight
+           * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2))
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,496 @@
+"""Model assembly: parameter init, stage-scanned forward, decode with caches,
+losses. One code path serves all 10 architectures via ModelConfig.
+
+Batch dict keys (see launch/specs.py for the per-cell ShapeDtypeStructs):
+  tokens    (B, S) int32          — LM input (and target via shift)
+  mrope_pos (B, 3, S) int32       — qwen2-vl only
+  patches   (B, P, D) dtype       — vision stub embeddings (qwen2-vl)
+  features  (B, S, F) dtype       — audio stub frame features (hubert)
+  mask      (B, S) bool           — hubert masked-prediction positions
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as SSM
+from .config import LayerSpec, ModelConfig, Stage
+from .sharding import constrain
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "count_params", "param_logical_axes"]
+
+
+# ------------------------------------------------------------------- init
+
+def _attn_params(cfg: ModelConfig, key, R):
+    H, KV, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    k = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    sc = 0.02
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        return {
+            "wq_a": sc * jax.random.normal(k[0], (R, D, m.q_lora_rank), dt),
+            "wq_b": sc * jax.random.normal(k[1], (R, m.q_lora_rank, H, qk), dt),
+            "wkv_a": sc * jax.random.normal(
+                k[2], (R, D, m.kv_lora_rank + m.qk_rope_dim), dt),
+            "wkv_b_k": sc * jax.random.normal(
+                k[3], (R, m.kv_lora_rank, H, m.qk_nope_dim), dt),
+            "wkv_b_v": sc * jax.random.normal(
+                k[4], (R, m.kv_lora_rank, H, m.v_head_dim), dt),
+            "wo": sc * jax.random.normal(k[5], (R, H, m.v_head_dim, D), dt),
+        }
+    p = {
+        "wq": sc * jax.random.normal(k[0], (R, D, H, hd), dt),
+        "wk": sc * jax.random.normal(k[1], (R, D, KV, hd), dt),
+        "wv": sc * jax.random.normal(k[2], (R, D, KV, hd), dt),
+        "wo": sc * jax.random.normal(k[3], (R, H, hd, D), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((R, H, hd), dt)
+        p["bk"] = jnp.zeros((R, KV, hd), dt)
+        p["bv"] = jnp.zeros((R, KV, hd), dt)
+    return p
+
+
+def _ssm_params(cfg: ModelConfig, key, R):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner = s.expand * D
+    nh = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    ch = d_inner + 2 * gN
+    proj_out = 2 * d_inner + 2 * gN + nh
+    k = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    return {
+        "in_proj": 0.02 * jax.random.normal(k[0], (R, D, proj_out), dt),
+        "conv_w": 0.02 * jax.random.normal(k[1], (R, s.d_conv, ch), dt),
+        "conv_b": jnp.zeros((R, ch), dt),
+        "dt_bias": jnp.zeros((R, nh), dt),
+        "A_log": jnp.zeros((R, nh), jnp.float32),
+        "D": jnp.ones((R, nh), dt),
+        "norm": jnp.zeros((R, d_inner), dt),
+        "out_proj": 0.02 * jax.random.normal(k[2], (R, d_inner, D), dt),
+    }
+
+
+def _ffn_params(cfg: ModelConfig, key, R, kind: str):
+    D = cfg.d_model
+    dt = cfg.jdtype
+    k = jax.random.split(key, 4)
+    if kind == "dense":
+        F = cfg.d_ff
+        return {"wi": 0.02 * jax.random.normal(k[0], (R, D, F), dt),
+                "wg": 0.02 * jax.random.normal(k[1], (R, D, F), dt),
+                "wo": 0.02 * jax.random.normal(k[2], (R, F, D), dt)}
+    moe = cfg.moe
+    E, Fe = moe.n_padded, moe.d_expert
+    return {"router": 0.02 * jax.random.normal(k[0], (R, D, E), jnp.float32),
+            "wi": 0.02 * jax.random.normal(k[1], (R, E, D, Fe), dt),
+            "wg": 0.02 * jax.random.normal(k[2], (R, E, D, Fe), dt),
+            "wo": 0.02 * jax.random.normal(k[3], (R, E, Fe, D), dt)}
+
+
+def _layer_params(cfg: ModelConfig, spec: LayerSpec, key, R):
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jdtype
+    p: Dict[str, Any] = {"ln1": jnp.zeros((R, cfg.d_model), dt)}
+    if spec.mixer == "attn":
+        p["attn"] = _attn_params(cfg, k1, R)
+    else:
+        p["ssm"] = _ssm_params(cfg, k1, R)
+    if spec.ffn is not None:
+        p["ln2"] = jnp.zeros((R, cfg.d_model), dt)
+        p[spec.ffn] = _ffn_params(cfg, k2, R, spec.ffn)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.stages) + 3)
+    dt = cfg.jdtype
+    params: Dict[str, Any] = {
+        "embed": 0.02 * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = 0.02 * jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), dt)
+    if cfg.frontend == "audio":
+        params["frontend"] = {
+            "proj": 0.02 * jax.random.normal(
+                keys[2], (cfg.frontend_dim, cfg.d_model), dt)}
+    stages = []
+    for si, stage in enumerate(cfg.stages):
+        skeys = jax.random.split(keys[3 + si], len(stage.body))
+        stages.append({
+            f"l{j}": _layer_params(cfg, spec, skeys[j], stage.repeat)
+            for j, spec in enumerate(stage.body)})
+    params["stages"] = stages
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        # subtract the inactive share of expert weights
+        def expert_size(tree):
+            out = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+                if "moe" in names and any(n in ("wi", "wg", "wo") for n in names):
+                    out += int(np.prod(leaf.shape))
+            return out
+        e = expert_size(shapes)
+        total -= int(e * (1 - cfg.moe.top_k / cfg.moe.n_experts))
+    return total
+
+
+# ------------------------------------------------------------------- apply
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _apply_block(x, p, spec: LayerSpec, cfg: ModelConfig, positions,
+                 mrope_pos, aux, *, collect_cache: bool = False):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.mla is not None:
+            out, state = L.mla_attention(h, p["attn"], cfg, positions)
+        else:
+            out, state = L.attention(h, p["attn"], cfg, positions,
+                                     window=spec.window, mrope_pos=mrope_pos)
+    else:
+        out, state = SSM.mamba_block(h, p["ssm"], cfg)
+    x = x + out
+    if spec.ffn is not None:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            x = x + L.dense_ffn(h, p["dense"])
+        else:
+            y, a = L.moe_ffn(h, p["moe"], cfg.moe)
+            x = x + y
+            aux = aux + a
+    return x, aux, (state if collect_cache else None)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    if cfg.frontend == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["features"].astype(cfg.jdtype),
+                       params["frontend"]["proj"])
+        return x
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.frontend == "vision" and "patches" in batch:
+        P = batch["patches"].shape[1]
+        S = tokens.shape[1]
+        pat = jnp.pad(batch["patches"].astype(cfg.jdtype),
+                      ((0, 0), (0, S - P), (0, 0)))
+        is_pat = (jnp.arange(S) < P)[None, :, None]
+        x = jnp.where(is_pat, pat, x)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), moe_aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    x = constrain(x, "batch", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mrope_pos = batch.get("mrope_pos")
+    aux = jnp.zeros((), jnp.float32)
+
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+
+        def step(carry, layer_params, _stage=stage):
+            xx, a = carry
+            for j, spec in enumerate(_stage.body):
+                xx, a, _ = _apply_block(xx, layer_params[f"l{j}"], spec, cfg,
+                                        positions, mrope_pos, a)
+            return (xx, a), None
+
+        step = _remat_wrap(step, cfg)
+        (x, aux), _ = jax.lax.scan(step, (x, aux), sp)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return constrain(logits, "batch", None, "vocab"), aux
+
+
+def prefill(params, cfg: ModelConfig, batch, *, cache_len: Optional[int] = None):
+    """Serving prefill: run the full sequence once, return ONLY the last
+    position's logits plus the populated decode cache (window layers get
+    ring-rotated caches so decode_step can continue at pos = S)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    x = constrain(x, "batch", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mrope_pos = batch.get("mrope_pos")
+    aux = jnp.zeros((), jnp.float32)
+    T = cache_len or S
+
+    def pack(spec: LayerSpec, state):
+        dt = cfg.jdtype
+        if spec.mixer == "ssm":
+            conv, hT = state
+            return {"conv": conv.astype(dt), "ssm": hT.astype(dt)}
+        if cfg.mla is not None:
+            c, kr = state
+            return {"c": _fit_cache(c, T), "kr": _fit_cache(kr, T)}
+        k, v = state
+        if spec.window and spec.window < S:
+            # ring layout: position p lives at slot p % window
+            w = spec.window
+            k = jnp.roll(k[:, -w:], S % w, axis=1)
+            v = jnp.roll(v[:, -w:], S % w, axis=1)
+            return {"k": k.astype(dt), "v": v.astype(dt)}
+        return {"k": _fit_cache(k, T), "v": _fit_cache(v, T)}
+
+    caches = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+
+        def step(carry, layer_params, _stage=stage):
+            xx, a = carry
+            out = {}
+            for j, spec in enumerate(_stage.body):
+                xx, a, st = _apply_block(xx, layer_params[f"l{j}"], spec, cfg,
+                                         positions, mrope_pos, a,
+                                         collect_cache=True)
+                out[f"l{j}"] = pack(spec, st)
+            return (xx, a), out
+
+        (x, aux), ys = jax.lax.scan(step, (x, aux), sp)
+        caches.append(ys)
+
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, caches
+
+
+def _fit_cache(arr, T: int):
+    """Pad (or trim) the sequence axis (axis 1 of (B, S, ...)) to T."""
+    S = arr.shape[1]
+    if S == T:
+        return arr
+    if S > T:
+        return arr[:, -T:]
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, T - S)
+    return jnp.pad(arr, pad)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    logits = logits.astype(jnp.float32)
+    if cfg.encoder_only:
+        # masked-prediction (hubert): CE at masked positions
+        targets = batch["targets"]
+        mask = batch["mask"].astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        tokens = batch["tokens"]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+    return loss + aux, {"loss": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+
+def _cache_for_spec(cfg: ModelConfig, spec: LayerSpec, R: int, B: int,
+                    T: int, dt):
+    if spec.mixer == "ssm":
+        cs, ss = SSM.mamba_state_shapes(cfg, B)
+        return {"conv": jnp.zeros((R,) + cs, dt),
+                "ssm": jnp.zeros((R,) + ss, dt)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"c": jnp.zeros((R, B, T, m.kv_lora_rank), dt),
+                "kr": jnp.zeros((R, B, T, m.qk_rope_dim), dt)}
+    Tc = min(spec.window, T) if spec.window else T
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((R, B, Tc, KV, hd), dt),
+            "v": jnp.zeros((R, B, Tc, KV, hd), dt)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.jdtype
+    cache = []
+    for stage in cfg.stages:
+        cache.append({f"l{j}": _cache_for_spec(cfg, spec, stage.repeat,
+                                               batch, max_len, dt)
+                      for j, spec in enumerate(stage.body)})
+    return cache
+
+
+def _decode_block(x, p, c, spec: LayerSpec, cfg: ModelConfig, pos):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "ssm":
+        out, (cs, ss) = SSM.mamba_decode(h, p["ssm"], cfg, c["conv"], c["ssm"])
+        newc = {"conv": cs.astype(c["conv"].dtype), "ssm": ss.astype(c["ssm"].dtype)}
+    elif cfg.mla is not None:
+        out, cc, kr = L.mla_decode(h, p["attn"], cfg, c["c"], c["kr"], pos)
+        newc = {"c": cc, "kr": kr}
+    else:
+        if spec.window and c["k"].shape[1] == spec.window:
+            # ring cache: write slot pos % window; mask slot<=pos is exact
+            slot = jnp.mod(pos, spec.window)
+            out, ck, cv = L.attn_decode(h, p["attn"], cfg, c["k"], c["v"],
+                                        pos, window=None, write_idx=slot)
+        else:
+            out, ck, cv = L.attn_decode(h, p["attn"], cfg, c["k"], c["v"],
+                                        pos, window=spec.window)
+        newc = {"k": ck, "v": cv}
+    x = x + out
+    if spec.ffn is not None:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            x = x + L.dense_ffn(h, p["dense"])
+        else:
+            y, _ = L.moe_ffn(h, p["moe"], cfg.moe, return_aux=False)
+            x = x + y
+    return x, newc
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step. tokens (B, 1) int32; pos () int32 — the absolute
+    position being written. Returns (logits (B, 1, V), new_cache)."""
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, None)
+    new_cache = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        sc = cache[si]
+
+        def step(xx, inp, _stage=stage):
+            lp, lc = inp
+            newc = {}
+            for j, spec in enumerate(_stage.body):
+                xx, nc = _decode_block(xx, lp[f"l{j}"], lc[f"l{j}"], spec,
+                                       cfg, pos)
+                newc[f"l{j}"] = nc
+            return xx, newc
+
+        x, ncache = jax.lax.scan(step, x, (sp, sc))
+        new_cache.append(ncache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_cache
+
+
+def param_logical_axes(cfg: ModelConfig, *, fsdp: bool = False):
+    """Logical sharding names per param leaf (resolved in sharding.py).
+
+    ``fsdp=True`` additionally shards the first free dim of every weight on
+    the `fsdp` logical axis (mapped to `data`) — ZeRO-3-style fully-sharded
+    params; GSPMD inserts the per-layer all-gathers. Used for train cells of
+    the larger archs where TP alone leaves params+grads replicated across
+    data replicas."""
+    def attn_ax():
+        if cfg.mla is not None:
+            return {"wq_a": (None, None), "wq_b": (None, "heads", None),
+                    "wkv_a": (None, None), "wkv_b_k": (None, "heads", None),
+                    "wkv_b_v": (None, "heads", None),
+                    "wo": ("heads", None, None)}
+        ax = {"wq": (None, "heads", None), "wk": (None, "kv_heads", None),
+              "wv": (None, "kv_heads", None), "wo": ("heads", None, None)}
+        if cfg.qkv_bias:
+            ax.update({"bq": ("heads", None), "bk": ("kv_heads", None),
+                       "bv": ("kv_heads", None)})
+        return ax
+
+    def ssm_ax():
+        return {"in_proj": (None, "ffn"), "conv_w": (None, "ffn"),
+                "conv_b": ("ffn",), "dt_bias": ("heads",),
+                "A_log": ("heads",), "D": ("heads",), "norm": ("ffn",),
+                "out_proj": ("ffn", None)}
+
+    def ffn_ax(kind):
+        if kind == "dense":
+            return {"wi": (None, "ffn"), "wg": (None, "ffn"),
+                    "wo": ("ffn", None)}
+        return {"router": (None, None), "wi": ("experts", None, "expert_ffn"),
+                "wg": ("experts", None, "expert_ffn"),
+                "wo": ("experts", "expert_ffn", None)}
+
+    def layer_ax(spec: LayerSpec):
+        ax = {"ln1": (None,)}
+        if spec.mixer == "attn":
+            ax["attn"] = attn_ax()
+        else:
+            ax["ssm"] = ssm_ax()
+        if spec.ffn is not None:
+            ax["ln2"] = (None,)
+            ax[spec.ffn] = ffn_ax(spec.ffn)
+        return ax
+
+    axes: Dict[str, Any] = {
+        "embed": ("vocab", None),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = (None, "vocab")
+    if cfg.frontend == "audio":
+        axes["frontend"] = {"proj": (None, None)}
+    axes["stages"] = [
+        {f"l{j}": _prepend_scan(layer_ax(spec))
+         for j, spec in enumerate(stage.body)}
+        for stage in cfg.stages]
+    if fsdp:
+        stages_axes = axes.pop("stages")
+        axes = _map_leaf_tuples(axes, functools.partial(_add_fsdp, start=0))
+        axes["stages"] = _map_leaf_tuples(
+            stages_axes, functools.partial(_add_fsdp, start=1))
+    return axes
+
+
+def _add_fsdp(ax: tuple, start: int) -> tuple:
+    """Insert the `fsdp` logical name at the first free (None) dim past any
+    leading scan dim; divisibility is checked downstream by maybe_axis."""
+    for i in range(start, len(ax)):
+        if ax[i] is None:
+            return ax[:i] + ("fsdp",) + ax[i + 1:]
+    return ax
+
+
+def _map_leaf_tuples(tree, fn):
+    if isinstance(tree, dict):
+        return {k: _map_leaf_tuples(v, fn) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_map_leaf_tuples(v, fn) for v in tree]
+    return fn(tuple(tree))
+
+
+def _prepend_scan(tree):
+    """Stage params carry a leading scan (repeat) dim — never sharded."""
+    if isinstance(tree, dict):
+        return {k: _prepend_scan(v) for k, v in tree.items()}
+    return (None,) + tuple(tree)

@@ -1,0 +1,90 @@
+"""Logical-axis sharding: params get PartitionSpecs from per-leaf logical
+names; activations get `with_sharding_constraint` only when a mesh context
+is active (CPU unit tests run without one).
+
+Logical axes:
+  batch    -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  heads    -> "model" when divisible (Megatron TP), else replicated
+  ffn      -> "model"
+  vocab    -> "model"
+  experts  -> "model" when divisible, else expert-FFN dim gets "model"
+  seq_kv   -> "model" (long-context decode caches when batch can't cover)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["axis_rules", "constrain", "logical_to_spec", "maybe_axis"]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict, mesh=None):
+    """rules: logical name -> mesh axis (str | tuple | None).
+    ``mesh``: mesh axis sizes for divisibility checks (dict name->size)."""
+    prev = _rules()
+    _state.rules = dict(rules)
+    _state.mesh_sizes = dict(mesh or {})
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def maybe_axis(logical: Optional[str], dim_size: int):
+    """Resolve a logical axis to mesh axes, dropping it when the dimension
+    isn't divisible by the mesh-axis extent (e.g. kv_heads=4 on model=16)."""
+    rules = _rules()
+    if rules is None or logical is None:
+        return None
+    ax = rules.get(logical)
+    if ax is None:
+        return None
+    sizes = getattr(_state, "mesh_sizes", {})
+    total = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        total *= sizes.get(a, 1)
+    if total > 1 and dim_size % total != 0:
+        return None
+    return ax
+
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    shape: Sequence[int]) -> P:
+    """Resolve logical names; a mesh axis may appear only once per spec, so
+    later duplicates are dropped (e.g. MoE weights where both `experts` and
+    `expert_ffn` map to `model`: EP wins when E divides the axis, otherwise
+    expert-internal TP takes over)."""
+    out, used = [], set()
+    for l, s in zip(logical, shape):
+        ax = maybe_axis(l, s)
+        flat = tuple(ax) if isinstance(ax, tuple) else (ax,)
+        if ax is not None and any(a in used for a in flat if a):
+            ax = None
+        if ax is not None:
+            used.update(a for a in flat if a)
+        out.append(ax)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint when inside axis_rules + a mesh."""
+    rules = _rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical, x.shape)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

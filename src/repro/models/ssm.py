@@ -1,0 +1,184 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul form.
+
+The SSD form is what makes Mamba2 TPU-friendly: the sequence is split into
+chunks of length L; within a chunk the recurrence is expanded into a masked
+(L x L) "attention-like" matmul (MXU work), and across chunks a tiny
+h <- decay * h + states recurrence runs over nc = S/L steps (lax.scan).
+Heads shard over the `model` axis, so the (b, nc, h, L, L) score block's
+head dim divides away under TP.
+
+Decode keeps O(1) state per layer: conv ring (d_conv, channels) + SSM state
+(heads, head_dim, d_state) — this is why mamba2/jamba run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, SSMConfig
+from .sharding import constrain
+
+__all__ = ["ssd_chunked", "mamba_block", "mamba_decode", "mamba_state_shapes"]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA (..., L) -> (..., L, L) lower-triangular segment sums:
+    out[i, j] = sum_{k=j+1..i} dA[k] for i >= j, -inf above diagonal."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x (b,s,h,p); dt (b,s,h) [post-softplus]; A (h,) negative;
+    B,C (b,s,g,n). Returns y (b,s,h,p) and final state (b,h,p,n).
+
+    Sequence lengths that don't divide ``chunk`` are zero-padded: padded
+    steps have dt = 0 ⇒ dA = 0 ⇒ unit decay and zero state contribution,
+    so outputs and the final state are exact."""
+    b, s0, h, p = x.shape
+    L = chunk
+    pad = (-s0) % L
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zp(x), zp(dt), zp(B), zp(C)
+    s = s0 + pad
+    g, n = B.shape[2], B.shape[3]
+    nc = s // L
+    rep = h // g
+
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, g, n)
+    Cc = C.reshape(b, nc, L, g, n)
+    dA = dtc * A  # (b,nc,L,h)
+
+    # ---- intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))       # (b,nc,h,L,L)
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)
+    scores = jnp.repeat(scores, rep, axis=2)                 # groups -> heads
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp",
+                        scores * Lmat.astype(scores.dtype), xdt)
+
+    # ---- per-chunk states
+    dA_cs = jnp.cumsum(dA, axis=2)                           # (b,nc,L,h)
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,nc,L,h)
+    states = jnp.einsum("bclgn,bclhp->bchpn",
+                        jnp.repeat(Bc, rep, axis=3),
+                        xdt * decay_to_end[..., None])
+
+    # ---- inter-chunk recurrence (f32 state for stability and a uniform
+    # carry dtype regardless of the activation dtype)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (b,nc,h)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hT, hprevs = jax.lax.scan(step,
+                              h0,
+                              (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+                               jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1).astype(x.dtype)      # (b,nc,h,p,n)
+
+    # ---- off-diagonal contribution
+    decay_in = jnp.exp(dA_cs)                                # (b,nc,L,h)
+    y_off = jnp.einsum("bclgn,bchpn->bclhp",
+                       jnp.repeat(Cc, rep, axis=3), hprevs)
+    y_off = y_off * decay_in[..., None]
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :s0], hT
+
+
+def _conv1d_causal(u, w, bias):
+    """u (b, s, ch); w (d_conv, ch) depthwise; causal (left) padding."""
+    d_conv = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(up[:, i : i + u.shape[1], :] * w[i] for i in range(d_conv))
+    return out + bias
+
+
+def mamba_block(x, p, cfg: ModelConfig):
+    """Full-sequence mamba2 mixer. Returns (y (b,s,D), (conv_state, ssm_state))."""
+    s = cfg.ssm
+    b, S, D = x.shape
+    d_inner = s.expand * D
+    nh = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, Bf, Cf, dt = jnp.split(
+        zxbcdt, np.cumsum([d_inner, d_inner, gN, gN]).tolist(), axis=-1)
+    conv_in = jnp.concatenate([xin, Bf, Cf], axis=-1)
+    conv_out = jax.nn.silu(_conv1d_causal(conv_in, p["conv_w"], p["conv_b"]))
+    xin, Bf, Cf = jnp.split(conv_out, np.cumsum([d_inner, gN]).tolist(), -1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                  # (b,s,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (nh,)
+    xh = xin.reshape(b, S, nh, s.head_dim)
+    xh = constrain(xh, "batch", None, "heads", None)
+    Bh = Bf.reshape(b, S, s.n_groups, s.d_state)
+    Ch = Cf.reshape(b, S, s.n_groups, s.d_state)
+    y, hT = ssd_chunked(xh, dt.astype(jnp.float32), A, Bh, Ch, s.chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, S, d_inner)
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    conv_state = conv_in[:, -(s.d_conv - 1):, :] if S >= s.d_conv - 1 else \
+        jnp.pad(conv_in, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0)))
+    return constrain(out, "batch", None, None), (conv_state, hT)
+
+
+def mamba_decode(x, p, cfg: ModelConfig, conv_state, ssm_state):
+    """One-token decode. x (b, 1, D); conv_state (b, d_conv-1, ch);
+    ssm_state (b, nh, hp, n)."""
+    s = cfg.ssm
+    b, _, D = x.shape
+    d_inner = s.expand * D
+    nh = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    z, xin, Bf, Cf, dt = jnp.split(
+        zxbcdt, np.cumsum([d_inner, d_inner, gN, gN]).tolist(), axis=-1)
+    conv_in = jnp.concatenate([xin, Bf, Cf], axis=-1)        # (b, ch)
+    hist = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)
+    w = p["conv_w"]                                          # (d_conv, ch)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"])
+    xin, Bf, Cf = jnp.split(conv_out, np.cumsum([d_inner, gN]).tolist(), -1)
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)  # (b, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, nh, s.head_dim)
+    Bh = Bf.reshape(b, s.n_groups, s.d_state)
+    Ch = Cf.reshape(b, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    dA = jnp.exp(dt * A)                                     # (b, nh)
+    upd = (jnp.repeat(Bh, rep, axis=1)[:, :, None, :]        # (b,nh,1,n)
+           * (xh * dt[..., None])[..., None])                # (b,nh,hp,n)
+    ssm_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state.astype(jnp.float32),
+                   jnp.repeat(Ch, rep, axis=1).astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, (hist[:, 1:, :], ssm_state)
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    ch = d_inner + 2 * s.n_groups * s.d_state
+    return ((batch, s.d_conv - 1, ch), (batch, nh, s.head_dim, s.d_state))

@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, adamw_update, init_opt_state, opt_logical_axes  # noqa: F401

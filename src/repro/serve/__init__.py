@@ -1,0 +1,1 @@
+from .generate import generate  # noqa: F401

@@ -1,0 +1,51 @@
+"""Serving loop: prefill once, then token-by-token decode.
+
+The shapes here are the runtime counterparts of the dry-run's prefill_32k /
+decode_32k cells: ``prefill`` builds the ring/latent/SSM caches in one pass,
+``decode_step`` continues at pos = S. Greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+
+__all__ = ["generate"]
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *,
+             max_new_tokens: int, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None,
+             batch: Optional[dict] = None) -> jax.Array:
+    """prompt (B, S) int32 -> generated (B, max_new_tokens) int32."""
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only; no decode step")
+    B, S = prompt.shape
+    full = dict(batch or {})
+    full["tokens"] = prompt
+    logits, cache = M.prefill(params, cfg, full,
+                              cache_len=S + max_new_tokens)
+
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+
+    def pick(lg, key):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, lg[:, -1].astype(jnp.float32) / temperature).astype(jnp.int32)
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = []
+    key, sub = jax.random.split(rng)
+    cur = pick(logits, sub)[:, None]
+    for t in range(S, S + max_new_tokens):
+        out.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(t))
+        key, sub = jax.random.split(key)
+        cur = pick(logits, sub)[:, None]
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,64 @@
+"""Training step: microbatched gradient accumulation + AdamW.
+
+The microbatch loop is a lax.scan over equal slices of the global batch —
+grads accumulate in f32, so the HLO contains exactly one optimizer update
+and `n_micro` forward/backward bodies (remat policy applies inside each).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def _split_micro(batch: Dict[str, Any], n: int):
+    def r(x):
+        b = x.shape[0]
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    n_micro: int = 1):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                loss, _, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / n_micro), None
+
+            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), micro)
+            metrics = {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,35 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run launcher sets its own
+# XLA_FLAGS before any jax import — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.khi import KHIIndex, KHIConfig
+from repro.data import make_dataset, make_queries, DatasetSpec
+
+_TINY = DatasetSpec("tiny", n=1200, d=24, m=3, seed=0,
+                    attr_kinds=("year", "lognormal", "uniform"),
+                    attr_corr=0.6, n_clusters=16)
+
+
+@pytest.fixture(scope="session")
+def tiny_data():
+    return make_dataset(_TINY)
+
+
+@pytest.fixture(scope="session")
+def tiny_index(tiny_data):
+    vecs, attrs = tiny_data
+    return KHIIndex.build(vecs, attrs, KHIConfig(M=16, merge_chunk=32))
+
+
+@pytest.fixture(scope="session")
+def tiny_queries(tiny_data):
+    vecs, attrs = tiny_data
+    return make_queries(vecs, attrs, n_queries=24, sigma=1 / 16, seed=7)

@@ -1,0 +1,66 @@
+"""Baseline correctness: in-range guarantees + sanity recall ordering."""
+
+import numpy as np
+import pytest
+
+from repro.core import query_ref as qr
+from repro.core.baselines import IRangeGraph, Postfiltering, Prefiltering
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_data):
+    vecs, attrs = tiny_data
+    from repro.data import make_queries
+    Q, preds = make_queries(vecs, attrs, n_queries=16, sigma=1 / 16, seed=3)
+    irg = IRangeGraph.build(vecs, attrs, M=16, builder="bulk")
+    pre = Prefiltering.build(vecs, attrs)
+    post = Postfiltering.build(vecs, attrs, M=16)
+    return vecs, attrs, Q, preds, irg, pre, post
+
+
+def test_prefiltering_is_exact(setup):
+    vecs, attrs, Q, preds, irg, pre, post = setup
+    for q, p in zip(Q, preds):
+        gt = qr.brute_force(vecs, attrs, q, p, 10)
+        got = pre.query(q, p, 10)
+        assert got.tolist() == gt.tolist()
+
+
+def test_irange_in_range_only(setup):
+    vecs, attrs, Q, preds, irg, pre, post = setup
+    for q, p in zip(Q, preds):
+        got = irg.query(q, p, 10, ef=48)
+        assert all(p.matches(attrs[g]) for g in got)
+
+
+def test_postfilter_in_range_only(setup):
+    vecs, attrs, Q, preds, irg, pre, post = setup
+    for q, p in zip(Q, preds):
+        got = post.query(q, p, 10, ef=64)
+        assert all(p.matches(attrs[g]) for g in got)
+
+
+def test_irange_reasonable_recall(setup):
+    vecs, attrs, Q, preds, irg, pre, post = setup
+    recalls = []
+    for q, p in zip(Q, preds):
+        gt = qr.brute_force(vecs, attrs, q, p, 10)
+        got = irg.query(q, p, 10, ef=96)
+        if len(gt):
+            recalls.append(len(set(gt.tolist()) & set(got.tolist()))
+                           / min(10, len(gt)))
+    assert np.mean(recalls) >= 0.6
+
+
+def test_segment_tree_structure(setup):
+    vecs, attrs, Q, preds, irg, pre, post = setup
+    t = irg.tree
+    t.validate()
+    vals = attrs[:, irg.index_attr]
+    # segments are contiguous in sorted order of the indexed attribute
+    for p in range(min(t.num_nodes, 64)):
+        objs = t.node_objects(p)
+        seg = np.sort(vals[objs])
+        lo_r = int(t.start[p])
+        hi_r = lo_r + int(t.count[p])
+        np.testing.assert_array_equal(seg, irg.sorted_vals[lo_r:hi_r])

@@ -1,0 +1,65 @@
+"""Elastic scaling + recovery tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint, load_checkpoint
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core import query_ref as qr
+from repro.data import make_queries
+from repro.distributed import elastic_reshard, reshard_checkpoint, shard_assignments
+
+
+def test_assignments_partition():
+    a = shard_assignments(100, 7)
+    assert len(a) == 100
+    for s in range(7):
+        assert (a == s).sum() in (14, 15)
+
+
+def test_elastic_4_to_8_preserves_quality(tiny_data):
+    vecs, attrs = tiny_data
+    cfg = KHIConfig(M=16, builder="bulk")
+    old = {s: KHIIndex.build(vecs[shard_assignments(len(vecs), 4) == s],
+                             attrs[shard_assignments(len(vecs), 4) == s], cfg)
+           for s in range(4)}
+    new = elastic_reshard(vecs, attrs, old, 4, 8, cfg)
+    assert len(new) == 8
+    # merged results across new shards ~ global ground truth
+    Q, preds = make_queries(vecs, attrs, n_queries=8, sigma=1 / 16, seed=5)
+    recalls = []
+    for q, p in zip(Q, preds):
+        cands = []
+        for s, idx in new.items():
+            ids_local = qr.query(idx, q, p, 10, ef=48)
+            gids = np.nonzero(shard_assignments(len(vecs), 8) == s)[0]
+            cands.extend(gids[ids_local].tolist())
+        gt = qr.brute_force(vecs, attrs, q, p, 10)
+        if len(gt) == 0:
+            continue
+        d2 = np.einsum("nd,nd->n", vecs[cands] - q, vecs[cands] - q)
+        top = [cands[i] for i in np.argsort(d2)[:10]]
+        recalls.append(len(set(top) & set(gt.tolist())) / min(10, len(gt)))
+    assert np.mean(recalls) >= 0.9
+
+
+def test_noop_reshard_reuses_shards(tiny_data):
+    vecs, attrs = tiny_data
+    cfg = KHIConfig(M=8, builder="bulk")
+    old = {s: KHIIndex.build(vecs[shard_assignments(len(vecs), 2) == s],
+                             attrs[shard_assignments(len(vecs), 2) == s], cfg)
+           for s in range(2)}
+    new = elastic_reshard(vecs, attrs, old, 2, 2, cfg)
+    assert new[0] is old[0] and new[1] is old[1]
+
+
+def test_reshard_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones(4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    arrays, _ = load_checkpoint(str(tmp_path))
+    out = reshard_checkpoint(
+        arrays, lambda: {"w": jnp.zeros((8, 8)), "b": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))

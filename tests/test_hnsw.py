@@ -1,0 +1,108 @@
+"""Graph construction invariants (paper Algorithm 5 + Lemma 2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import hnsw
+from repro.core.khi import KHIIndex, KHIConfig
+from repro.core.tree import build_tree
+
+
+def test_degree_bound(tiny_index):
+    assert (tiny_index.nbrs >= -1).all()
+    assert (tiny_index.nbrs < tiny_index.n).all()
+    # max degree M everywhere (Lemma 2's M bound)
+    occupied = (tiny_index.nbrs >= 0).sum(axis=-1)
+    assert occupied.max() <= tiny_index.config.M
+
+
+def test_rows_defined_exactly_on_path(tiny_index):
+    """Object o has a (possibly empty) row at level l iff path[o, l] >= 0;
+    rows past the leaf stay -1 (Lemma 2: one graph per level per object)."""
+    t = tiny_index.tree
+    for lvl in range(tiny_index.height):
+        dead = t.path[:, lvl] < 0
+        assert (tiny_index.nbrs[lvl][dead] == -1).all()
+
+
+def test_neighbors_stay_in_node(tiny_index):
+    """Edges never leave the tree node's object set."""
+    t = tiny_index.tree
+    rng = np.random.default_rng(0)
+    for lvl in rng.choice(tiny_index.height, size=min(4, tiny_index.height),
+                          replace=False):
+        for o in rng.choice(tiny_index.n, size=50, replace=False):
+            p = t.path[o, lvl]
+            if p < 0:
+                continue
+            members = set(t.node_objects(int(p)).tolist())
+            row = tiny_index.nbrs[lvl, o]
+            for v in row[row >= 0]:
+                assert int(v) in members
+
+
+def test_no_self_loops_no_dups(tiny_index):
+    for lvl in range(tiny_index.height):
+        rows = tiny_index.nbrs[lvl]
+        n = rows.shape[0]
+        ids = np.arange(n)[:, None]
+        assert not (rows == ids).any(), "self loop"
+        srt = np.sort(rows, axis=1)
+        dup = (srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] >= 0)
+        assert not dup.any(), "duplicate neighbor"
+
+
+def test_rng_prune_shielding():
+    """Kept neighbor e must not be shielded: no kept r with d(e,r) < d(e,o)."""
+    rng = np.random.default_rng(3)
+    vecs = rng.standard_normal((64, 8)).astype(np.float32)
+    o = 0
+    cand = np.arange(1, 64, dtype=np.int32)
+    d = np.einsum("nd,nd->n", vecs[cand] - vecs[o], vecs[cand] - vecs[o])
+    kept = hnsw.rng_prune(vecs, o, cand, d, max_degree=8)
+    assert len(kept) <= 8
+    for i, e in enumerate(kept):
+        de_o = np.sum((vecs[e] - vecs[o]) ** 2)
+        for r in kept[:i]:
+            de_r = np.sum((vecs[e] - vecs[r]) ** 2)
+            assert de_r >= de_o - 1e-5, "shielded neighbor survived pruning"
+
+
+def test_greedy_search_finds_near_exact_on_full_graph():
+    rng = np.random.default_rng(4)
+    n, d = 400, 16
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.random((n, 2)).astype(np.float32)
+    tree = build_tree(attrs)
+    nbrs = hnsw.build_graphs_bulk(tree, vecs, M=16)
+    root_lvl = 0
+    q = rng.standard_normal((8, d)).astype(np.float32)
+    ids, dists = hnsw.greedy_search_batch(
+        vecs, nbrs[root_lvl], q, np.zeros(8, np.int32), ef=32)
+    for b in range(8):
+        d2 = np.einsum("nd,nd->n", vecs - q[b], vecs - q[b])
+        gt = set(np.argsort(d2)[:10].tolist())
+        got = set(ids[b][ids[b] >= 0].tolist())
+        assert len(gt & got) >= 8, "greedy search far from exact 10-NN"
+
+
+def test_sequential_vs_chunked_merge_quality(tiny_data):
+    """Chunked (intra-node-parallel analog) build must not collapse quality:
+    both graphs give comparable exact-NN agreement on the root level."""
+    vecs, attrs = tiny_data
+    from repro.core import query_ref as qr
+    idx_seq = KHIIndex.build(vecs[:400], attrs[:400],
+                             KHIConfig(M=8, merge_chunk=1))
+    idx_chk = KHIIndex.build(vecs[:400], attrs[:400],
+                             KHIConfig(M=8, merge_chunk=64))
+    # compare root-graph out-degree and reachability proxies
+    for idx in (idx_seq, idx_chk):
+        deg = (idx.nbrs[0] >= 0).sum(axis=1)
+        assert deg.mean() > 2.0
+
+
+def test_space_complexity_lemma2(tiny_index):
+    """Total occupied slots <= n * M * height (Lemma 2)."""
+    occ = int((tiny_index.nbrs >= 0).sum())
+    bound = tiny_index.n * tiny_index.config.M * tiny_index.height
+    assert occ <= bound

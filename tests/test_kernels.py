@@ -1,0 +1,85 @@
+"""Per-kernel allclose vs the pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests (interpret=True on CPU)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import gather_l2_ref, l2dist_qc_ref, l2dist_qn_ref
+
+SHAPES_QN = [(1, 1, 8), (8, 128, 128), (5, 100, 96), (17, 257, 384),
+             (8, 128, 130), (3, 7, 1024)]
+SHAPES_QC = [(1, 1, 8), (8, 128, 128), (5, 33, 96), (9, 130, 257)]
+DTYPES = [np.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("B,N,D", SHAPES_QN)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_l2dist_qn_sweep(B, N, D, dtype):
+    rng = np.random.default_rng(B * 1000 + N + D)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=dtype)
+    c = jnp.asarray(rng.standard_normal((N, D)), dtype=dtype)
+    got = ops.l2dist(q, c, interpret=True)
+    want = l2dist_qn_ref(q, c)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * D)
+
+
+@pytest.mark.parametrize("B,C,D", SHAPES_QC)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_l2dist_qc_sweep(B, C, D, dtype):
+    rng = np.random.default_rng(B * 999 + C + D)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=dtype)
+    c = jnp.asarray(rng.standard_normal((B, C, D)), dtype=dtype)
+    got = ops.l2dist(q, c, interpret=True)
+    want = l2dist_qc_ref(q, c)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * D)
+
+
+@pytest.mark.parametrize("B,C,N,D", [(1, 1, 4, 8), (4, 8, 64, 64),
+                                     (3, 5, 33, 96)])
+def test_gather_l2_sweep(B, C, N, D):
+    rng = np.random.default_rng(B + C + N + D)
+    idx = jnp.asarray(rng.integers(0, N, (B, C)), dtype=jnp.int32)
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    got = ops.gather_l2(idx, corpus, q, interpret=True)
+    want = gather_l2_ref(idx, corpus, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 12), N=st.integers(1, 140), D=st.integers(1, 260),
+       seed=st.integers(0, 2**16))
+def test_l2dist_qn_property(B, N, D, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    c = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    got = np.asarray(ops.l2dist(q, c, interpret=True))
+    want = np.asarray(l2dist_qn_ref(q, c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3 * D)
+    assert (got >= -1e-3).all(), "squared distances must be nonnegative"
+
+
+def test_identity_rows_give_zero():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 64)), dtype=jnp.float32)
+    d = np.asarray(ops.l2dist(x, x, interpret=True))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+
+def test_qc_consistent_with_qn():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((4, 96)), dtype=jnp.float32)
+    c = jnp.asarray(rng.standard_normal((32, 96)), dtype=jnp.float32)
+    qn = np.asarray(ops.l2dist(q, c, interpret=True))
+    cc = jnp.broadcast_to(c[None], (4, 32, 96))
+    qc = np.asarray(ops.l2dist(q, cc, interpret=True))
+    np.testing.assert_allclose(qn, qc, rtol=1e-4, atol=1e-2)

@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (reduced configs) + consistency checks."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as M
+
+
+def _batch_for(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   dtype=jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)),
+            dtype=cfg.jdtype)
+        batch["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (B, 3, S))
+    if cfg.frontend == "audio":
+        batch["features"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.frontend_dim)), dtype=cfg.jdtype)
+        batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                       dtype=jnp.int32)
+        batch["mask"] = jnp.asarray(rng.random((B, S)) < 0.3)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one grad step on CPU: shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits, aux = jax.jit(lambda p, b: M.forward(p, cfg, b))(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    (loss, _), grads = jax.jit(jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch), has_aux=True))(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "hubert-xlarge"])
+def test_decode_matches_forward(arch):
+    """Sequential decode reproduces teacher-forced forward logits — for SSM
+    archs this pins the chunked SSD math to the step recurrence."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S, seed=1)
+    if cfg.frontend == "vision":
+        # decode path has no patch stream; compare on pure-text input
+        batch.pop("patches")
+    fwd_logits, _ = jax.jit(lambda p, b: M.forward(p, cfg, b))(params, batch)
+
+    cache = M.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+    errs = []
+    for t in range(S):
+        lg, cache = step(params, cache, batch["tokens"][:, t : t + 1],
+                         jnp.int32(t))
+        a = np.asarray(lg[:, 0], np.float32)
+        b = np.asarray(fwd_logits[:, t], np.float32)
+        errs.append(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6))
+    assert max(errs) < 5e-2, f"decode/forward divergence {max(errs)}"
+
+
+def test_sliding_window_masks_history():
+    """gemma3 local layers: tokens beyond the window cannot influence the
+    output (teacher-forced forward)."""
+    cfg = get_smoke_config("gemma3-4b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    S = 24
+    t1 = rng.integers(0, cfg.vocab, (1, S))
+    t2 = t1.copy()
+    t2[0, 0] = (t2[0, 0] + 7) % cfg.vocab  # perturb far-past token
+    # NOTE: smoke config has window=8 locals and one global layer; the global
+    # layer propagates everything, so test a local-only variant.
+    import dataclasses
+    from repro.models.config import LayerSpec, Stage
+    # single local layer: receptive field of position p is [p-7, p], so the
+    # perturbation at position 0 cannot reach any position >= 8
+    cfg2 = dataclasses.replace(
+        cfg, stages=(Stage(1, (LayerSpec("attn", 8, "dense"),)),))
+    params2 = M.init_params(cfg2, jax.random.PRNGKey(2))
+    l1, _ = M.forward(params2, cfg2, {"tokens": jnp.asarray(t1)})
+    l2, _ = M.forward(params2, cfg2, {"tokens": jnp.asarray(t2)})
+    np.testing.assert_allclose(np.asarray(l1[0, 8:], np.float32),
+                               np.asarray(l2[0, 8:], np.float32),
+                               rtol=1e-4, atol=1e-4)
+    assert not np.allclose(np.asarray(l1[0, 1], np.float32),
+                           np.asarray(l2[0, 1], np.float32))
+
+
+def test_moe_routes_to_multiple_experts():
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    from repro.models import layers as L
+    rng = np.random.default_rng(3)
+    p = M.init_params(cfg, jax.random.PRNGKey(3))
+    moe_p = jax.tree.map(lambda x: x[0], p["stages"][0]["l0"]["moe"])
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y, aux = L.moe_ffn(x, moe_p, cfg.moe)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+
+
+def test_encoder_only_is_bidirectional():
+    """hubert: flipping a future frame changes earlier outputs."""
+    cfg = get_smoke_config("hubert-xlarge")
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    f1 = rng.standard_normal((1, 16, cfg.frontend_dim)).astype(np.float32)
+    f2 = f1.copy()
+    f2[0, -1] += 10.0
+    l1, _ = M.forward(params, cfg, {"features": jnp.asarray(f1)})
+    l2, _ = M.forward(params, cfg, {"features": jnp.asarray(f2)})
+    assert not np.allclose(np.asarray(l1[0, 0], np.float32),
+                           np.asarray(l2[0, 0], np.float32))
+
+
+def test_full_config_param_counts_match_names():
+    """Analytic counts from eval_shape should land near the published sizes."""
+    expect = {"gemma3-4b": (4.0, 5.1), "phi3-mini-3.8b": (3.5, 4.2),
+              "minicpm3-4b": (3.8, 4.7), "qwen1.5-4b": (3.5, 4.4),
+              "jamba-v0.1-52b": (48, 56), "qwen2-vl-72b": (68, 76),
+              "phi3.5-moe-42b-a6.6b": (39, 45), "mamba2-780m": (0.7, 0.9),
+              "granite-moe-3b-a800m": (2.8, 3.8), "hubert-xlarge": (0.9, 1.4)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    na = cfg.n_active_params() / 1e9
+    assert 5.5 <= na <= 7.5, na

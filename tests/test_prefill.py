@@ -1,0 +1,59 @@
+"""Prefill -> decode continuation consistency: prefill(S tokens) then
+decode_step at pos=S must equal teacher-forced forward over S+1 tokens —
+this pins the ring-rotation math for windowed caches and the latent/SSM
+state handoff."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+
+ARCHS = ["gemma3-4b", "phi3-mini-3.8b", "minicpm3-4b", "mamba2-780m",
+         "jamba-v0.1-52b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    B, S = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+
+    # ground truth: teacher-forced forward over S+1 tokens
+    full_logits, _ = M.forward(params, cfg, {"tokens": toks})
+
+    # prefill on the first S tokens, then one decode step at pos = S
+    logits_p, cache = M.prefill(params, cfg, {"tokens": toks[:, :S]},
+                                cache_len=S + 8)
+    a = np.asarray(logits_p[:, 0], np.float32)
+    b = np.asarray(full_logits[:, S - 1], np.float32)
+    np.testing.assert_allclose(a, b, rtol=5e-2, atol=5e-3)
+
+    logits_d, _ = M.decode_step(params, cfg, cache, toks[:, S:S + 1],
+                                jnp.int32(S))
+    a = np.asarray(logits_d[:, 0], np.float32)
+    b = np.asarray(full_logits[:, S], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+    assert err < 5e-2, f"{arch}: prefill->decode diverges {err}"
+
+
+def test_prefill_ring_cache_shapes():
+    cfg = get_smoke_config("gemma3-4b")  # has window=8 local layers
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 24)), jnp.int32)
+    _, cache = M.prefill(params, cfg, {"tokens": toks})
+    specs = [l for st in cfg.stages for l in st.body]
+    # window layers carry window-sized ring caches, global layers full-S
+    stage0 = cache[0]
+    for j, spec in enumerate(cfg.stages[0].body):
+        T = stage0[f"l{j}"]["k"].shape[2]
+        if spec.window and spec.window < 24:
+            assert T == spec.window
+        else:
+            assert T == 24

@@ -1,0 +1,114 @@
+"""Query correctness: Algorithms 1-3 reference engine + jitted engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import query_ref as qr
+from repro.core import engine as eng
+from repro.core.khi import KHIIndex, KHIConfig
+from repro.data import make_dataset, make_queries, DatasetSpec
+
+
+def _recall(gt, got, k):
+    if len(gt) == 0:
+        return None
+    return len(set(gt.tolist()) & set(got)) / min(k, len(gt))
+
+
+def test_in_range_guarantee(tiny_index, tiny_queries):
+    """Hard invariant: every returned object satisfies B (the paper's
+    in-filtering property — KHI never returns out-of-range results)."""
+    Q, preds = tiny_queries
+    for q, p in zip(Q, preds):
+        got = qr.query(tiny_index, q, p, 10, ef=48)
+        assert all(p.matches(tiny_index.attrs[g]) for g in got)
+
+
+def test_reference_recall_floor(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    recalls = []
+    for q, p in zip(Q, preds):
+        gt = qr.brute_force(tiny_index.vecs, tiny_index.attrs, q, p, 10)
+        got = qr.query(tiny_index, q, p, 10, ef=96)
+        r = _recall(gt, got.tolist(), 10)
+        if r is not None:
+            recalls.append(r)
+    assert np.mean(recalls) >= 0.9, f"recall {np.mean(recalls)}"
+
+
+def test_empty_filter_returns_empty(tiny_index):
+    p = qr.Predicate.from_bounds(tiny_index.m, {0: (1e9, 2e9)})
+    got = qr.query(tiny_index, tiny_index.vecs[0], p, 10)
+    assert len(got) == 0
+
+
+def test_unconstrained_predicate_matches_plain_ann(tiny_index):
+    """|B|=0 edge: trivial predicate — search degenerates to plain ANN."""
+    p = qr.Predicate.from_bounds(tiny_index.m, {})
+    q = tiny_index.vecs[7] + 0.05
+    got = qr.query(tiny_index, q, p, 5, ef=64)
+    gt = qr.brute_force(tiny_index.vecs, tiny_index.attrs, q, p, 5)
+    assert len(set(got.tolist()) & set(gt.tolist())) >= 4
+
+
+def test_jit_engine_matches_reference(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    params = eng.SearchParams(k=10, ef=48, c_e=10, c_n=tiny_index.config.M)
+    ids, dists, hops = eng.search_batch(tiny_index, Q, preds, params)
+    agree = []
+    for i, (q, p) in enumerate(zip(Q, preds)):
+        ref = qr.query(tiny_index, q, p, 10, ef=48, scan_budget=params.scan_budget)
+        got = [x for x in ids[i].tolist() if x >= 0]
+        assert all(p.matches(tiny_index.attrs[g]) for g in got)
+        agree.append(len(set(ref.tolist()) & set(got)) / max(len(ref), 1))
+    assert np.mean(agree) >= 0.95, f"jit/ref agreement {np.mean(agree)}"
+
+
+def test_jit_dists_are_correct(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    params = eng.SearchParams(k=5, ef=32)
+    ids, dists, _ = eng.search_batch(tiny_index, Q, preds, params)
+    for i in range(len(Q)):
+        for j in range(5):
+            o = ids[i, j]
+            if o < 0:
+                continue
+            d2 = float(np.sum((tiny_index.vecs[o] - Q[i]) ** 2))
+            np.testing.assert_allclose(dists[i, j], d2, rtol=1e-4)
+
+
+def test_jit_results_sorted(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    ids, dists, _ = eng.search_batch(tiny_index, Q, preds,
+                                     eng.SearchParams(k=10, ef=48))
+    finite = np.where(ids >= 0, dists, np.inf)
+    assert (np.diff(finite, axis=1) >= -1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma_i=st.sampled_from([4, 6]), card=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_in_range_property(tiny_index, sigma_i, card, seed):
+    """Property: for random predicates of any selectivity/cardinality, all
+    results are in range and are a subset of O_B's true members."""
+    vecs, attrs = tiny_index.vecs, tiny_index.attrs
+    Q, preds = make_queries(vecs, attrs, n_queries=2, sigma=1 / 2 ** sigma_i,
+                            cardinality=card, seed=seed)
+    for q, p in zip(Q, preds):
+        got = qr.query(tiny_index, q, p, 10, ef=32)
+        assert all(p.matches(attrs[g]) for g in got)
+
+
+def test_save_load_roundtrip(tmp_path, tiny_index, tiny_queries):
+    f = str(tmp_path / "idx.npz")
+    tiny_index.save(f)
+    idx2 = KHIIndex.load(f)
+    assert (idx2.nbrs == tiny_index.nbrs).all()
+    assert (idx2.tree.path == tiny_index.tree.path).all()
+    Q, preds = tiny_queries
+    a = qr.query(tiny_index, Q[0], preds[0], 10)
+    b = qr.query(idx2, Q[0], preds[0], 10)
+    assert a.tolist() == b.tolist()

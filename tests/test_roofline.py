@@ -1,0 +1,94 @@
+"""HLO cost analyzer + roofline-term tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_cost, roofline
+
+
+def test_scan_flops_trip_corrected():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((10, 128, 128))
+
+    def one(x, wi):
+        return jnp.tanh(x @ wi), None
+
+    c = jax.jit(lambda x, w: jax.lax.scan(one, x, w)[0]).lower(x, w).compile()
+    a = hlo_cost.analyze(c.as_text())
+    expect = 10 * 2 * 128 ** 3
+    assert a.flops == pytest.approx(expect, rel=0.01)
+    assert a.max_trip_product == 10
+
+
+def test_nested_scan_flops():
+    x = jnp.ones((64, 64))
+
+    def inner(x, wi):
+        return x @ wi, None
+
+    def outer(x, ws):
+        return jax.lax.scan(inner, x, ws)[0], None
+
+    w = jnp.ones((4, 3, 64, 64))
+    c = jax.jit(lambda x, w: jax.lax.scan(outer, x, w)[0]).lower(x, w).compile()
+    a = hlo_cost.analyze(c.as_text())
+    assert a.flops == pytest.approx(12 * 2 * 64 ** 3, rel=0.01)
+    assert a.max_trip_product == 12
+
+
+def test_raw_cost_analysis_undercounts_scans():
+    """The reason hlo_cost exists: XLA counts while bodies once."""
+    x = jnp.ones((128, 128))
+    w = jnp.ones((10, 128, 128))
+
+    def one(x, wi):
+        return x @ wi, None
+
+    c = jax.jit(lambda x, w: jax.lax.scan(one, x, w)[0]).lower(x, w).compile()
+    raw = c.cost_analysis().get("flops", 0.0)
+    assert raw == pytest.approx(2 * 128 ** 3, rel=0.05)  # one body only
+
+
+def test_bytes_reasonable_for_matmul():
+    a = jnp.ones((512, 512))
+    c = jax.jit(lambda a, b: a @ b).lower(a, a).compile()
+    got = hlo_cost.analyze(c.as_text()).bytes_accessed
+    ideal = 3 * 512 * 512 * 4
+    assert ideal <= got <= 4 * ideal
+
+
+def test_collective_ring_formulas():
+    hlo = """
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[4,8]<=[32], to_apply=%add
+  %ag = f32[1024]{0} all-gather(%ar), replica_groups=[4,8]<=[32], dimensions={0}
+  ROOT %cp = f32[1024]{0} collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+    out = roofline.collective_bytes(hlo)
+    B = 1024 * 4
+    assert out["all-reduce"] == pytest.approx(2 * B * 7 / 8)
+    assert out["all-gather"] == pytest.approx(B * 7 / 8)
+    assert out["collective-permute"] == pytest.approx(B)
+
+
+def test_model_flops_conventions():
+    f = roofline.model_flops("train", n_params=int(1e9), n_active=0,
+                             batch=256, seq=4096)
+    assert f == 6.0 * 1e9 * 256 * 4096
+    f = roofline.model_flops("decode", n_params=int(1e9), n_active=int(2e8),
+                             batch=128, seq=32768)
+    assert f == 2.0 * 2e8 * 128
+
+
+def test_roofline_dominant_term():
+    rl = roofline.terms_from(flops=197e12, bytes_accessed=1e9,
+                             coll_bytes=1e9, n_chips=1,
+                             model_flops_global=100e12)
+    assert rl.dominant == "compute"
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.useful_fraction == pytest.approx(100 / 197, rel=1e-3)

@@ -1,0 +1,77 @@
+"""Distributed (corpus-sharded) search tests — emulated on one device."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import query_ref as qr
+from repro.core.engine import SearchParams
+from repro.core.khi import KHIConfig
+from repro.core.sharded import (ShardedKHI, _merge_topk, build_sharded,
+                                search_sharded_emulated)
+from repro.data import make_queries
+
+
+@pytest.fixture(scope="module")
+def sharded(tiny_data):
+    vecs, attrs = tiny_data
+    return build_sharded(vecs, attrs, 4, KHIConfig(M=16, builder="bulk"))
+
+
+def test_global_id_recovery(sharded, tiny_data):
+    """Round-robin inverse: shard s local j -> global j*S + s."""
+    vecs, attrs = tiny_data
+    S = sharded.num_shards
+    for s in range(S):
+        gvecs = np.asarray(sharded.di.vecs[s])
+        ids = np.arange(s, len(vecs), S)
+        np.testing.assert_allclose(gvecs[: len(ids)], vecs[ids], rtol=1e-6)
+
+
+def test_sharded_recall_matches_single(tiny_data, sharded):
+    vecs, attrs = tiny_data
+    Q, preds = make_queries(vecs, attrs, n_queries=12, sigma=1 / 16, seed=9)
+    qlo = np.stack([p.lo for p in preds])
+    qhi = np.stack([p.hi for p in preds])
+    ids, dists, hops = search_sharded_emulated(
+        sharded, Q, qlo, qhi, SearchParams(k=10, ef=48, c_n=16))
+    ids = np.asarray(ids)
+    recalls = []
+    for i, (q, p) in enumerate(zip(Q, preds)):
+        gt = qr.brute_force(vecs, attrs, q, p, 10)
+        got = [x for x in ids[i].tolist() if x >= 0]
+        assert all(p.matches(attrs[g]) for g in got), "in-range violation"
+        if len(gt):
+            recalls.append(len(set(gt.tolist()) & set(got))
+                           / min(10, len(gt)))
+    assert np.mean(recalls) >= 0.9
+
+
+def test_merge_topk_correct():
+    rng = np.random.default_rng(0)
+    S, B, k = 4, 3, 5
+    gids = rng.integers(0, 1000, (S, B, k)).astype(np.int32)
+    dists = rng.random((S, B, k)).astype(np.float32)
+    mi, md = _merge_topk(jax.numpy.asarray(gids), jax.numpy.asarray(dists), k)
+    mi, md = np.asarray(mi), np.asarray(md)
+    for b in range(B):
+        flat = sorted(zip(dists[:, b].ravel(), gids[:, b].ravel()))
+        want = [d for d, _ in flat[:k]]
+        np.testing.assert_allclose(np.sort(md[b]), want, rtol=1e-6)
+
+
+def test_results_sorted_and_dedup_free(sharded, tiny_data):
+    vecs, attrs = tiny_data
+    Q, preds = make_queries(vecs, attrs, n_queries=6, sigma=1 / 16, seed=4)
+    qlo = np.stack([p.lo for p in preds])
+    qhi = np.stack([p.hi for p in preds])
+    ids, dists, _ = search_sharded_emulated(
+        sharded, Q, qlo, qhi, SearchParams(k=10, ef=48, c_n=16))
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    for i in range(len(Q)):
+        valid = ids[i] >= 0
+        vi = ids[i][valid]
+        assert len(set(vi.tolist())) == len(vi), "duplicate result ids"
+        dv = dists[i][valid]
+        assert (np.diff(dv) >= -1e-5).all(), "results not sorted"

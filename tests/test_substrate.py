@@ -1,0 +1,170 @@
+"""Optimizer / checkpoint / data-pipeline / compression tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                              restore_into, save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.data.lm import lm_batch
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.train import make_train_step
+from repro.train.compressed import dequantize_int8, quantize_int8
+
+
+# ----------------------------------------------------------------- optimizer
+
+def test_adamw_reduces_quadratic_loss():
+    w = jnp.asarray([3.0, -2.0, 1.0])
+    params = {"w": w}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.sum(params["w"] ** 2)) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=0, total_steps=10,
+                      grad_clip=1.0, weight_decay=0.0)
+    grads = {"w": jnp.full(4, 1e6)}
+    _, _, m = adamw_update(params, grads, state, cfg)
+    assert float(m["grad_norm"]) > 1e5  # raw norm reported
+
+
+def test_schedule_warmup_and_decay():
+    from repro.optim.adamw import schedule
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(
+        cfg.min_lr_ratio, rel=1e-2)
+
+
+def test_train_step_microbatch_equivalence():
+    """n_micro=1 vs n_micro=4 must produce (nearly) identical updates."""
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    batch = {k: jnp.asarray(v) for k, v in lm_batch(
+        cfg, batch=8, seq=32, step=0).items()}
+    oc = AdamWConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10)
+    p1, _, m1 = jax.jit(make_train_step(cfg, oc, n_micro=1))(params, opt, batch)
+    p4, _, m4 = jax.jit(make_train_step(cfg, oc, n_micro=4))(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32)},
+            "l": [jnp.zeros(3), jnp.full((2, 2), 7.0)]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t, {"note": "x"})
+    arrays, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] == 5 and meta["note"] == "x"
+    out = restore_into(t, arrays)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, _tree())
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [2, 3]
+
+
+def test_checkpoint_restores_training(tmp_path):
+    """Resume must continue bit-identically (same loss trajectory)."""
+    cfg = get_smoke_config("mamba2-780m")
+    oc = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=20)
+    step_fn = jax.jit(make_train_step(cfg, oc))
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    opt = init_opt_state(params)
+    losses = []
+    for s in range(4):
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(
+            cfg, batch=4, seq=32, step=s).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if s == 1:
+            save_checkpoint(str(tmp_path), 2, {"p": params, "o": opt})
+    arrays, meta = load_checkpoint(str(tmp_path))
+    st = restore_into({"p": params, "o": opt}, arrays)
+    p2, o2 = st["p"], st["o"]
+    for s in range(2, 4):
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(
+            cfg, batch=4, seq=32, step=s).items()}
+        p2, o2, m = step_fn(p2, o2, batch)
+        assert float(m["loss"]) == pytest.approx(losses[s], rel=1e-5)
+
+
+# ---------------------------------------------------------------- data
+
+def test_lm_batch_deterministic_and_sharded():
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    a = lm_batch(cfg, batch=8, seq=16, step=3, seed=1)
+    b = lm_batch(cfg, batch=8, seq=16, step=3, seed=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(cfg, batch=8, seq=16, step=4, seed=1)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host slicing partitions the batch
+    h0 = lm_batch(cfg, batch=8, seq=16, step=3, seed=1, host_id=0, host_count=2)
+    assert h0["tokens"].shape == (4, 16)
+
+
+def test_lm_batch_tokens_in_range():
+    cfg = get_smoke_config("qwen1.5-4b")
+    b = lm_batch(cfg, batch=4, seq=64, step=0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_quantization_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 3.0, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the *sum* of dequantized grads tracks the sum of
+    true grads (residual stays bounded)."""
+    rng = np.random.default_rng(1)
+    g_true = [jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)
+              for _ in range(50)]
+    r = jnp.zeros(64)
+    total_dq = jnp.zeros(64)
+    for g in g_true:
+        v = g + r
+        q, s = quantize_int8(v)
+        dq = dequantize_int8(q, s)
+        r = v - dq
+        total_dq = total_dq + dq
+    total = sum(g_true)
+    np.testing.assert_allclose(np.asarray(total_dq + r),
+                               np.asarray(total), rtol=1e-5, atol=1e-6)
+    assert float(jnp.max(jnp.abs(r))) < 0.01

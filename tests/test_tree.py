@@ -1,0 +1,99 @@
+"""Partition-tree invariants (paper Algorithm 4 + Lemma 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import build_tree
+
+
+def _rand_attrs(rng, n, m, skew=False):
+    if skew:
+        cols = [np.floor(rng.exponential(2.0, n)),          # heavy ties
+                rng.standard_normal(n),
+                np.full(n, 3.0) + (rng.random(n) < 0.01)]   # near-constant
+        out = np.stack(cols[:m] + [rng.random(n)] * max(0, m - 3), axis=1)
+    else:
+        out = rng.random((n, m))
+    return out.astype(np.float32)  # build_tree works in f32; compare in f32
+
+
+def test_basic_invariants():
+    rng = np.random.default_rng(0)
+    t = build_tree(_rand_attrs(rng, 500, 3), tau=3.0, leaf_capacity=2)
+    t.validate()
+    # every object at every defined level is inside its node's rectangle
+    attrs = None  # rectangles are checked through split consistency below
+    # leaves small or fully blacklisted
+    for p in range(t.num_nodes):
+        if t.is_leaf(p):
+            assert t.count[p] <= t.leaf_capacity or t.bl[p] == (1 << t.m) - 1
+
+
+def test_disjoint_cover_per_level():
+    rng = np.random.default_rng(1)
+    attrs = _rand_attrs(rng, 800, 4)
+    t = build_tree(attrs)
+    n = t.n
+    for lvl in range(t.height):
+        nodes = t.path[:, lvl]
+        live = nodes >= 0
+        # objects at this level are partitioned among distinct nodes
+        for p in np.unique(nodes[live]):
+            objs = np.nonzero(nodes == p)[0]
+            assert len(objs) == t.count[p]
+            # all inside rectangle
+            assert (attrs[objs] >= t.lo[p] - 1e-6).all()
+            assert (attrs[objs] <= t.hi[p] + 1e-6).all()
+
+
+def test_split_semantics():
+    rng = np.random.default_rng(2)
+    attrs = _rand_attrs(rng, 600, 3)
+    t = build_tree(attrs)
+    for p in range(t.num_nodes):
+        if t.is_leaf(p):
+            continue
+        d, s = int(t.dim[p]), float(t.split[p])
+        lo_objs = t.node_objects(int(t.left[p]))
+        hi_objs = t.node_objects(int(t.right[p]))
+        assert (attrs[lo_objs, d] <= s).all()
+        assert (attrs[hi_objs, d] > s).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 400), m=st.integers(1, 5),
+       tau=st.floats(1.5, 8.0), seed=st.integers(0, 10_000),
+       skew=st.booleans())
+def test_height_bound_property(n, m, tau, seed, skew):
+    """Lemma 1: #splits along any path <= log_{1/rho}(n / c_l) (+1 slack for
+    the final partial level)."""
+    rng = np.random.default_rng(seed)
+    attrs = _rand_attrs(rng, n, m, skew=skew)
+    t = build_tree(attrs, tau=tau, leaf_capacity=2)
+    t.validate()
+    assert t.height - 1 <= int(np.ceil(t.height_bound())) + 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_balance_threshold_respected(seed):
+    """Every accepted split satisfies tau * min > max (Alg. 4 line 13)."""
+    rng = np.random.default_rng(seed)
+    attrs = _rand_attrs(rng, 300, 3, skew=True)
+    tau = 3.0
+    t = build_tree(attrs, tau=tau)
+    for p in range(t.num_nodes):
+        if t.is_leaf(p):
+            continue
+        nl = int(t.count[int(t.left[p])])
+        nr = int(t.count[int(t.right[p])])
+        assert tau * min(nl, nr) > max(nl, nr)
+
+
+def test_duplicate_attribute_values():
+    """All-identical tuples must terminate (full blacklist path)."""
+    attrs = np.ones((64, 3), dtype=np.float32)
+    t = build_tree(attrs)
+    t.validate()
+    assert t.height == 1  # root never splits; becomes a leaf via BL
