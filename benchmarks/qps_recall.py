@@ -2,9 +2,16 @@
 
 Reports QPS at recall 0.95 (0.9 on youtube, as in the paper) and the
 KHI/iRangeGraph + KHI/Prefiltering speedups, plus the visited-work ratio.
+
+``engine_backends`` adds batched jitted-engine points per distance backend
+("jnp" | "pallas_l2" | "pallas_gather_l2") next to the per-query numpy
+methods — the backend axis of the serving path, measured under the same
+recall protocol.
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -16,8 +23,43 @@ from .common import (SCALES, build_methods, qps_at_recall, run_queries,
 SIGMAS = {"1/16": 1 / 16, "1/64": 1 / 64, "1/256": 1 / 256}
 
 
+def _engine_point(index, vecs, attrs, Q, preds, k: int, ef: int,
+                  backend: str) -> dict:
+    """One batched-engine measurement (compile excluded from timing)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import query_ref as qr
+    from repro.core.engine import (SearchParams, device_put_index,
+                                   make_search_fn)
+
+    params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend)
+    # build the jitted fn ONCE and reuse it — search_batch would rebuild the
+    # jit wrapper per call and the "warm" call would warm nothing
+    fn = make_search_fn(params)
+    di = device_put_index(index)
+    qv = jnp.asarray(Q)
+    qlo = jnp.asarray(np.stack([p.lo for p in preds]).astype(np.float32))
+    qhi = jnp.asarray(np.stack([p.hi for p in preds]).astype(np.float32))
+    jax.block_until_ready(fn(di, qv, qlo, qhi))    # compile
+    t0 = time.perf_counter()
+    ids, _, _ = jax.block_until_ready(fn(di, qv, qlo, qhi))
+    dt = time.perf_counter() - t0
+    ids = np.asarray(ids)
+    recalls = []
+    for i, (q, p) in enumerate(zip(Q, preds)):
+        gt = qr.brute_force(vecs, attrs, q, p, k)
+        if len(gt):
+            got = [x for x in ids[i].tolist() if x >= 0]
+            recalls.append(len(set(gt.tolist()) & set(got))
+                           / min(k, len(gt)))
+    return {"method": f"engine[{backend}]", "ef": ef, "k": k,
+            "recall": float(np.mean(recalls)) if recalls else 1.0,
+            "qps": len(Q) / dt, "visited": None}
+
+
 def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
-        k: int = 10):
+        k: int = 10, engine_backends=()):
     s = SCALES[scale]
     rows = []
     for ds in datasets:
@@ -33,9 +75,15 @@ def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
                 pts = [run_queries(mname, m, vecs, attrs, Q, preds, k, ef)
                        for ef in (s["efs"] if mname != "prefilter" else (0,))]
                 points[mname] = pts
+            for backend in engine_backends:
+                points[f"engine[{backend}]"] = [
+                    _engine_point(methods["khi"], vecs, attrs, Q, preds,
+                                  k, ef, backend) for ef in s["efs"]]
             qk = qps_at_recall(points["khi"], target)
             qi = qps_at_recall(points["irange"], target)
             qp = points["prefilter"][0]["qps"]
+            engine_qps = {b: qps_at_recall(points[f"engine[{b}]"], target)
+                          for b in engine_backends}
             # work ratio at matched recall
             vk = min((p["visited"] for p in points["khi"]
                       if p["recall"] >= target), default=None)
@@ -47,7 +95,7 @@ def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
                        speedup_vs_prefilter=(qk / qp) if qk else None,
                        khi_visited=vk, irange_visited=vi,
                        work_ratio=(vi / vk) if vk and vi else None,
-                       points=points)
+                       engine_qps=engine_qps, points=points)
             rows.append(row)
             print(f"[qps_recall] {ds:8s} sigma={sname:6s} "
                   f"khi={qk and round(qk)} irg={qi and round(qi)} "

@@ -17,12 +17,12 @@ def main(argv=None) -> None:
                     choices=["smoke", "small", "paper"])
     ap.add_argument("--only", default=None,
                     help="comma list: qps_recall,convergence,vary_k,"
-                         "vary_card,build,kernels")
+                         "vary_card,build,kernels,serve")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import build_and_size, convergence, kernels_bench, qps_recall
-    from . import vary_card, vary_k
+    from . import serve_bench, vary_card, vary_k
 
     lines = ["name,us_per_call,derived"]
     t0 = time.time()
@@ -42,6 +42,8 @@ def main(argv=None) -> None:
         lines += build_and_size.csv_lines(build_and_size.run(args.scale))
     if want("kernels"):
         lines += kernels_bench.csv_lines(kernels_bench.run(args.scale))
+    if want("serve"):
+        lines += serve_bench.csv_lines(serve_bench.run(args.scale))
 
     print(f"\n# benchmarks done in {time.time()-t0:.0f}s "
           f"(scale={args.scale})")

@@ -1,0 +1,130 @@
+"""Batched-service throughput: KHIService QPS across batch sizes x shard
+counts x distance backends, plus the jnp-vs-fused-kernel equality check.
+
+This measures the *serving layer* (micro-batching, fan-out, merge, cache),
+complementing qps_recall.py which measures the per-query algorithmic
+tradeoff. Wall-clock numbers on this CPU box run the Pallas kernels in
+interpreter mode — on TPU the same program lowers to Mosaic — so the
+equality column (fused kernel == jnp top-k ids) is the load-bearing result
+here; see benchmarks/README.md for the output schema.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import SearchParams
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.sharded import build_sharded
+from repro.data import make_dataset, make_queries
+from repro.serve import KHIService, ServeConfig
+
+from .common import SCALES, save_results, scaled_spec
+
+BATCH_SIZES = (8, 32)
+SHARD_COUNTS = (1, 4)
+BACKENDS = ("jnp", "pallas_gather_l2")
+
+
+def _build_index(vecs, attrs, n_shards: int, M: int):
+    cfg = KHIConfig(M=M, builder="bulk")
+    if n_shards == 1:
+        return KHIIndex.build(vecs, attrs, cfg)
+    return build_sharded(vecs, attrs, n_shards, cfg)
+
+
+def run(scale: str = "smoke", dataset: str = "laion",
+        batch_sizes=BATCH_SIZES, shard_counts=SHARD_COUNTS,
+        backends=BACKENDS, iters: int = 3, ef: int = 32, k: int = 10):
+    s = SCALES[scale]
+    spec = scaled_spec(dataset, scale)
+    vecs, attrs = make_dataset(spec)
+    n_q = max(batch_sizes) * iters
+    Q, preds = make_queries(vecs, attrs, n_queries=n_q, sigma=1 / 16, seed=3)
+    lo = np.stack([p.lo for p in preds]).astype(np.float32)
+    hi = np.stack([p.hi for p in preds]).astype(np.float32)
+
+    rows = []
+    equality_ids = {}
+    for n_shards in shard_counts:
+        index = _build_index(vecs, attrs, n_shards, M=s["M"])
+        for backend in backends:
+            params = SearchParams(k=k, ef=ef, c_n=16, backend=backend)
+            svc = KHIService(index, params,
+                             config=ServeConfig(buckets=tuple(batch_sizes),
+                                                cache_size=0))
+            for B in batch_sizes:
+                # warm the trace for this bucket, then time steady state
+                svc.search(Q[:B], lo[:B], hi[:B])
+                t0 = time.perf_counter()
+                for it in range(iters):
+                    sl = slice(it * B, (it + 1) * B)
+                    ids, _ = svc.search(Q[sl], lo[sl], hi[sl])
+                dt = (time.perf_counter() - t0) / iters
+                rows.append(dict(
+                    shards=n_shards, batch=B, backend=backend,
+                    ms_per_batch=dt * 1e3, qps=B / dt, ef=ef, k=k,
+                    pad_lanes=svc.stats["pad_lanes"],
+                    traced_buckets=sorted(svc.stats["traced_buckets"])))
+                print(f"[serve_bench] shards={n_shards} backend={backend:17s}"
+                      f" batch={B:4d} {dt*1e3:8.1f} ms/batch "
+                      f"{B/dt:8.1f} QPS", flush=True)
+            # equality probe: same queries, this backend's ids
+            B0 = batch_sizes[0]
+            ids0, _ = svc.search(Q[:B0], lo[:B0], hi[:B0])
+            equality_ids[(n_shards, backend)] = ids0
+
+        # cached-repeat point (cache on, second pass is all hits)
+        svc_c = KHIService(index, SearchParams(k=k, ef=ef, c_n=16),
+                           config=ServeConfig(buckets=tuple(batch_sizes)))
+        B = batch_sizes[0]
+        svc_c.search(Q[:B], lo[:B], hi[:B])
+        t0 = time.perf_counter()
+        svc_c.search(Q[:B], lo[:B], hi[:B])
+        dt_hit = time.perf_counter() - t0
+        rows.append(dict(shards=n_shards, batch=B, backend="cache_hit",
+                         ms_per_batch=dt_hit * 1e3, qps=B / dt_hit, ef=ef,
+                         k=k, pad_lanes=0, traced_buckets=[]))
+
+    # fused kernel must reproduce the jnp top-k exactly (interpret path)
+    equality = {}
+    for n_shards in shard_counts:
+        base = equality_ids[(n_shards, "jnp")]
+        for backend in backends:
+            if backend == "jnp":
+                continue
+            same = bool((equality_ids[(n_shards, backend)] == base).all())
+            equality[f"shards{n_shards}_{backend}_vs_jnp"] = same
+            print(f"[serve_bench] identical ids shards={n_shards} "
+                  f"{backend} vs jnp: {same}", flush=True)
+
+    payload = {"rows": rows, "equality": equality,
+               "config": dict(scale=scale, dataset=dataset, ef=ef, k=k,
+                              iters=iters)}
+    save_results("serve", payload)
+    assert all(equality.values()), f"backend mismatch: {equality}"
+    return payload
+
+
+def csv_lines(payload):
+    out = []
+    for r in payload["rows"]:
+        out.append(f"serve_s{r['shards']}_b{r['batch']}_{r['backend']},"
+                   f"{r['ms_per_batch']*1e3/max(r['batch'],1):.1f},"
+                   f"qps={r['qps']:.1f}")
+    for name, ok in payload["equality"].items():
+        out.append(f"serve_equality_{name},0.0,identical={ok}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke",
+                    choices=["smoke", "small", "paper"])
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    run(args.scale, iters=args.iters)

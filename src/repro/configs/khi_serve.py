@@ -1,8 +1,10 @@
 """khi-serve: the paper's own serving configuration — distributed KHI over a
 16-shard corpus (1M objects/shard, d=768, m=4 attrs, M=32) with batched
-RFANNS queries. Lowered via repro.core.sharded for the dry-run."""
+RFANNS queries. Lowered via repro.core.sharded for the dry-run; served
+through repro.serve.khi_service at runtime (DESIGN.md §3)."""
 
 import dataclasses
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -18,6 +20,20 @@ class KHIServeConfig:
     ef: int = 128
     c_e: int = 10
     c_n: int = 32
+    # serving-layer knobs (repro.serve.khi_service)
+    backend: str = "pallas_gather_l2"   # distance backend on TPU
+    buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
+    cache_size: int = 65536             # LRU result-cache entries
+
+    def search_params(self):
+        """SearchParams for this serving cell (engine-side knobs only)."""
+        from ..core.engine import SearchParams
+        return SearchParams(k=self.k, ef=self.ef, c_e=self.c_e, c_n=self.c_n,
+                            backend=self.backend)
+
+    def serve_config(self):
+        from ..serve.khi_service import ServeConfig
+        return ServeConfig(buckets=self.buckets, cache_size=self.cache_size)
 
 
 def config() -> KHIServeConfig:
@@ -26,4 +42,6 @@ def config() -> KHIServeConfig:
 
 def smoke_config() -> KHIServeConfig:
     return KHIServeConfig(name="khi-serve-smoke", n_per_shard=2000, d=32,
-                          m=3, M=8, height=12, nodes_per_shard=4096, ef=32)
+                          m=3, M=8, height=12, nodes_per_shard=4096, ef=32,
+                          backend="jnp", buckets=(1, 8, 32),
+                          cache_size=1024)

@@ -16,14 +16,28 @@ Everything is a fixed-shape array program (see DESIGN.md §2):
   * visited set              -> dense per-query bool mask (n,).
 
 ``search_batch`` vmaps the per-query program and jits the whole thing;
-distance evaluation is pluggable (pure jnp or the Pallas ``l2dist`` kernel).
+distance evaluation is pluggable (``SearchParams.backend``):
+
+  * ``"jnp"``              — XLA gather + elementwise reduce (portable
+                             reference path; under vmap the gather
+                             materializes a (B, C, d) intermediate in HBM);
+  * ``"pallas_l2"``        — same materialized gather, but the reduction
+                             runs through the MXU-tiled ``l2dist`` kernel;
+  * ``"pallas_gather_l2"`` — the fused scalar-prefetch kernel
+                             (``kernels.gather_l2``): the candidate id
+                             stream drives the DMA index_map, so each row
+                             moves HBM->VMEM exactly once and no (B, C, d)
+                             gather is ever materialized.
+
+All backends share one contract — ``fn(vecs, q, safe_ids) -> (C,) f32`` —
+so the engine body is backend-agnostic (DESIGN.md §3).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +45,10 @@ import numpy as np
 
 from .khi import KHIIndex
 
-__all__ = ["DeviceIndex", "SearchParams", "device_put_index", "search_batch",
-           "make_search_fn"]
+__all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "device_put_index",
+           "resolve_dist_ids", "search_batch", "make_search_fn"]
+
+BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -134,6 +150,7 @@ class SearchParams:
     max_steps: int = 4096    # RangeFilter pop budget
     scan_budget: int = 64    # entry-scan window per candidate node
     max_hops: int = 0        # 0 => ef * 4 (generous; loop exits on its own)
+    backend: str = "jnp"     # distance backend, one of BACKENDS
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
@@ -242,8 +259,66 @@ def _dist_jnp(q: jax.Array, cand: jax.Array) -> jax.Array:
     return jnp.sum(diff * diff, axis=-1, dtype=jnp.float32)
 
 
+# Every backend implements fn(vecs (n, d), q (d,), safe_ids (C,) int32)
+# -> (C,) f32; ids are pre-clamped in-range by the caller (invalid slots get
+# their distances overwritten with inf upstream, so garbage rows are fine).
+
+def _dist_ids_jnp(vecs, q, ids):
+    return _dist_jnp(q, vecs[ids])
+
+
+def _dist_ids_pallas_l2(vecs, q, ids, *, interpret):
+    from ..kernels.l2dist import l2dist_qc_raw
+
+    rows = vecs[ids]                              # materialized gather
+    C, d = rows.shape
+    tc = min(128, _ceil_mult(C, 8))
+    td = min(128, _ceil_mult(d, 8))
+    rp = _pad2(rows, _ceil_mult(C, tc), _ceil_mult(d, td))
+    qp = jnp.pad(q.astype(rows.dtype), (0, rp.shape[1] - d))[None]
+    out = l2dist_qc_raw(qp, rp[None], tb=1, tc=tc, td=td, interpret=interpret)
+    return out[0, :C]
+
+
+def _dist_ids_gather_l2(vecs, q, ids, *, interpret):
+    from ..kernels.gather_l2 import gather_l2_raw
+
+    return gather_l2_raw(ids[None], vecs, q[None].astype(vecs.dtype),
+                         interpret=interpret)[0]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(x, r, c):
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))
+
+
+def resolve_dist_ids(backend: Optional[str] = None, *,
+                     dist_fn: Optional[Callable] = None,
+                     interpret: Optional[bool] = None) -> Callable:
+    """Resolve a distance backend to the engine's ``fn(vecs, q, ids)``
+    contract. ``dist_fn`` (legacy ``fn(q, rows)`` signature) wins if given;
+    ``interpret=None`` auto-selects by JAX backend (Mosaic on TPU,
+    interpreter elsewhere)."""
+    if dist_fn is not None:
+        return lambda vecs, q, ids: dist_fn(q, vecs[ids])
+    backend = backend or "jnp"
+    if backend == "jnp":
+        return _dist_ids_jnp
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend == "pallas_l2":
+        return functools.partial(_dist_ids_pallas_l2, interpret=interpret)
+    if backend == "pallas_gather_l2":
+        return functools.partial(_dist_ids_gather_l2, interpret=interpret)
+    raise ValueError(f"unknown distance backend {backend!r}; "
+                     f"expected one of {BACKENDS}")
+
+
 def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
-               p: SearchParams, dist_fn) -> tuple[jax.Array, jax.Array, jax.Array]:
+               p: SearchParams, dist_ids) -> tuple[jax.Array, jax.Array, jax.Array]:
     n = di.n
     H, M = di.nbrs.shape[1], di.nbrs.shape[2]
     HM = H * M
@@ -252,7 +327,7 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
     entries = _range_filter(di, qlo, qhi, p)
     e_safe = jnp.maximum(entries, 0)
     e_valid = entries >= 0
-    e_dist = jnp.where(e_valid, dist_fn(q, di.vecs[e_safe]), INF)
+    e_dist = jnp.where(e_valid, dist_ids(di.vecs, q, e_safe), INF)
 
     visited = jnp.zeros((n,), jnp.bool_)
     visited = visited.at[jnp.where(e_valid, entries, n)].set(True, mode="drop")
@@ -303,7 +378,7 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
 
         bsafe = jnp.maximum(buf, 0)
         bvalid = buf >= 0
-        bd = jnp.where(bvalid, dist_fn(q, di.vecs[bsafe]), INF)
+        bd = jnp.where(bvalid, dist_ids(di.vecs, q, bsafe), INF)
 
         # -------- pool merge (Alg. 3 lines 10-13)
         ids = ids.at[p.ef :].set(buf)
@@ -323,12 +398,15 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
 
 def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False):
     """Builds jit(search)(di, queries (B,d), qlo (B,m), qhi (B,m)) ->
-    (ids (B,k) int32, dists (B,k) f32, hops (B,) int32)."""
-    dist_fn = dist_fn or _dist_jnp
+    (ids (B,k) int32, dists (B,k) f32, hops (B,) int32).
+
+    The distance backend comes from ``p.backend`` unless a legacy
+    ``dist_fn(q, rows)`` override is supplied."""
+    dist_ids = resolve_dist_ids(p.backend, dist_fn=dist_fn)
 
     @functools.partial(jax.jit, static_argnames=())
     def search(di: DeviceIndex, queries, qlo, qhi):
-        fn = functools.partial(_query_one, p=p, dist_fn=dist_fn)
+        fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
         return jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(queries, qlo, qhi)
 
     return search

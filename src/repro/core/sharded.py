@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import DeviceIndex, SearchParams, _query_one, _dist_jnp, device_put_index
+from .engine import (DeviceIndex, SearchParams, _query_one, device_put_index,
+                     resolve_dist_ids)
 from .khi import KHIConfig, KHIIndex
 
 __all__ = ["ShardedKHI", "build_sharded", "make_sharded_search_fn",
@@ -85,8 +86,8 @@ def _local_to_global(local_ids: jax.Array, shard: jax.Array,
 
 
 def _shard_search(di: DeviceIndex, shard_id: jax.Array, n_shards: int,
-                  queries, qlo, qhi, p: SearchParams, dist_fn):
-    fn = functools.partial(_query_one, p=p, dist_fn=dist_fn)
+                  queries, qlo, qhi, p: SearchParams, dist_ids):
+    fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
     ids, dists, hops = jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(
         queries, qlo, qhi)
     gids = _local_to_global(ids, shard_id, n_shards)
@@ -110,7 +111,7 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
     """Returns jit(search)(skhi, queries, qlo, qhi) -> (ids, dists) with the
     production sharding: index on `model`, batch on data axes, one all_gather
     on `model` for the merge."""
-    dist_fn = dist_fn or _dist_jnp
+    dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
     n_shards = mesh.shape[model_axis]
     dspec = P(tuple(data_axes))
 
@@ -120,7 +121,7 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
         di = jax.tree.map(lambda x: x[0], di_blk)      # squeeze shard axis
         shard_id = off_blk[0]
         gids, dists, hops = _shard_search(di, shard_id, n_shards,
-                                          queries, qlo, qhi, params, dist_fn)
+                                          queries, qlo, qhi, params, dist_ids)
         allg = jax.lax.all_gather(gids, model_axis)    # (S, B, k)
         alld = jax.lax.all_gather(dists, model_axis)
         mi, md = _merge_topk(allg, alld, params.k)
@@ -139,14 +140,14 @@ def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
                             params: SearchParams, *, dist_fn=None):
     """Single-device semantic equivalent of the shard_map program (vmap over
     the shard axis instead of devices) — used by tests on this 1-CPU box."""
-    dist_fn = dist_fn or _dist_jnp
+    dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
     n_shards = skhi.num_shards
 
     @jax.jit
     def run(skhi, queries, qlo, qhi):
         def per_shard(di, off):
             return _shard_search(di, off, n_shards, queries, qlo, qhi,
-                                 params, dist_fn)
+                                 params, dist_ids)
         gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
         mi, md = _merge_topk(gids, dists, params.k)
         return mi, md, hops

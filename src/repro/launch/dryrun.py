@@ -72,6 +72,8 @@ def run_cell(arch: str, cell: str, mesh_name: str, *, force: bool = False,
                                          - ma.alias_size_in_bytes),
         }
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # jaxlib < 0.4.38: one dict per partition
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         mf = RL.model_flops(rec.get("kind", ""), rec.get("n_params", 0),
                             rec.get("n_active", 0), rec.get("batch", 0),

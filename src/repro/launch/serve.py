@@ -1,7 +1,10 @@
 """Serving launcher: batched RFANNS retrieval + optional LM generation.
 
-``python -m repro.launch.serve --mode khi`` serves batched range-filtered
-ANN queries with the jitted engine (the paper's workload);
+``python -m repro.launch.serve --mode khi`` stands up a ``KHIService``
+(micro-batching + shard fan-out + result cache, DESIGN.md §3) and drives it
+with a stream of mixed-size request bursts — the serving workload, not just
+a fixed-batch loop. ``--shards S`` serves a sharded corpus, ``--backend``
+picks the distance backend (``pallas_gather_l2`` = the fused kernel);
 ``--mode generate`` runs prefill+decode on a smoke LM.
 """
 
@@ -16,31 +19,48 @@ import numpy as np
 
 
 def serve_khi(args):
-    from repro.core import KHIConfig, KHIIndex, SearchParams, search_batch
-    from repro.core.engine import device_put_index, make_search_fn
+    from repro.core import KHIConfig, KHIIndex, SearchParams
+    from repro.core.sharded import build_sharded
     from repro.data import DatasetSpec, make_dataset, make_queries
+    from repro.serve import KHIService, Request, ServeConfig
 
     spec = DatasetSpec("serve", n=args.n, d=args.d, m=3, seed=0,
                        attr_kinds=("year", "lognormal", "uniform"),
                        attr_corr=0.6)
     vecs, attrs = make_dataset(spec)
-    print(f"[serve] building KHI over n={args.n} d={args.d}")
-    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=16, builder="bulk"))
-    di = device_put_index(idx)
-    params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16)
-    fn = make_search_fn(params)
-    Q, preds = make_queries(vecs, attrs, n_queries=args.batch, sigma=1 / 16,
-                            seed=1)
-    qlo = jnp.asarray(np.stack([p.lo for p in preds]))
-    qhi = jnp.asarray(np.stack([p.hi for p in preds]))
-    qv = jnp.asarray(Q)
-    ids, dists, hops = fn(di, qv, qlo, qhi)  # compile
+    cfg = KHIConfig(M=16, builder="bulk")
+    print(f"[serve] building KHI over n={args.n} d={args.d} "
+          f"shards={args.shards}")
+    if args.shards > 1:
+        index = build_sharded(vecs, attrs, args.shards, cfg)
+    else:
+        index = KHIIndex.build(vecs, attrs, cfg)
+    params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16,
+                          backend=args.backend)
+    buckets = tuple(sorted({1, 8, args.batch}))
+    svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
+
+    Q, preds = make_queries(vecs, attrs, n_queries=args.batch * args.iters,
+                            sigma=1 / 16, seed=1)
+    # warm the big-bucket trace with THROWAWAY queries (perturbed copies:
+    # same shapes, different cache keys) so the timed stream below never
+    # hits the cache, then stream mixed-size bursts through the
+    # micro-batcher (what a real frontend sends)
+    lo = np.stack([p.lo for p in preds]).astype(np.float32)
+    hi = np.stack([p.hi for p in preds]).astype(np.float32)
+    svc.search(Q[: args.batch] + np.float32(1e-3),
+               lo[: args.batch], hi[: args.batch])
+    reqs = (Request(Q[i], lo[i], hi[i]) for i in range(len(Q)))
     t0 = time.perf_counter()
-    for _ in range(args.iters):
-        ids, dists, hops = jax.block_until_ready(fn(di, qv, qlo, qhi))
-    dt = (time.perf_counter() - t0) / args.iters
-    print(f"[serve] batch={args.batch} {dt*1e3:.1f} ms/batch "
-          f"({args.batch/dt:.0f} QPS), mean hops {np.mean(hops):.1f}")
+    results = list(svc.serve_stream(reqs))
+    dt = time.perf_counter() - t0
+    snap = svc.snapshot()
+    print(f"[serve] {len(results)} requests in {dt:.2f}s "
+          f"({len(results)/dt:.0f} QPS end-to-end; "
+          f"device {snap['device_qps'] and round(snap['device_qps'])} QPS)")
+    print(f"[serve] backend={args.backend} batches={snap['batches']} "
+          f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
+          f"buckets={snap['traced_buckets']}")
 
 
 def serve_generate(args):
@@ -80,6 +100,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--iters", type=int, default=3)
+    from repro.core.engine import BACKENDS
+
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--backend", default="jnp", choices=list(BACKENDS))
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "khi":

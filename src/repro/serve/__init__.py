@@ -1,1 +1,2 @@
 from .generate import generate  # noqa: F401
+from .khi_service import KHIService, Request, Result, ServeConfig  # noqa: F401

@@ -1,0 +1,307 @@
+"""Batched multi-shard RFANNS serving layer (DESIGN.md §3 "Serving").
+
+The paper's headline number is query *throughput*; this module is the
+request-facing layer that turns the jitted engine into a service:
+
+  * **Shape-bucket micro-batching** — incoming (query, range) requests are
+    grouped and padded to the nearest batch bucket (default 1/8/32/128), so
+    the number of distinct jit traces is bounded by ``len(buckets)`` no
+    matter what batch sizes clients send. Pad lanes carry an *empty* range
+    (lo=+inf, hi=-inf): RangeFilter returns zero entries and the greedy
+    loop exits on its first condition check, so padding costs one masked
+    lane, not a full search.
+  * **Multi-shard fan-out** — a ``ShardedKHI`` is searched with the same
+    program ``core.sharded`` distributes under shard_map: every shard
+    answers top-k locally, one O(S·k) merge produces the global answer. On
+    a multi-device mesh pass ``mesh=`` to get the collective form; without
+    one the fan-out vmaps over the stacked shard axis (bit-identical
+    semantics, single device).
+  * **LRU result cache** — keyed on (query bytes, range bytes, k, backend);
+    repeated requests (RAG loops, dashboard refreshes) skip the device
+    entirely and return identical ids/dists.
+
+The distance backend (``"jnp" | "pallas_l2" | "pallas_gather_l2"``) comes
+from ``SearchParams.backend`` — the fused gather+L2 kernel is selected the
+same way here as in offline search.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import hashlib
+import time
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import (DeviceIndex, SearchParams, _query_one,
+                           device_put_index, resolve_dist_ids)
+from ..core.khi import KHIIndex
+from ..core.sharded import ShardedKHI, _merge_topk, _shard_search
+
+__all__ = ["ServeConfig", "Request", "Result", "KHIService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service-level knobs (index/search knobs live in SearchParams)."""
+
+    buckets: Tuple[int, ...] = (1, 8, 32, 128)  # padded batch shapes
+    cache_size: int = 4096                      # LRU entries; 0 disables
+
+    def __post_init__(self):
+        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError("buckets must be a sorted tuple of distinct "
+                             f"sizes, got {self.buckets!r}")
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+
+@dataclasses.dataclass
+class Request:
+    """One RFANNS query: vector + per-attribute [lo, hi] box."""
+
+    query: np.ndarray  # (d,) float32
+    lo: np.ndarray     # (m,) float32, -inf = unconstrained
+    hi: np.ndarray     # (m,) float32, +inf = unconstrained
+
+
+@dataclasses.dataclass
+class Result:
+    ids: np.ndarray    # (k,) int32 global object ids, -1 padded
+    dists: np.ndarray  # (k,) float32 squared L2, inf padded
+    cached: bool = False
+
+
+class KHIService:
+    """Micro-batching, caching front-end over a (sharded) KHI index.
+
+    Accepts a host ``KHIIndex``, a flattened ``DeviceIndex`` (single shard),
+    or a ``ShardedKHI`` (leading-axis shard stack). Three entry points:
+
+      * ``search(queries, lo, hi)``  — batch-in, batch-out;
+      * ``submit(req)`` + ``flush()`` — explicit queueing;
+      * ``serve_stream(reqs)``       — iterator in, results out, batches of
+                                       up to ``config.max_batch``.
+    """
+
+    def __init__(self, index, params: Optional[SearchParams] = None, *,
+                 config: Optional[ServeConfig] = None, mesh=None,
+                 dist_fn=None):
+        self.params = params or SearchParams()
+        self.config = config or ServeConfig()
+        if isinstance(index, KHIIndex):
+            index = device_put_index(index)
+        self._sharded = isinstance(index, ShardedKHI)
+        self.index = index
+        self._legacy_dist_fn = dist_fn
+        self._dist_ids = resolve_dist_ids(self.params.backend,
+                                          dist_fn=dist_fn)
+        self._mesh = mesh
+        self._search = self._build_search_fn()
+        self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
+            collections.OrderedDict())
+        self._pending: List[Tuple[int, Request]] = []
+        self._next_ticket = 0
+        self.stats = {
+            "requests": 0, "cache_hits": 0, "batches": 0, "pad_lanes": 0,
+            "device_queries": 0, "traced_buckets": set(),
+            "device_seconds": 0.0,
+        }
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def d(self) -> int:
+        return self.index.di.vecs.shape[-1] if self._sharded \
+            else self.index.vecs.shape[-1]
+
+    @property
+    def m(self) -> int:
+        return self.index.di.attrs.shape[-1] if self._sharded \
+            else self.index.attrs.shape[-1]
+
+    def _build_search_fn(self):
+        p, dist_ids = self.params, self._dist_ids
+        if not self._sharded:
+            @jax.jit
+            def single(di: DeviceIndex, q, qlo, qhi):
+                fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
+                ids, dists, _ = jax.vmap(
+                    lambda qq, lo, hi: fn(di, qq, lo, hi))(q, qlo, qhi)
+                return ids, dists
+
+            return lambda q, lo, hi: single(self.index, q, lo, hi)
+
+        n_shards = self.index.num_shards
+        if self._mesh is not None:
+            from ..core.sharded import make_sharded_search_fn
+            fn = make_sharded_search_fn(p, self._mesh,
+                                        dist_fn=self._legacy_dist_fn)
+            return lambda q, lo, hi: fn(self.index, q, lo, hi)
+
+        @jax.jit
+        def fanout(skhi: ShardedKHI, q, qlo, qhi):
+            def per_shard(di, off):
+                return _shard_search(di, off, n_shards, q, qlo, qhi,
+                                     p, dist_ids)
+            gids, dists, _ = jax.vmap(per_shard)(skhi.di, skhi.offsets)
+            return _merge_topk(gids, dists, p.k)
+
+        return lambda q, lo, hi: fanout(self.index, q, lo, hi)
+
+    def _bucket(self, b: int) -> int:
+        for size in self.config.buckets:
+            if b <= size:
+                return size
+        return self.config.max_batch
+
+    def _key(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(q.tobytes())
+        h.update(lo.tobytes())
+        h.update(hi.tobytes())
+        h.update(repr(self.params).encode())
+        return h.digest()
+
+    def _cache_get(self, key: bytes):
+        if not self.config.cache_size:
+            return None
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key: bytes, ids: np.ndarray, dists: np.ndarray):
+        if not self.config.cache_size:
+            return
+        self._cache[key] = (ids, dists)
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.config.cache_size:
+            self._cache.popitem(last=False)
+
+    # ----------------------------------------------------------- device run
+    def _run_device(self, qs: np.ndarray, los: np.ndarray,
+                    his: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Pad one micro-batch to its bucket, search, unpad."""
+        b = qs.shape[0]
+        bucket = self._bucket(b)
+        pad = bucket - b
+        if pad:
+            qs = np.concatenate([qs, np.zeros((pad, self.d), np.float32)])
+            # empty range: RangeFilter yields no entries, loop exits at once
+            los = np.concatenate(
+                [los, np.full((pad, self.m), np.inf, np.float32)])
+            his = np.concatenate(
+                [his, np.full((pad, self.m), -np.inf, np.float32)])
+        t0 = time.perf_counter()
+        ids, dists = self._search(jnp.asarray(qs), jnp.asarray(los),
+                                  jnp.asarray(his))
+        ids, dists = jax.block_until_ready((ids, dists))
+        self.stats["device_seconds"] += time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["pad_lanes"] += pad
+        self.stats["device_queries"] += bucket
+        self.stats["traced_buckets"].add(bucket)
+        return np.asarray(ids)[:b], np.asarray(dists)[:b]
+
+    # -------------------------------------------------------------- serving
+    def _answer(self, queries: np.ndarray, lo: np.ndarray,
+                hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Cache-aware core: -> (ids (B, k), dists (B, k), hit (B,) bool).
+        Batches larger than the top bucket are chunked."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        lo = np.ascontiguousarray(lo, np.float32)
+        hi = np.ascontiguousarray(hi, np.float32)
+        B = queries.shape[0]
+        self.stats["requests"] += B
+        k = self.params.k
+        out_ids = np.full((B, k), -1, np.int32)
+        out_d = np.full((B, k), np.inf, np.float32)
+        hit_mask = np.zeros((B,), bool)
+
+        # skip per-request hashing entirely when the cache is disabled —
+        # blake2b over d=768 query bytes is measurable on the hot path
+        caching = self.config.cache_size > 0
+        keys = [self._key(queries[i], lo[i], hi[i]) if caching else None
+                for i in range(B)]
+        miss: List[int] = []
+        for i, key in enumerate(keys):
+            hit = self._cache_get(key) if caching else None
+            if hit is not None:
+                out_ids[i], out_d[i] = hit
+                hit_mask[i] = True
+                self.stats["cache_hits"] += 1
+            else:
+                miss.append(i)
+
+        for c0 in range(0, len(miss), self.config.max_batch):
+            chunk = miss[c0:c0 + self.config.max_batch]
+            ids, dists = self._run_device(queries[chunk], lo[chunk],
+                                          hi[chunk])
+            for j, i in enumerate(chunk):
+                out_ids[i], out_d[i] = ids[j], dists[j]
+                if caching:
+                    self._cache_put(keys[i], ids[j], dists[j])
+        return out_ids, out_d, hit_mask
+
+    def search(self, queries: np.ndarray, lo: np.ndarray,
+               hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch front door: (B, d) x (B, m) x (B, m) -> ids/dists (B, k)."""
+        ids, dists, _ = self._answer(queries, lo, hi)
+        return ids, dists
+
+    def submit(self, req: Request) -> int:
+        """Enqueue one request; returns a ticket for flush()'s result list."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, req))
+        return ticket
+
+    def flush(self) -> dict:
+        """Run all pending requests (micro-batched); {ticket: Result}."""
+        if not self._pending:
+            return {}
+        pending, self._pending = self._pending, []
+        qs = np.stack([r.query for _, r in pending]).astype(np.float32)
+        los = np.stack([r.lo for _, r in pending]).astype(np.float32)
+        his = np.stack([r.hi for _, r in pending]).astype(np.float32)
+        ids, dists, hit = self._answer(qs, los, his)
+        return {ticket: Result(ids=ids[j], dists=dists[j], cached=bool(hit[j]))
+                for j, (ticket, _) in enumerate(pending)}
+
+    def serve_stream(self, requests: Iterable[Request]) -> Iterator[Result]:
+        """Consume an iterator of requests, yield Results in order,
+        micro-batching up to ``config.max_batch`` at a time."""
+        batch: List[Request] = []
+
+        def drain(batch):
+            qs = np.stack([r.query for r in batch]).astype(np.float32)
+            los = np.stack([r.lo for r in batch]).astype(np.float32)
+            his = np.stack([r.hi for r in batch]).astype(np.float32)
+            ids, dists, hit = self._answer(qs, los, his)
+            for j in range(len(batch)):
+                yield Result(ids=ids[j], dists=dists[j], cached=bool(hit[j]))
+
+        for req in requests:
+            batch.append(req)
+            if len(batch) >= self.config.max_batch:
+                yield from drain(batch)
+                batch = []
+        if batch:
+            yield from drain(batch)
+
+    # ------------------------------------------------------------- metrics
+    def snapshot(self) -> dict:
+        """JSON-able stats snapshot (traced_buckets -> sorted list)."""
+        s = dict(self.stats)
+        s["traced_buckets"] = sorted(s["traced_buckets"])
+        s["cache_entries"] = len(self._cache)
+        dq, ds = s["device_queries"], s["device_seconds"]
+        s["device_qps"] = (dq / ds) if ds > 0 else None
+        return s

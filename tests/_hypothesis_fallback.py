@@ -1,0 +1,101 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo is verified in does not ship ``hypothesis`` (it is
+declared in the ``test`` extra of pyproject.toml, but installs are frozen).
+Property tests still run — against a fixed-seed sampler instead of the real
+shrinking search — so collection never fails and coverage degrades
+gracefully rather than disappearing.
+
+Only the surface the test suite uses is provided: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and
+``strategies.integers`` / ``strategies.sampled_from``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_FALLBACK_EXAMPLES = 6  # small, deterministic; real hypothesis runs 10-12
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def example(self, rng):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))  # inclusive, as in st
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return float(self.lo + (self.hi - self.lo) * rng.random())
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value, **_ignored):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _SampledFrom([False, True])
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+
+def settings(max_examples=None, **_ignored):
+    """Decorator: caps the fallback example count (never raises it above
+    the deterministic budget — this box is a 1-core CPU interpreter)."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(_SEED)
+            for _ in range(getattr(wrapper, "_max_examples",
+                                   _FALLBACK_EXAMPLES)):
+                vals = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **vals)
+
+        # hide strategy params from pytest's fixture resolver
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco

@@ -1,0 +1,78 @@
+"""Distance-backend equivalence: the engine must return identical top-k
+ids for every backend (jnp / pallas_l2 / pallas_gather_l2) on the
+interpreter path — the fused kernel is a perf transform, not a semantic
+one (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.data import make_queries
+
+N_QUERIES = 8  # Pallas-interpreter compiles are slow; keep the batch tight
+
+
+@pytest.fixture(scope="module")
+def backend_results(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    Q, preds = Q[:N_QUERIES], preds[:N_QUERIES]
+    out = {}
+    for backend in eng.BACKENDS:
+        p = eng.SearchParams(k=10, ef=32, c_n=16, backend=backend)
+        out[backend] = eng.search_batch(tiny_index, Q, preds, p)
+    return out
+
+
+@pytest.mark.parametrize("backend", [b for b in eng.BACKENDS if b != "jnp"])
+def test_backend_ids_identical_to_jnp(backend_results, backend):
+    ids_ref, dists_ref, hops_ref = backend_results["jnp"]
+    ids, dists, hops = backend_results[backend]
+    np.testing.assert_array_equal(ids, ids_ref)
+    np.testing.assert_array_equal(hops, hops_ref)
+    np.testing.assert_allclose(dists, dists_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_backend_results_in_range(backend_results, tiny_index, tiny_queries):
+    _, preds = tiny_queries
+    for backend in eng.BACKENDS:
+        ids = backend_results[backend][0]
+        for i, p in enumerate(preds[:N_QUERIES]):
+            got = [x for x in ids[i].tolist() if x >= 0]
+            assert all(p.matches(tiny_index.attrs[g]) for g in got), backend
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown distance backend"):
+        eng.resolve_dist_ids("mosaic_tf32")
+
+
+def test_legacy_dist_fn_override_wins(tiny_index, tiny_queries):
+    """Explicit dist_fn(q, rows) still routes around the backend field."""
+    Q, preds = tiny_queries
+    p = eng.SearchParams(k=5, ef=32, c_n=16, backend="pallas_gather_l2")
+    ids_d, _, _ = eng.search_batch(tiny_index, Q[:4], preds[:4], p,
+                                   dist_fn=eng._dist_jnp)
+    ids_j, _, _ = eng.search_batch(
+        tiny_index, Q[:4], preds[:4],
+        eng.SearchParams(k=5, ef=32, c_n=16, backend="jnp"))
+    np.testing.assert_array_equal(ids_d, ids_j)
+
+
+def test_sharded_backend_identical(tiny_data):
+    """Backend equivalence holds through the shard fan-out + merge."""
+    from repro.core.khi import KHIConfig
+    from repro.core.sharded import build_sharded, search_sharded_emulated
+
+    vecs, attrs = tiny_data
+    skhi = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="bulk"))
+    Q, preds = make_queries(vecs, attrs, n_queries=6, sigma=1 / 16, seed=5)
+    qlo = np.stack([p.lo for p in preds])
+    qhi = np.stack([p.hi for p in preds])
+    res = {}
+    for backend in ("jnp", "pallas_gather_l2"):
+        p = eng.SearchParams(k=10, ef=32, c_n=16, backend=backend)
+        mi, md, _ = search_sharded_emulated(skhi, Q, qlo, qhi, p)
+        res[backend] = (np.asarray(mi), np.asarray(md))
+    np.testing.assert_array_equal(res["pallas_gather_l2"][0], res["jnp"][0])
+    np.testing.assert_allclose(res["pallas_gather_l2"][1], res["jnp"][1],
+                               rtol=1e-4, atol=1e-4)

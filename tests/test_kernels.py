@@ -3,7 +3,11 @@ hypothesis property tests (interpret=True on CPU)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; see pyproject
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -53,6 +57,43 @@ def test_gather_l2_sweep(B, C, N, D):
     want = gather_l2_ref(idx, corpus, q)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
                                atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 6), C=st.integers(1, 12), N=st.integers(1, 80),
+       D=st.integers(1, 96), seed=st.integers(0, 2**16))
+def test_gather_l2_property(B, C, N, D, seed):
+    """gather_l2_raw vs the jnp oracle on random shapes, with duplicate and
+    boundary (0, N-1) indices mixed in — the id stream the engine's
+    expansion step actually produces."""
+    from repro.kernels.gather_l2 import gather_l2_raw
+
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, N, (B, C))
+    idx.flat[:: 3] = rng.choice([0, N - 1], size=idx.flat[:: 3].shape)
+    if C >= 2:
+        idx[:, 1] = idx[:, 0]                  # guaranteed duplicate
+    idx = jnp.asarray(idx, dtype=jnp.int32)
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    got = gather_l2_raw(idx, corpus, q, interpret=True)
+    want = gather_l2_ref(idx, corpus, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gather_l2_bf16_corpus():
+    """bf16 corpus rows accumulate in f32 inside the kernel."""
+    rng = np.random.default_rng(5)
+    N, D, B, C = 40, 48, 3, 7
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.bfloat16)
+    idx = jnp.asarray(rng.integers(0, N, (B, C)), dtype=jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.bfloat16)
+    got = ops.gather_l2(idx, corpus, q, interpret=True)
+    want = gather_l2_ref(idx, corpus, q)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2 * D)
 
 
 @settings(max_examples=12, deadline=None)

@@ -1,0 +1,142 @@
+"""Serving-layer behavior: bucket padding, LRU cache, stream chunking,
+shard fan-out equality (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchParams, search_batch
+from repro.core.khi import KHIConfig
+from repro.core.sharded import build_sharded, search_sharded_emulated
+from repro.data import make_queries
+from repro.serve import KHIService, Request, ServeConfig
+
+PARAMS = SearchParams(k=10, ef=32, c_n=16)
+
+
+@pytest.fixture(scope="module")
+def workload(tiny_data):
+    vecs, attrs = tiny_data
+    Q, preds = make_queries(vecs, attrs, n_queries=21, sigma=1 / 16, seed=3)
+    lo = np.stack([p.lo for p in preds]).astype(np.float32)
+    hi = np.stack([p.hi for p in preds]).astype(np.float32)
+    return Q, preds, lo, hi
+
+
+@pytest.fixture(scope="module")
+def service(tiny_index):
+    return KHIService(tiny_index, PARAMS,
+                      config=ServeConfig(buckets=(8, 16), cache_size=64))
+
+
+def test_bucket_padding_matches_direct_engine(service, tiny_index, workload):
+    """An odd-sized batch is padded to its bucket; results must equal the
+    unpadded direct engine answer lane-for-lane."""
+    Q, preds, lo, hi = workload
+    ids, dists = service.search(Q[:5], lo[:5], hi[:5])
+    want_ids, want_d, _ = search_batch(tiny_index, Q[:5], preds[:5], PARAMS)
+    np.testing.assert_array_equal(ids, want_ids)
+    np.testing.assert_allclose(dists, want_d, rtol=1e-5)
+    snap = service.snapshot()
+    assert snap["traced_buckets"] == [8]       # 5 -> bucket 8
+    assert snap["pad_lanes"] == 3
+
+
+def test_cache_hit_identical_and_no_device_work(service, workload):
+    Q, _, lo, hi = workload
+    ids1, d1 = service.search(Q[:5], lo[:5], hi[:5])
+    before = service.snapshot()
+    ids2, d2 = service.search(Q[:5], lo[:5], hi[:5])
+    after = service.snapshot()
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(d1, d2)      # byte-identical, not allclose
+    assert after["cache_hits"] - before["cache_hits"] == 5
+    assert after["batches"] == before["batches"], "hit must skip the device"
+
+
+def test_lru_eviction_order(service):
+    """Direct cache poke: size bound holds and least-recently-used leaves
+    first (no device work involved)."""
+    svc = KHIService(service.index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=2))
+    ids = np.arange(10, dtype=np.int32)
+    d = np.zeros(10, np.float32)
+    svc._cache_put(b"a", ids, d)
+    svc._cache_put(b"b", ids + 1, d)
+    assert svc._cache_get(b"a") is not None    # refresh 'a'; 'b' is LRU now
+    svc._cache_put(b"c", ids + 2, d)           # evicts 'b'
+    assert svc._cache_get(b"b") is None
+    assert svc._cache_get(b"a") is not None
+    assert svc._cache_get(b"c") is not None
+    assert len(svc._cache) == 2
+
+
+def test_stream_chunks_and_preserves_order(service, workload):
+    """21 requests through max_batch=16 -> two device batches, in order."""
+    Q, preds, lo, hi = workload
+    fresh = KHIService(service.index, PARAMS,
+                       config=ServeConfig(buckets=(8, 16), cache_size=0))
+    res = list(fresh.serve_stream(
+        Request(Q[i], lo[i], hi[i]) for i in range(21)))
+    assert len(res) == 21
+    ids, dists = service.search(Q, lo, hi)     # cache-backed oracle
+    got = np.stack([r.ids for r in res])
+    np.testing.assert_array_equal(got, ids)
+    assert fresh.snapshot()["batches"] >= 2    # 16 + 5
+
+
+def test_submit_flush_tickets_and_cached_flag(service, workload):
+    Q, _, lo, hi = workload
+    q_fresh = (Q[20] + 0.25).astype(np.float32)   # never seen by the cache
+    t_new = service.submit(Request(q_fresh, lo[20], hi[20]))
+    t_old = service.submit(Request(Q[0], lo[0], hi[0]))  # cached earlier
+    out = service.flush()
+    assert set(out) == {t_new, t_old}
+    assert out[t_old].cached and not out[t_new].cached
+    ids, _ = service.search(q_fresh[None], lo[20:21], hi[20:21])
+    np.testing.assert_array_equal(out[t_new].ids, ids[0])
+    assert service.flush() == {}               # queue drained
+
+
+def test_cache_disabled(service, workload):
+    """cache_size=0: repeats hit the device every time."""
+    Q, _, lo, hi = workload
+    svc = KHIService(service.index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=0))
+    svc.search(Q[:2], lo[:2], hi[:2])
+    svc.search(Q[:2], lo[:2], hi[:2])
+    snap = svc.snapshot()
+    assert snap["cache_hits"] == 0 and snap["batches"] == 2
+    assert snap["cache_entries"] == 0
+
+
+def test_sharded_service_matches_emulated_fanout(tiny_data, workload):
+    vecs, attrs = tiny_data
+    Q, preds, lo, hi = workload
+    skhi = build_sharded(vecs, attrs, 3, KHIConfig(M=16, builder="bulk"))
+    svc = KHIService(skhi, PARAMS, config=ServeConfig(buckets=(8,),
+                                                      cache_size=0))
+    ids, dists = svc.search(Q[:8], lo[:8], hi[:8])
+    mi, md, _ = search_sharded_emulated(skhi, Q[:8], lo[:8], hi[:8], PARAMS)
+    np.testing.assert_array_equal(ids, np.asarray(mi))
+    np.testing.assert_allclose(dists, np.asarray(md), rtol=1e-5)
+
+
+def test_bad_bucket_config_rejected():
+    with pytest.raises(ValueError, match="buckets"):
+        ServeConfig(buckets=(32, 8))
+    with pytest.raises(ValueError, match="buckets"):
+        ServeConfig(buckets=())
+
+
+def test_khi_serve_config_helpers():
+    """configs.khi_serve helpers stay in sync with the real dataclasses."""
+    from repro.configs.khi_serve import config, smoke_config
+
+    for cfg in (config(), smoke_config()):
+        p = cfg.search_params()
+        assert (p.k, p.ef, p.c_e, p.c_n) == (cfg.k, cfg.ef, cfg.c_e, cfg.c_n)
+        assert p.backend == cfg.backend
+        sc = cfg.serve_config()
+        assert sc.buckets == cfg.buckets
+        assert sc.cache_size == cfg.cache_size
+        assert sc.max_batch == max(cfg.buckets)

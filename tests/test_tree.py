@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; see pyproject
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.tree import build_tree
 
