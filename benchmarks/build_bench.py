@@ -1,0 +1,105 @@
+"""Build-time benchmark: seconds × builder × n, with a parity assert.
+
+Measures KHI construction through each builder — ``incremental`` (paper
+Alg. 5, smallest n only: it is the Python-loop path the device builder
+exists to replace), ``bulk`` (numpy exact top-ef_b + per-row RNG prune)
+and ``device`` (the jitted array program, ``core/build_device.py``) — on
+the same dataset at a sweep of corpus sizes. The device builder is
+measured twice: cold (first build at that shape — includes every jit
+trace) and warm (rebuild with traces cached — the steady state of
+sharded/epoch rebuilds, where all shards share one trace set).
+
+Hard assert at every point: the device ``nbrs`` planes are bit-identical
+to the numpy bulk builder's (the tier-1 parity contract, at benchmark
+scale). The headline derived metric is ``device_speedup`` =
+bulk_seconds / device_warm_seconds at each n.
+
+    PYTHONPATH=src python -m benchmarks.build_bench --scale smoke
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.build_device import build_graphs_device
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.data import make_dataset
+
+from .common import SCALES, save_results, scaled_spec
+
+BUILD_SIZES = {
+    "smoke": (600, 1500, 3000),
+    "small": (1500, 4000, 8000),
+    "paper": (5000, 10000, 20000),
+}
+
+
+def run(scale: str = "smoke", dataset: str = "laion"):
+    s = SCALES[scale]
+    M = s["M"]
+    rows = []
+    for n in BUILD_SIZES[scale]:
+        spec = dataclasses.replace(scaled_spec(dataset, scale), n=n)
+        vecs, attrs = make_dataset(spec)
+
+        row = dict(dataset=dataset, n=n, d=spec.d, M=M)
+        if n == BUILD_SIZES[scale][0]:
+            inc = KHIIndex.build(vecs, attrs,
+                                 KHIConfig(M=M, builder="incremental"))
+            row["incremental_s"] = inc.build_seconds
+
+        bulk = KHIIndex.build(vecs, attrs, KHIConfig(M=M, builder="bulk"))
+        row["bulk_s"] = bulk.build_seconds
+
+        dev_cold = KHIIndex.build(vecs, attrs,
+                                  KHIConfig(M=M, builder="device"))
+        row["device_cold_s"] = dev_cold.build_seconds
+        t0 = time.perf_counter()
+        warm_nbrs = build_graphs_device(dev_cold.tree, vecs, M=M)
+        row["device_warm_s"] = time.perf_counter() - t0
+
+        # parity contract at benchmark scale
+        assert (dev_cold.nbrs == bulk.nbrs).all(), \
+            f"device/bulk parity broke at n={n}"
+        assert (warm_nbrs == bulk.nbrs).all()
+
+        row["device_speedup"] = row["bulk_s"] / row["device_warm_s"]
+        row["device_speedup_cold"] = row["bulk_s"] / row["device_cold_s"]
+        rows.append(row)
+        print(f"[build_bench] n={n}: bulk {row['bulk_s']:.2f}s, device "
+              f"{row['device_cold_s']:.2f}s cold / "
+              f"{row['device_warm_s']:.2f}s warm "
+              f"(x{row['device_speedup']:.1f} warm, "
+              f"x{row['device_speedup_cold']:.1f} cold)", flush=True)
+    payload = {"rows": rows,
+               "config": {"scale": scale, "dataset": dataset, "M": M,
+                          "parity": "device nbrs == bulk nbrs (asserted)"}}
+    save_results("build", payload)
+    return payload
+
+
+def csv_lines(payload) -> list:
+    out = []
+    for r in payload["rows"]:
+        out.append(f"build_bulk_n{r['n']},{r['bulk_s'] * 1e6:.0f},")
+        out.append(f"build_device_n{r['n']},{r['device_warm_s'] * 1e6:.0f},"
+                   f"speedup_vs_bulk={r['device_speedup']:.2f}"
+                   f";cold={r['device_cold_s']:.2f}s")
+        if "incremental_s" in r:
+            out.append(f"build_incremental_n{r['n']},"
+                       f"{r['incremental_s'] * 1e6:.0f},")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke",
+                    choices=list(BUILD_SIZES))
+    ap.add_argument("--dataset", default="laion")
+    args = ap.parse_args()
+    print("\n".join(csv_lines(run(args.scale, args.dataset))))

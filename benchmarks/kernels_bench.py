@@ -55,7 +55,7 @@ def run(scale: str = "small"):
     Q, preds = make_queries(vecs, attrs, n_queries=64, sigma=1 / 16, seed=3)
     di = device_put_index(idx)
     params = SearchParams(k=10, ef=64, c_e=10, c_n=s["M"])
-    fn = make_search_fn(params)
+    fn = make_search_fn(params, di=di, on_undersized="adjust")
     qlo = jnp.asarray(np.stack([p.lo for p in preds]))
     qhi = jnp.asarray(np.stack([p.hi for p in preds]))
     qv = jnp.asarray(Q)

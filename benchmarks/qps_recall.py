@@ -36,8 +36,8 @@ def _engine_point(index, vecs, attrs, Q, preds, k: int, ef: int,
     params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend)
     # build the jitted fn ONCE and reuse it — search_batch would rebuild the
     # jit wrapper per call and the "warm" call would warm nothing
-    fn = make_search_fn(params)
     di = device_put_index(index)
+    fn = make_search_fn(params, di=di, on_undersized="adjust")
     qv = jnp.asarray(Q)
     qlo = jnp.asarray(np.stack([p.lo for p in preds]).astype(np.float32))
     qhi = jnp.asarray(np.stack([p.hi for p in preds]).astype(np.float32))

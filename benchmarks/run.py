@@ -17,12 +17,12 @@ def main(argv=None) -> None:
                     choices=["smoke", "small", "paper"])
     ap.add_argument("--only", default=None,
                     help="comma list: qps_recall,convergence,vary_k,"
-                         "vary_card,build,kernels,serve")
+                         "vary_card,build,build_bench,kernels,serve")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from . import build_and_size, convergence, kernels_bench, qps_recall
-    from . import serve_bench, vary_card, vary_k
+    from . import build_and_size, build_bench, convergence, kernels_bench
+    from . import qps_recall, serve_bench, vary_card, vary_k
 
     lines = ["name,us_per_call,derived"]
     t0 = time.time()
@@ -40,6 +40,8 @@ def main(argv=None) -> None:
         lines += vary_card.csv_lines(vary_card.run(args.scale))
     if want("build"):
         lines += build_and_size.csv_lines(build_and_size.run(args.scale))
+    if want("build_bench"):
+        lines += build_bench.csv_lines(build_bench.run(args.scale))
     if want("kernels"):
         lines += kernels_bench.csv_lines(kernels_bench.run(args.scale))
     if want("serve"):

@@ -29,7 +29,7 @@ BACKENDS = ("jnp", "pallas_gather_l2")
 
 
 def _build_index(vecs, attrs, n_shards: int, M: int):
-    cfg = KHIConfig(M=M, builder="bulk")
+    cfg = KHIConfig(M=M, builder="device")
     if n_shards == 1:
         return KHIIndex.build(vecs, attrs, cfg)
     return build_sharded(vecs, attrs, n_shards, cfg)

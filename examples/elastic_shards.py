@@ -25,7 +25,7 @@ Q, preds = make_queries(vecs, attrs, n_queries=16, sigma=1 / 16, seed=7)
 qlo = np.stack([p.lo for p in preds])
 qhi = np.stack([p.hi for p in preds])
 params = SearchParams(k=10, ef=48, c_e=10, c_n=16)
-cfg = KHIConfig(M=16, builder="bulk")
+cfg = KHIConfig(M=16, builder="device")  # all shards share one trace set
 
 # 1. shard-level checkpointing: each shard saves/reloads independently
 with tempfile.TemporaryDirectory() as d:

@@ -3,10 +3,13 @@ tree + per-node filtered HNSW graphs + range-filtering greedy search."""
 
 from .khi import KHIConfig, KHIIndex  # noqa: F401
 from .query_ref import Predicate, brute_force, query  # noqa: F401
+from .build_device import build_graphs_device  # noqa: F401
 from .engine import (  # noqa: F401
     DeviceIndex,
     SearchParams,
+    derive_search_params,
     device_put_index,
     make_search_fn,
     search_batch,
+    validate_search_params,
 )

@@ -1,0 +1,213 @@
+"""Shared fixed-shape beam/pool substrate for every greedy search in the repo.
+
+The paper's Algorithm 3 keeps two priority queues (candidates + results).
+Every fixed-shape reformulation in this codebase — the jitted engine's
+per-query greedy loop (`engine._query_one`), the host builder's batched
+greedy search (`hnsw.greedy_search_batch`), and the numpy oracle's beam
+mode (`query_ref.query(pool="beam")`) — collapses them into ONE structure,
+the **sorted pool**:
+
+  * physical size ``ef + tail``: slots ``[0:ef]`` are the beam (the ef best
+    candidates seen so far, ascending by distance), slots ``[ef:]`` are a
+    scratch tail that exists only inside a merge;
+  * three parallel arrays: ``ids`` (int32, -1 = empty), ``dists`` (float,
+    +inf = empty) and ``expanded`` (bool; empty slots count as expanded);
+  * invariant between steps: ascending by ``dists`` over the whole pool,
+    tail slots sealed to (-1, +inf, True).
+
+One step of greedy search is then exactly three substrate ops:
+``*_best_unexpanded`` (frontier selection = argmin over unexpanded beam
+slots), a caller-side neighbor expansion, and ``*_merge_tail`` (write the
+new candidates into the tail, argsort the whole pool, re-seal the tail).
+The loop terminates when ``*_frontier_alive`` is False — no unexpanded
+finite slot inside the beam. This is equivalent to Algorithm 3's two-queue
+form whenever candidate distances are distinct, because the result set
+R-hat never shrinks: a candidate that falls out of the beam is worse than
+(or tied with) the ef-th best seen and the ef-th best only improves, so
+it could never improve the result. On an *exact* distance tie at the ef
+boundary (duplicate vectors) the two forms may visit different tied
+candidates — the heap's ``<=`` pop still expands a tied candidate the
+beam has already truncated — which can route discovery differently; the
+jitted engine shares the beam's tie behavior, so beam mode is the closer
+oracle for it.
+
+Two parallel implementations share this file (and the contract above):
+
+  * jax ops on a single-query ``Pool`` NamedTuple (a pytree; vmap-friendly
+    — the engine vmaps them over the batch);
+  * numpy ops on batched ``(B, pool)`` arrays with an explicit active-row
+    index (the host builder updates only rows whose search is still live).
+
+Both use *stable* argsort so tie order is insertion order; all sorts are
+over the full physical pool, which keeps sealed tail slots (+inf) at the
+end. The visited-set ops live here too: the dense per-query bool mask and
+its mark-fresh idiom are the third piece every greedy loop shares
+(DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Pool",
+    "pool_seed",
+    "pool_frontier_alive",
+    "pool_best_unexpanded",
+    "pool_mark_expanded",
+    "pool_merge_tail",
+    "visited_init",
+    "visited_mark",
+    "np_pool_alloc",
+    "np_pool_seed",
+    "np_pool_best_unexpanded",
+    "np_pool_merge_tail",
+    "np_visited_fresh_mark",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+
+class Pool(NamedTuple):
+    """Sorted candidate pool (see module docstring for the invariant)."""
+
+    ids: jax.Array       # (ef + tail,) int32, -1 = empty
+    dists: jax.Array     # (ef + tail,) float32, +inf = empty
+    expanded: jax.Array  # (ef + tail,) bool, empty slots are True
+
+
+# --------------------------------------------------------------------------
+# jax ops (single query; vmap over the batch)
+# --------------------------------------------------------------------------
+
+def pool_seed(pool_size: int, ids: jax.Array, dists: jax.Array,
+              valid: jax.Array) -> Pool:
+    """Seed a pool of physical size ``pool_size`` with up to len(ids) entry
+    candidates (invalid lanes become sealed slots) and establish the sorted
+    invariant."""
+    k = ids.shape[0]
+    ids0 = jnp.full((pool_size,), -1, jnp.int32).at[:k].set(ids)
+    d0 = jnp.full((pool_size,), _INF).at[:k].set(
+        jnp.where(valid, dists, _INF))
+    exp0 = jnp.ones((pool_size,), jnp.bool_).at[:k].set(~valid)
+    srt = jnp.argsort(d0)
+    return Pool(ids=ids0[srt], dists=d0[srt], expanded=exp0[srt])
+
+
+def pool_frontier_alive(pool: Pool, ef: int) -> jax.Array:
+    """True while some beam slot is finite and unexpanded."""
+    frontier = ~pool.expanded[:ef] & jnp.isfinite(pool.dists[:ef])
+    return frontier.any()
+
+
+def pool_best_unexpanded(pool: Pool, ef: int) -> Tuple[jax.Array, jax.Array]:
+    """(slot, id) of the closest unexpanded beam candidate."""
+    slot = jnp.argmin(jnp.where(pool.expanded[:ef], _INF, pool.dists[:ef]))
+    return slot, pool.ids[slot]
+
+
+def pool_mark_expanded(pool: Pool, slot: jax.Array) -> Pool:
+    return pool._replace(expanded=pool.expanded.at[slot].set(True))
+
+
+def pool_merge_tail(pool: Pool, ef: int, new_ids: jax.Array,
+                    new_dists: jax.Array, new_valid: jax.Array) -> Pool:
+    """Merge up to ``tail`` new candidates (Alg. 3 lines 10-13): write them
+    into the scratch tail, stable-sort the whole pool ascending, re-seal the
+    tail. Candidates pushed past slot ef-1 are dropped — they are worse
+    than (or, on an exact distance tie, tied with) the ef-th best seen and
+    cannot improve the result (module docstring)."""
+    ids = pool.ids.at[ef:].set(jnp.where(new_valid, new_ids, -1))
+    dists = pool.dists.at[ef:].set(jnp.where(new_valid, new_dists, _INF))
+    expanded = pool.expanded.at[ef:].set(~new_valid)
+    srt = jnp.argsort(dists)
+    ids, dists, expanded = ids[srt], dists[srt], expanded[srt]
+    return Pool(
+        ids=ids.at[ef:].set(-1),
+        dists=dists.at[ef:].set(_INF),
+        expanded=expanded.at[ef:].set(True),
+    )
+
+
+def visited_init(n: int) -> jax.Array:
+    return jnp.zeros((n,), jnp.bool_)
+
+
+def visited_mark(visited: jax.Array, ids: jax.Array,
+                 valid: jax.Array) -> jax.Array:
+    """Mark ``ids[valid]`` visited (invalid lanes dropped out of range)."""
+    n = visited.shape[0]
+    return visited.at[jnp.where(valid, ids, n)].set(True, mode="drop")
+
+
+# --------------------------------------------------------------------------
+# numpy ops (batched (B, pool) arrays; in-place on active rows)
+# --------------------------------------------------------------------------
+
+def np_pool_alloc(B: int, pool_size: int,
+                  dtype=np.float32) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Empty batched pool: all slots sealed."""
+    ids = np.full((B, pool_size), -1, dtype=np.int64)
+    dists = np.full((B, pool_size), np.inf, dtype=dtype)
+    expanded = np.ones((B, pool_size), dtype=bool)
+    return ids, dists, expanded
+
+
+def np_pool_seed(ids: np.ndarray, dists: np.ndarray, expanded: np.ndarray,
+                 seed_ids: np.ndarray, seed_dists: np.ndarray) -> None:
+    """Seed slots [0:k) of every row and restore the sorted invariant
+    (stable sort keeps insertion order on ties; sealed +inf slots sink)."""
+    k = seed_ids.shape[1]
+    ids[:, :k] = seed_ids
+    dists[:, :k] = seed_dists
+    expanded[:, :k] = ~np.isfinite(seed_dists)
+    srt = np.argsort(dists, axis=1, kind="stable")
+    ar = np.arange(ids.shape[0])[:, None]
+    ids[:] = ids[ar, srt]
+    dists[:] = dists[ar, srt]
+    expanded[:] = expanded[ar, srt]
+
+
+def np_pool_best_unexpanded(ids: np.ndarray, dists: np.ndarray,
+                            expanded: np.ndarray,
+                            ef: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row (slot, alive): closest unexpanded beam slot; alive=False when
+    the row's frontier is exhausted."""
+    dmask = np.where(expanded[:, :ef], np.inf, dists[:, :ef])
+    slot = np.argmin(dmask, axis=1)
+    alive = np.isfinite(dmask[np.arange(ids.shape[0]), slot])
+    return slot, alive
+
+
+def np_pool_merge_tail(ids: np.ndarray, dists: np.ndarray,
+                       expanded: np.ndarray, rows: np.ndarray,
+                       new_ids: np.ndarray, new_dists: np.ndarray,
+                       new_valid: np.ndarray, ef: int) -> None:
+    """Batched merge for the ``rows`` still searching (same semantics as the
+    jax ``pool_merge_tail``, in place)."""
+    ids[rows, ef:] = np.where(new_valid, new_ids, -1)
+    dists[rows, ef:] = np.where(new_valid, new_dists, np.inf)
+    expanded[rows, ef:] = ~new_valid
+    srt = np.argsort(dists[rows], axis=1, kind="stable")
+    ar = np.arange(len(rows))[:, None]
+    ids[rows] = ids[rows][ar, srt]
+    dists[rows] = dists[rows][ar, srt]
+    expanded[rows] = expanded[rows][ar, srt]
+    ids[rows, ef:] = -1
+    dists[rows, ef:] = np.inf
+    expanded[rows, ef:] = True
+
+
+def np_visited_fresh_mark(visited: np.ndarray, rows: np.ndarray,
+                          nbr_ids: np.ndarray,
+                          valid: np.ndarray) -> np.ndarray:
+    """Batched mark-then-skip: returns the fresh mask (valid & first visit)
+    and marks every valid id visited. ``visited`` is (B, n); ``nbr_ids`` is
+    (r, M) with garbage where ~valid (callers pre-clamp to a safe index)."""
+    fresh = valid & ~visited[rows[:, None], nbr_ids]
+    visited[rows[:, None], nbr_ids] |= valid
+    return fresh

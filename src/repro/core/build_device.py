@@ -1,0 +1,244 @@
+"""Jitted device-native bulk graph builder (DESIGN.md §7).
+
+This is the accelerator formulation of ``hnsw.build_graphs_bulk``: per tree
+node, the exact top-``ef_b`` in-node candidate list of every member comes
+from a blocked all-pairs distance computation (one MXU matmul per tile —
+``kernels/l2dist`` on TPU, a ``dot_general`` with the same expansion
+formula elsewhere), and the HNSW RNG pruning rule runs as a *vectorized
+masked scan*: a ``lax.fori_loop`` over the candidate axis that carries a
+kept-neighbor buffer per row and applies the shielding test
+``d(e, r) < d(e, o)`` to all rows of a node (or a whole group of nodes)
+simultaneously. The output lands under the exact ``(H, n, M)`` int32
+``nbrs`` contract of the numpy builders, bit-identical to
+``build_graphs_bulk`` on the same inputs up to cross-backend float
+rounding (a fixed-seed test pins full bit-equality).
+
+Shape policy (everything under jit is fixed-shape):
+
+  * nodes are grouped by their member count padded to a power of two; one
+    jitted program per (C, K, M_eff) class handles every node of that
+    class via ``vmap`` — the whole tree builds in O(log n) distinct
+    traces, each node-parallel by construction;
+  * nodes larger than ``large_node`` get a row-blocked single-node
+    program (distance block (row_block, C)) so the distance matrix never
+    materializes at C^2;
+  * padded members sit at +inf distance and id -1, so the prune skips
+    them exactly like the numpy builder's shorter candidate lists.
+
+``matmul_dtype="bfloat16"`` runs the candidate matmuls in bf16 (halves
+the MXU input traffic; distances still accumulate in f32). The default
+keeps f32 so device and numpy builders agree bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tree import PartitionTree
+
+__all__ = ["build_graphs_device"]
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def _pairwise_d2(rows: jax.Array, pool: jax.Array, *, dist: str,
+                 interpret: Optional[bool], mm_dtype: Optional[str]):
+    """Squared L2 rows (R, d) x pool (C, d) -> (R, C) f32.
+
+    The jnp path mirrors the numpy builder's expansion-formula evaluation
+    order ``(colsq - 2 * rows @ pool.T) + rowsq`` so the two builders'
+    decision comparisons agree to the last bit wherever the backends'
+    matmuls do; the pallas path routes the same shape through the
+    MXU-tiled ``l2dist`` kernel."""
+    rc = rows.astype(mm_dtype) if mm_dtype else rows
+    pc = pool.astype(mm_dtype) if mm_dtype else pool
+    if dist == "pallas":
+        from ..kernels.ops import l2dist
+
+        return l2dist(rc, pc, interpret=interpret)
+    rs = jnp.sum(rows * rows, axis=-1)
+    ps = jnp.sum(pool * pool, axis=-1)
+    mm = jax.lax.dot_general(rc, pc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    return (ps[None, :] - 2.0 * mm) + rs[:, None]
+
+
+def _node_core(pool: jax.Array, rows: jax.Array, row_pos: jax.Array,
+               count: jax.Array, *, K: int, M_eff: int, dist: str,
+               interpret: Optional[bool], mm_dtype: Optional[str]):
+    """Top-K + masked RNG prune for ``rows`` (a block of one node's members).
+
+    pool:    (C, d) the node's member vectors, zero-padded past ``count``.
+    rows:    (R, d) the member block whose adjacency rows we produce.
+    row_pos: (R,) position of each row inside the pool (self-exclusion).
+    Returns kept (R, M_eff) int32 pool-local indices, -1 padded, in RNG
+    scan order (ascending candidate distance) — exactly ``hnsw.rng_prune``
+    applied to the exact top-K candidate list of every row at once.
+    """
+    C, d = pool.shape
+    R = rows.shape[0]
+    col_valid = jnp.arange(C) < count
+    d2 = _pairwise_d2(rows, pool, dist=dist, interpret=interpret,
+                      mm_dtype=mm_dtype)
+    d2 = jnp.where(col_valid[None, :], d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, K)          # ascending distance, K slots
+    dd = -neg
+
+    ar = jnp.arange(R)
+    slot_ids = jnp.arange(M_eff)
+
+    def body(j, st):
+        kept_loc, kept_vec, cnt = st
+        e_loc = jax.lax.dynamic_index_in_dim(idx, j, 1, keepdims=False)
+        e_d = jax.lax.dynamic_index_in_dim(dd, j, 1, keepdims=False)
+        ev = pool[e_loc]                                   # (R, d)
+        diff = kept_vec - ev[:, None, :]
+        d_er = jnp.sum(diff * diff, axis=-1)               # (R, M_eff)
+        live = slot_ids[None, :] < cnt[:, None]
+        shielded = ((d_er < e_d[:, None]) & live).any(axis=1)
+        accept = (jnp.isfinite(e_d) & (e_loc != row_pos)
+                  & ~shielded & (cnt < M_eff))
+        slot = jnp.where(accept, cnt, M_eff)               # M_eff = dropped
+        kept_loc = kept_loc.at[ar, slot].set(
+            e_loc.astype(jnp.int32), mode="drop")
+        kept_vec = kept_vec.at[ar, slot].set(ev, mode="drop")
+        return kept_loc, kept_vec, cnt + accept.astype(jnp.int32)
+
+    kept0 = (jnp.full((R, M_eff), -1, jnp.int32),
+             jnp.zeros((R, M_eff, d), pool.dtype),
+             jnp.zeros((R,), jnp.int32))
+    kept_loc, _, _ = jax.lax.fori_loop(0, K, body, kept0)
+    return kept_loc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "K", "M_eff", "dist", "interpret", "mm_dtype"))
+def _build_group(pools, counts, *, K, M_eff, dist, interpret, mm_dtype):
+    """vmap of ``_node_core`` over a size-class group: pools (G, C, d)."""
+    C = pools.shape[1]
+    pos = jnp.arange(C, dtype=jnp.int32)
+
+    def one(pool, count):
+        return _node_core(pool, pool, pos, count, K=K, M_eff=M_eff,
+                          dist=dist, interpret=interpret, mm_dtype=mm_dtype)
+
+    return jax.vmap(one)(pools, counts)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "K", "M_eff", "dist", "interpret", "mm_dtype"))
+def _build_rows(pool, rows, row_pos, count, *, K, M_eff, dist, interpret,
+                mm_dtype):
+    """Row-blocked single-node path for nodes above ``large_node``."""
+    return _node_core(pool, rows, row_pos, count, K=K, M_eff=M_eff,
+                      dist=dist, interpret=interpret, mm_dtype=mm_dtype)
+
+
+def _scatter_rows(nbrs: np.ndarray, lvl: int, node_objs: np.ndarray,
+                  row_objs: np.ndarray, kept_loc: np.ndarray,
+                  M_eff: int) -> None:
+    """Map pool-local kept indices (into ``node_objs``) to global ids and
+    write the (row_objs, M_eff) block of the (H, n, M) planes."""
+    gid = np.where(kept_loc >= 0, node_objs[kept_loc], -1).astype(np.int32)
+    nbrs[lvl, row_objs, :M_eff] = gid
+
+
+def build_graphs_device(
+    tree: PartitionTree,
+    vecs: np.ndarray,
+    *,
+    M: int = 32,
+    ef_b: Optional[int] = None,
+    row_block: int = 2048,
+    large_node: int = 4096,
+    group_row_cap: int = 4096,
+    dist: str = "auto",
+    matmul_dtype: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    verbose: bool = False,
+) -> np.ndarray:
+    """Device-native bulk build: returns ``nbrs`` (H, n, M) int32, -1 padded.
+
+    ``dist``: "auto" (pallas on TPU, jnp elsewhere) | "jnp" | "pallas".
+    ``matmul_dtype``: e.g. "bfloat16" for bf16 candidate matmuls (f32
+    accumulation); None keeps full f32 (bit-parity with the numpy bulk
+    builder on the jnp path).
+    """
+    ef_b = ef_b or max(M, 2 * M)  # same default as build_graphs_bulk
+    if dist == "auto":
+        dist = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if dist not in ("jnp", "pallas"):
+        raise ValueError(f"dist must be auto|jnp|pallas, got {dist!r}")
+    mm = str(jnp.dtype(matmul_dtype).name) if matmul_dtype else None
+
+    n, d = vecs.shape
+    H = tree.height
+    nbrs = np.full((H, n, M), -1, dtype=np.int32)
+    vecs = np.ascontiguousarray(vecs, dtype=np.float32)
+
+    groups: dict[int, list] = {}
+    big: list = []
+    for p in range(tree.num_nodes):
+        objs = tree.node_objects(p)
+        c = len(objs)
+        if c <= 1:
+            continue
+        C = max(8, _next_pow2(c))
+        item = (int(tree.level[p]), objs)
+        (big if C > large_node else groups.setdefault(C, [])).append(item)
+
+    # small/medium nodes: one vmapped program per size class
+    for C in sorted(groups):
+        items = groups[C]
+        K = min(ef_b + 1, C)
+        M_eff = min(M, K - 1)
+        Gc = max(1, group_row_cap // C)
+        for s in range(0, len(items), Gc):
+            chunk = items[s : s + Gc]
+            pools = np.zeros((Gc, C, d), np.float32)
+            counts = np.zeros((Gc,), np.int32)
+            for g, (_, objs) in enumerate(chunk):
+                pools[g, : len(objs)] = vecs[objs]
+                counts[g] = len(objs)
+            kept = np.asarray(_build_group(
+                jnp.asarray(pools), jnp.asarray(counts), K=K, M_eff=M_eff,
+                dist=dist, interpret=interpret, mm_dtype=mm))
+            for g, (lvl, objs) in enumerate(chunk):
+                _scatter_rows(nbrs, lvl, objs, objs, kept[g, : len(objs)],
+                              M_eff)
+        if verbose:
+            print(f"[build_device] class C={C}: {len(items)} nodes "
+                  f"(K={K}, M_eff={M_eff})", flush=True)
+
+    # large nodes: row-blocked, distance block (row_block, C)
+    for lvl, objs in big:
+        c = len(objs)
+        C = _next_pow2(c)
+        K = min(ef_b + 1, C)
+        M_eff = min(M, K - 1)
+        pool = np.zeros((C, d), np.float32)
+        pool[:c] = vecs[objs]
+        pj = jnp.asarray(pool)
+        cnt = jnp.asarray(c, jnp.int32)
+        RB = min(row_block, C)
+        for s in range(0, c, RB):
+            take = min(RB, c - s)
+            rows = np.zeros((RB, d), np.float32)
+            rows[:take] = pool[s : s + take]
+            row_pos = np.arange(s, s + RB, dtype=np.int32)
+            kept = np.asarray(_build_rows(
+                pj, jnp.asarray(rows), jnp.asarray(row_pos), cnt, K=K,
+                M_eff=M_eff, dist=dist, interpret=interpret, mm_dtype=mm))
+            _scatter_rows(nbrs, lvl, objs, objs[s : s + take], kept[:take],
+                          M_eff)
+        if verbose:
+            print(f"[build_device] large node level {lvl} size {c} done",
+                  flush=True)
+    return nbrs

@@ -43,10 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import beam
 from .khi import KHIIndex
 
 __all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "device_put_index",
-           "resolve_dist_ids", "search_batch", "make_search_fn"]
+           "resolve_dist_ids", "search_batch", "make_search_fn",
+           "required_scan_budget", "required_stack_cap",
+           "derive_search_params", "validate_search_params"]
 
 BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2")
 
@@ -154,6 +157,89 @@ class SearchParams:
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
+
+
+# --------------------------------------------------------------------------
+# Parameter validation against a concrete index
+# --------------------------------------------------------------------------
+#
+# Two SearchParams fields bound fixed-shape buffers whose sufficiency depends
+# on the *index*, not the query: an undersized ``stack_cap`` silently drops
+# DFS branches at the overflow clamp, and an undersized ``scan_budget`` makes
+# ``_range_filter.scan_entry`` return -1 for a scannable node whose first
+# in-range object sits past the window — both degrade recall with no error.
+# The helpers below derive the exact sufficient values from a DeviceIndex so
+# callers can refuse (``"raise"``) or auto-raise (``"adjust"``) undersized
+# params instead of silently missing entries.
+
+def _di_height(di: "DeviceIndex") -> int:
+    """Tree height for a plain (n, H, M) or shard-stacked (S, n, H, M)
+    DeviceIndex."""
+    return int(di.nbrs.shape[-2])
+
+
+def required_stack_cap(di: "DeviceIndex") -> int:
+    """DFS depth bound: one pending sibling per level plus the current node."""
+    return _di_height(di) + 1
+
+
+def required_scan_budget(di: "DeviceIndex") -> int:
+    """Smallest scan window that can never silently miss an entry.
+
+    Entry scans can *fail partway* only on nodes where membership does not
+    imply predicate satisfaction: leaves (the §6 leaf fallback scans them
+    under partial D) and nodes with blacklisted dims (D reaches full without
+    rectangle containment on BL dims). A covered node with BL == 0 is
+    genuinely contained, so its first object always matches and any budget
+    suffices. The max object count over the scannable set is therefore
+    exact: at this budget the windowed scan equals the reference's
+    full-node scan.
+    """
+    left = np.asarray(jax.device_get(di.left)).ravel()
+    bl = np.asarray(jax.device_get(di.bl)).ravel()
+    count = np.asarray(jax.device_get(di.count)).ravel()
+    scannable = (left < 0) | (bl != 0)
+    return int(count[scannable].max()) if scannable.any() else 1
+
+
+def derive_search_params(p: SearchParams, di: "DeviceIndex") -> SearchParams:
+    """Copy of ``p`` with scan_budget/stack_cap raised (never lowered) to the
+    sufficient values for ``di``."""
+    return dataclasses.replace(
+        p,
+        scan_budget=max(p.scan_budget, required_scan_budget(di)),
+        stack_cap=max(p.stack_cap, required_stack_cap(di)),
+    )
+
+
+def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
+                           on_undersized: str = "raise") -> SearchParams:
+    """Check ``p``'s index-dependent buffer bounds against ``di``.
+
+    on_undersized: ``"raise"`` (error with the sufficient values),
+    ``"adjust"`` (return an auto-raised copy), or ``"ignore"`` (legacy
+    silent-truncation behavior, for callers that deliberately trade recall
+    for a smaller scan window).
+    """
+    if on_undersized == "ignore":
+        return p
+    if on_undersized not in ("raise", "adjust"):
+        raise ValueError(f"on_undersized must be raise|adjust|ignore, "
+                         f"got {on_undersized!r}")
+    need_scan = required_scan_budget(di)
+    need_stack = required_stack_cap(di)
+    if p.scan_budget >= need_scan and p.stack_cap >= need_stack:
+        return p
+    if on_undersized == "adjust":
+        return dataclasses.replace(
+            p, scan_budget=max(p.scan_budget, need_scan),
+            stack_cap=max(p.stack_cap, need_stack))
+    raise ValueError(
+        f"SearchParams undersized for this index: need scan_budget >= "
+        f"{need_scan} (got {p.scan_budget}) and stack_cap >= {need_stack} "
+        f"(got {p.stack_cap}); an undersized scan_budget silently returns "
+        f"-1 entries for large scannable nodes. Use derive_search_params() "
+        f"or pass on_undersized='adjust'.")
 
 
 # --------------------------------------------------------------------------
@@ -329,27 +415,20 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
     e_valid = entries >= 0
     e_dist = jnp.where(e_valid, dist_ids(di.vecs, q, e_safe), INF)
 
-    visited = jnp.zeros((n,), jnp.bool_)
-    visited = visited.at[jnp.where(e_valid, entries, n)].set(True, mode="drop")
+    visited = beam.visited_init(n)
+    visited = beam.visited_mark(visited, entries, e_valid)
 
-    # pool: ids/dists/expanded, ascending by dist; physical size ef + c_n
-    pool = p.ef + p.c_n
-    ids0 = jnp.full((pool,), -1, jnp.int32).at[: p.c_e].set(entries)
-    d0 = jnp.full((pool,), INF).at[: p.c_e].set(e_dist)
-    exp0 = jnp.ones((pool,), jnp.bool_).at[: p.c_e].set(~e_valid)
-    srt = jnp.argsort(d0)
-    ids0, d0, exp0 = ids0[srt], d0[srt], exp0[srt]
+    # sorted pool (beam substrate): beam [0:ef] + scratch tail of c_n slots
+    pool0 = beam.pool_seed(p.ef + p.c_n, entries, e_dist, e_valid)
 
     def cond(st):
-        ids, dists, expanded, visited, hops = st
-        frontier = ~expanded[: p.ef] & jnp.isfinite(dists[: p.ef])
-        return frontier.any() & (hops < p.hops())
+        pool, visited, hops = st
+        return beam.pool_frontier_alive(pool, p.ef) & (hops < p.hops())
 
     def body(st):
-        ids, dists, expanded, visited, hops = st
-        u_slot = jnp.argmin(jnp.where(expanded[: p.ef], INF, dists[: p.ef]))
-        u = ids[u_slot]
-        expanded = expanded.at[u_slot].set(True)
+        pool, visited, hops = st
+        u_slot, u = beam.pool_best_unexpanded(pool, p.ef)
+        pool = beam.pool_mark_expanded(pool, u_slot)
 
         # -------- ReconsNbr (Alg. 2), vectorized with exact budget semantics
         rows = di.nbrs[u]                       # (H, M)
@@ -369,8 +448,7 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
         append = fresh & in_range
         napp_excl = jnp.cumsum(append) - append.astype(jnp.int32)
         scanned = napp_excl < p.c_n             # loop alive when reaching j
-        mark = fresh & scanned
-        visited = visited.at[jnp.where(mark, nid, n)].set(True, mode="drop")
+        visited = beam.visited_mark(visited, nid, fresh & scanned)
         keep = append & scanned
         # compact kept ids into c_n slots (slot = #appends before j)
         slots = jnp.where(keep, napp_excl, p.c_n)
@@ -381,27 +459,28 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
         bd = jnp.where(bvalid, dist_ids(di.vecs, q, bsafe), INF)
 
         # -------- pool merge (Alg. 3 lines 10-13)
-        ids = ids.at[p.ef :].set(buf)
-        dists = dists.at[p.ef :].set(bd)
-        expanded = expanded.at[p.ef :].set(~bvalid)
-        srt = jnp.argsort(dists)
-        ids, dists, expanded = ids[srt], dists[srt], expanded[srt]
-        ids = ids.at[p.ef :].set(-1)
-        dists = dists.at[p.ef :].set(INF)
-        expanded = expanded.at[p.ef :].set(True)
-        return ids, dists, expanded, visited, hops + 1
+        pool = beam.pool_merge_tail(pool, p.ef, buf, bd, bvalid)
+        return pool, visited, hops + 1
 
-    ids, dists, expanded, visited, hops = jax.lax.while_loop(
-        cond, body, (ids0, d0, exp0, visited, jnp.int32(0)))
-    return ids[: p.k], dists[: p.k], hops
+    pool, visited, hops = jax.lax.while_loop(
+        cond, body, (pool0, visited, jnp.int32(0)))
+    return pool.ids[: p.k], pool.dists[: p.k], hops
 
 
-def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False):
+def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False,
+                   di: Optional[DeviceIndex] = None,
+                   on_undersized: str = "raise"):
     """Builds jit(search)(di, queries (B,d), qlo (B,m), qhi (B,m)) ->
     (ids (B,k) int32, dists (B,k) f32, hops (B,) int32).
 
     The distance backend comes from ``p.backend`` unless a legacy
-    ``dist_fn(q, rows)`` override is supplied."""
+    ``dist_fn(q, rows)`` override is supplied. Pass the target ``di`` to
+    validate the index-dependent buffer bounds (scan_budget / stack_cap)
+    up front: by default an undersized configuration raises instead of
+    silently returning -1 entries (``on_undersized`` selects
+    raise/adjust/ignore — see ``validate_search_params``)."""
+    if di is not None:
+        p = validate_search_params(p, di, on_undersized=on_undersized)
     dist_ids = resolve_dist_ids(p.backend, dist_fn=dist_fn)
 
     @functools.partial(jax.jit, static_argnames=())
@@ -413,15 +492,19 @@ def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False):
 
 
 def search_batch(index_or_di, queries: np.ndarray, preds, params: SearchParams,
-                 *, dist_fn=None):
+                 *, dist_fn=None, on_undersized: str = "adjust"):
     """Convenience host API: accepts a host KHIIndex or a DeviceIndex plus a
-    list of ``Predicate``s; returns numpy (ids, dists, hops)."""
+    list of ``Predicate``s; returns numpy (ids, dists, hops).
+
+    Index-dependent buffer bounds are auto-raised by default (the derived
+    scan_budget makes the windowed entry scan exact — DESIGN.md §6)."""
     di = index_or_di
     if isinstance(di, KHIIndex):
         di = device_put_index(di)
     qlo = np.stack([pr.lo for pr in preds]).astype(np.float32)
     qhi = np.stack([pr.hi for pr in preds]).astype(np.float32)
-    fn = make_search_fn(params, dist_fn=dist_fn)
+    fn = make_search_fn(params, dist_fn=dist_fn, di=di,
+                        on_undersized=on_undersized)
     ids, dists, hops = fn(di, jnp.asarray(queries), jnp.asarray(qlo),
                           jnp.asarray(qhi))
     return np.asarray(ids), np.asarray(dists), np.asarray(hops)

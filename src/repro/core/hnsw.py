@@ -29,6 +29,7 @@ from typing import Optional
 
 import numpy as np
 
+from . import beam
 from .tree import PartitionTree
 
 __all__ = [
@@ -92,7 +93,9 @@ def greedy_search_batch(
     visited_size: Optional[int] = None,
     max_hops: int = 10_000,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Batched greedy best-first search over one graph.
+    """Batched greedy best-first search over one graph, on the shared beam
+    substrate (``core.beam``: sorted pool + expanded flags + visited mask —
+    the numpy twin of the jitted engine's per-query loop).
 
     vecs:    (n, d) float32 corpus vectors (global ids).
     adj:     (n, M) int32 adjacency rows (global ids, -1 padded). Rows of
@@ -107,25 +110,20 @@ def greedy_search_batch(
     M = adj.shape[1]
     visited = np.zeros((B, visited_size or n), dtype=bool)
 
-    cand_ids = np.full((B, ef + M), -1, dtype=np.int64)
-    cand_dists = np.full((B, ef + M), np.inf, dtype=np.float32)
-    expanded = np.ones((B, ef + M), dtype=bool)  # padding counts as expanded
+    cand_ids, cand_dists, expanded = beam.np_pool_alloc(B, ef + M)
 
     e = entries.astype(np.int64)
-    d0 = np.einsum("bd,bd->b", vecs[e] - queries, vecs[e] - queries)
-    cand_ids[:, 0] = e
-    cand_dists[:, 0] = d0
-    expanded[:, 0] = False
+    d0 = np.einsum("bd,bd->b", vecs[e] - queries,
+                   vecs[e] - queries).astype(np.float32)
+    beam.np_pool_seed(cand_ids, cand_dists, expanded, e[:, None], d0[:, None])
     visited[np.arange(B), e] = True
 
     active = np.ones(B, dtype=bool)
     for _ in range(max_hops):
-        # best unexpanded candidate per query within top-ef
-        dmask = np.where(expanded, np.inf, cand_dists)
-        best = np.argmin(dmask[:, :ef], axis=1)
-        bdist = dmask[np.arange(B), best]
-        # frontier termination: no unexpanded candidate in top-ef
-        active &= np.isfinite(bdist)
+        # frontier selection: best unexpanded candidate within the beam
+        best, alive = beam.np_pool_best_unexpanded(cand_ids, cand_dists,
+                                                   expanded, ef)
+        active &= alive
         if not active.any():
             break
         rows = np.nonzero(active)[0]
@@ -134,26 +132,13 @@ def greedy_search_batch(
         nbr = adj[u]  # (r, M) global ids
         valid = nbr >= 0
         nbr_safe = np.where(valid, nbr, 0)
-        fresh = valid & ~visited[rows[:, None], nbr_safe]
-        visited[rows[:, None], nbr_safe] |= valid
+        fresh = beam.np_visited_fresh_mark(visited, rows, nbr_safe, valid)
         nv = vecs[nbr_safe]  # (r, M, d)
         diff = nv - queries[rows][:, None, :]
         nd = np.einsum("rmd,rmd->rm", diff, diff).astype(np.float32)
         nd = np.where(fresh, nd, np.inf)
-        # merge new candidates into the per-query pools and resort
-        cand_ids[rows, ef:] = np.where(fresh, nbr, -1)
-        cand_dists[rows, ef:] = nd
-        expanded[rows, ef:] = ~fresh
-        srt = np.argsort(cand_dists[rows], axis=1, kind="stable")
-        ar = np.arange(len(rows))[:, None]
-        cand_ids[rows] = cand_ids[rows][ar, srt]
-        cand_dists[rows] = cand_dists[rows][ar, srt]
-        expanded[rows] = expanded[rows][ar, srt]
-        # deactivate queries whose frontier can no longer improve top-ef
-        # (the argmin check at loop head handles it; keep a cheap guard here)
-        cand_ids[rows, ef:] = -1
-        cand_dists[rows, ef:] = np.inf
-        expanded[rows, ef:] = True
+        beam.np_pool_merge_tail(cand_ids, cand_dists, expanded, rows,
+                                nbr, nd, fresh, ef)
     return cand_ids[:, :ef].astype(np.int32), cand_dists[:, :ef]
 
 

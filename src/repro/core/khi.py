@@ -8,7 +8,6 @@ query engine (`core.query_ref`) and the jitted TPU engine (`core.engine`).
 from __future__ import annotations
 
 import dataclasses
-import io
 import json
 import time
 from typing import Optional
@@ -31,7 +30,12 @@ class KHIConfig:
     leaf_capacity: int = 2      # c_l
     merge_chunk: int = 64       # intra-node parallelism analog; 1 = sequential
     symmetric_reverse: bool = False  # beyond-paper Alg.5 variant
-    builder: str = "incremental"     # "incremental" (paper) | "bulk" (TPU-native)
+    # "incremental" (paper Alg. 5) | "bulk" (numpy exact top-ef_b + prune)
+    # | "device" (the same bulk formulation as a jitted array program —
+    #   core/build_device.py, DESIGN.md §7)
+    builder: str = "incremental"
+
+    BUILDERS = ("incremental", "bulk", "device")
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -63,7 +67,11 @@ class KHIIndex:
             raise ValueError("vecs/attrs length mismatch")
         t0 = time.perf_counter()
         tree = build_tree(attrs, tau=config.tau, leaf_capacity=config.leaf_capacity)
-        if config.builder == "bulk":
+        if config.builder == "device":
+            from . import build_device
+            nbrs = build_device.build_graphs_device(
+                tree, vecs, M=config.M, ef_b=config.ef_b, verbose=verbose)
+        elif config.builder == "bulk":
             nbrs = hnsw.build_graphs_bulk(tree, vecs, M=config.M,
                                           ef_b=config.ef_b, verbose=verbose)
         elif config.builder == "incremental":
@@ -72,7 +80,8 @@ class KHIIndex:
                 merge_chunk=config.merge_chunk,
                 symmetric_reverse=config.symmetric_reverse, verbose=verbose)
         else:
-            raise ValueError(f"unknown builder {config.builder!r}")
+            raise ValueError(f"unknown builder {config.builder!r}; "
+                             f"expected one of {KHIConfig.BUILDERS}")
         dt = time.perf_counter() - t0
         return cls(vecs=vecs, attrs=attrs, tree=tree, nbrs=nbrs,
                    config=config, build_seconds=dt)

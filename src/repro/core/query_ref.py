@@ -13,6 +13,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import beam
 from .khi import KHIIndex
 
 __all__ = ["Predicate", "range_filter", "recons_nbr", "query", "brute_force"]
@@ -176,14 +177,30 @@ def query(
     c_n: Optional[int] = None,
     scan_budget: Optional[int] = None,
     return_stats: bool = False,
+    pool: str = "heap",
 ):
-    """Algorithm 3 (Query): greedy best-first search over O_B."""
+    """Algorithm 3 (Query): greedy best-first search over O_B.
+
+    ``pool`` selects the queue implementation: ``"heap"`` is the
+    line-faithful two-priority-queue form of the pseudocode; ``"beam"``
+    runs the same RangeFilter/ReconsNbr calls on the shared fixed-shape
+    pool substrate (``core.beam`` — the structure the jitted engine and
+    the host graph builder use). The two are equivalent under distinct
+    candidate distances because R-hat never shrinks (exact ties at the ef
+    boundary may route discovery differently — core/beam.py docstring);
+    a fixed-seed test pins the agreement on the tier-1 workload.
+    """
     c_e = c_e if c_e is not None else k         # paper: c_e = k
     c_n = c_n if c_n is not None else index.config.M  # paper: c_n = M
     visited = np.zeros(index.n, dtype=bool)
     q = np.asarray(q, dtype=np.float32)
 
     entries = range_filter(index, pred, c_e, scan_budget=scan_budget)
+    if pool == "beam":
+        return _query_beam(index, q, pred, k, entries, visited,
+                           ef=ef, c_n=c_n, return_stats=return_stats)
+    if pool != "heap":
+        raise ValueError(f"pool must be 'heap' or 'beam', got {pool!r}")
     # result queue: bounded max-heap of size ef (python: store negative dist)
     result: List[Tuple[float, int]] = []
     candq: List[Tuple[float, int]] = []
@@ -218,3 +235,52 @@ def query(
                      "threshold_trace": threshold_trace,
                      "visited": int(visited.sum())}
     return ids
+
+
+def _query_beam(index: KHIIndex, q: np.ndarray, pred: Predicate, k: int,
+                entries: List[int], visited: np.ndarray, *, ef: int,
+                c_n: int, return_stats: bool):
+    """Algorithm 3 on the shared pool substrate (single query = one row of
+    the batched numpy ops; same RangeFilter entries and ReconsNbr calls as
+    the heap form)."""
+    pool_size = ef + c_n
+    ids, dists, expanded = beam.np_pool_alloc(1, pool_size)
+    if entries:
+        e = np.asarray(entries, dtype=np.int64)
+        dv = index.vecs[e] - q
+        d0 = np.einsum("ed,ed->e", dv, dv).astype(np.float32)
+        beam.np_pool_seed(ids, dists, expanded, e[None, :], d0[None, :])
+        visited[e] = True
+
+    hops = 0
+    threshold_trace: List[float] = []
+    row = np.array([0])
+    while True:
+        slot, alive = beam.np_pool_best_unexpanded(ids, dists, expanded, ef)
+        if not alive[0]:
+            break
+        u = int(ids[0, slot[0]])
+        expanded[0, slot[0]] = True
+        hops += 1
+        out = recons_nbr(index, u, pred, c_n, visited)
+        buf = np.full((1, c_n), -1, dtype=np.int64)
+        bd = np.full((1, c_n), np.inf, dtype=np.float32)
+        if out:
+            v = np.asarray(out, dtype=np.int64)
+            dv = index.vecs[v] - q
+            buf[0, : len(out)] = v
+            bd[0, : len(out)] = np.einsum("vd,vd->v", dv, dv)
+        beam.np_pool_merge_tail(ids, dists, expanded, row, buf, bd,
+                                np.isfinite(bd), ef)
+        if return_stats:
+            worst = dists[0, : ef][np.isfinite(dists[0, : ef])]
+            threshold_trace.append(
+                float(np.sqrt(worst[-1])) if len(worst) else np.inf)
+
+    got = ids[0, :k]
+    out_ids = got[got >= 0].astype(np.int64)
+    if return_stats:
+        return out_ids, {"hops": hops, "entries": len(entries),
+                         "threshold_trace": threshold_trace,
+                         "visited": int(visited.sum())}
+    return out_ids

@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import (DeviceIndex, SearchParams, _query_one, device_put_index,
-                     resolve_dist_ids)
+                     resolve_dist_ids, validate_search_params)
 from .khi import KHIConfig, KHIIndex
 
 __all__ = ["ShardedKHI", "build_sharded", "make_sharded_search_fn",
@@ -57,8 +57,14 @@ class ShardedKHI:
 
 def build_sharded(vecs: np.ndarray, attrs: np.ndarray, n_shards: int,
                   config: Optional[KHIConfig] = None) -> ShardedKHI:
-    """Round-robin partition + per-shard build + pad&stack."""
-    config = config or KHIConfig()
+    """Round-robin partition + per-shard build + pad&stack.
+
+    Defaults to the jitted device builder (``KHIConfig(builder="device")``):
+    shards share the builder's per-size-class traces, so S-shard builds pay
+    one compile and S executions — the sharded-corpus regime the device
+    path is designed for (DESIGN.md §7). Pass an explicit config for the
+    numpy builders."""
+    config = config or KHIConfig(builder="device")
     n = vecs.shape[0]
     shard_of = np.arange(n) % n_shards
     locals_, offsets, id_maps = [], [], []
@@ -107,10 +113,18 @@ def _merge_topk(gids, dists, k):
 def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
                            model_axis: str = "model",
                            data_axes: Sequence[str] = ("data",),
-                           dist_fn=None):
+                           dist_fn=None, skhi: Optional[ShardedKHI] = None,
+                           on_undersized: str = "raise"):
     """Returns jit(search)(skhi, queries, qlo, qhi) -> (ids, dists) with the
     production sharding: index on `model`, batch on data axes, one all_gather
-    on `model` for the merge."""
+    on `model` for the merge.
+
+    Pass the target ``skhi`` to validate the index-dependent buffer bounds
+    (scan_budget/stack_cap) up front — see ``engine.validate_search_params``.
+    (Dry-run callers lower against ShapeDtypeStructs and skip it.)"""
+    if skhi is not None:
+        params = validate_search_params(params, skhi.di,
+                                        on_undersized=on_undersized)
     dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
     n_shards = mesh.shape[model_axis]
     dspec = P(tuple(data_axes))
@@ -137,9 +151,13 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
 
 
 def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
-                            params: SearchParams, *, dist_fn=None):
+                            params: SearchParams, *, dist_fn=None,
+                            on_undersized: str = "adjust"):
     """Single-device semantic equivalent of the shard_map program (vmap over
-    the shard axis instead of devices) — used by tests on this 1-CPU box."""
+    the shard axis instead of devices) — used by tests on this 1-CPU box.
+    Index-dependent buffer bounds are auto-raised by default."""
+    params = validate_search_params(params, skhi.di,
+                                    on_undersized=on_undersized)
     dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
     n_shards = skhi.num_shards
 

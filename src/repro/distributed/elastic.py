@@ -52,7 +52,9 @@ def elastic_reshard(
     old host can rebuild its replacements without network reads). Other
     ratios degrade to a full rebuild of all changed shards.
     """
-    config = config or KHIConfig()
+    # default to the jitted device builder, matching build_sharded: moved
+    # shards rebuild through the warm per-size-class traces (DESIGN.md §7)
+    config = config or KHIConfig(builder="device")
     n = len(vecs)
     build_fn = build_fn or (lambda v, a: KHIIndex.build(v, a, config))
     new_assign = shard_assignments(n, n_new)

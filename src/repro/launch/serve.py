@@ -28,7 +28,7 @@ def serve_khi(args):
                        attr_kinds=("year", "lognormal", "uniform"),
                        attr_corr=0.6)
     vecs, attrs = make_dataset(spec)
-    cfg = KHIConfig(M=16, builder="bulk")
+    cfg = KHIConfig(M=16, builder="device")  # jitted on-device build (DESIGN.md §7)
     print(f"[serve] building KHI over n={args.n} d={args.d} "
           f"shards={args.shards}")
     if args.shards > 1:

@@ -16,9 +16,13 @@ request-facing layer that turns the jitted engine into a service:
     a multi-device mesh pass ``mesh=`` to get the collective form; without
     one the fan-out vmaps over the stacked shard axis (bit-identical
     semantics, single device).
-  * **LRU result cache** — keyed on (query bytes, range bytes, k, backend);
-    repeated requests (RAG loops, dashboard refreshes) skip the device
-    entirely and return identical ids/dists.
+  * **LRU result cache** — keyed on (query bytes, range bytes, k, backend,
+    epoch); repeated requests (RAG loops, dashboard refreshes) skip the
+    device entirely and return identical ids/dists.
+  * **Epoch hot-swap** — ``swap_index`` atomically replaces the live
+    (sharded) index with a freshly (re)built one without dropping queued
+    requests; every swap bumps the epoch, which invalidates the result
+    cache (DESIGN.md §7 "Epoch swap protocol").
 
 The distance backend (``"jnp" | "pallas_l2" | "pallas_gather_l2"``) comes
 from ``SearchParams.backend`` — the fused gather+L2 kernel is selected the
@@ -39,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import (DeviceIndex, SearchParams, _query_one,
-                           device_put_index, resolve_dist_ids)
+                           device_put_index, resolve_dist_ids,
+                           validate_search_params)
 from ..core.khi import KHIIndex
 from ..core.sharded import ShardedKHI, _merge_topk, _shard_search
 
@@ -93,18 +98,13 @@ class KHIService:
 
     def __init__(self, index, params: Optional[SearchParams] = None, *,
                  config: Optional[ServeConfig] = None, mesh=None,
-                 dist_fn=None):
-        self.params = params or SearchParams()
+                 dist_fn=None, on_undersized: str = "adjust"):
+        self._user_params = params or SearchParams()
+        self._on_undersized = on_undersized
         self.config = config or ServeConfig()
-        if isinstance(index, KHIIndex):
-            index = device_put_index(index)
-        self._sharded = isinstance(index, ShardedKHI)
-        self.index = index
         self._legacy_dist_fn = dist_fn
-        self._dist_ids = resolve_dist_ids(self.params.backend,
-                                          dist_fn=dist_fn)
         self._mesh = mesh
-        self._search = self._build_search_fn()
+        self.epoch = 0
         self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = (
             collections.OrderedDict())
         self._pending: List[Tuple[int, Request]] = []
@@ -112,8 +112,46 @@ class KHIService:
         self.stats = {
             "requests": 0, "cache_hits": 0, "batches": 0, "pad_lanes": 0,
             "device_queries": 0, "traced_buckets": set(),
-            "device_seconds": 0.0,
+            "device_seconds": 0.0, "epoch_swaps": 0,
         }
+        self._install_index(index)
+
+    def _install_index(self, index) -> None:
+        """Bind an index: resolve params against it and rebuild the jitted
+        search closure. Shared by __init__ and swap_index."""
+        if isinstance(index, KHIIndex):
+            index = device_put_index(index)
+        self._sharded = isinstance(index, ShardedKHI)
+        di = index.di if self._sharded else index
+        self.params = validate_search_params(
+            self._user_params, di, on_undersized=self._on_undersized)
+        self._dist_ids = resolve_dist_ids(self.params.backend,
+                                          dist_fn=self._legacy_dist_fn)
+        self.index = index
+        self._search = self._build_search_fn()
+
+    def swap_index(self, index, *, params: Optional[SearchParams] = None,
+                   drain: bool = True) -> dict:
+        """Epoch hot-swap: atomically replace the live index with a freshly
+        (re)built one (KHIIndex / DeviceIndex / ShardedKHI — shardedness may
+        change across epochs).
+
+        By default any queued requests are flushed against the *old* index
+        first (they targeted it) and their results returned, so nothing is
+        dropped; pass ``drain=False`` to let them run on the new epoch at
+        the next flush instead. The result cache is invalidated per epoch:
+        the epoch is part of every cache key (stale entries are
+        unreachable) and the store is cleared eagerly. Returns the drained
+        ``{ticket: Result}`` dict (empty when nothing was pending).
+        """
+        drained = self.flush() if drain else {}
+        if params is not None:
+            self._user_params = params
+        self._install_index(index)
+        self.epoch += 1
+        self._cache.clear()
+        self.stats["epoch_swaps"] += 1
+        return drained
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -136,14 +174,16 @@ class KHIService:
                     lambda qq, lo, hi: fn(di, qq, lo, hi))(q, qlo, qhi)
                 return ids, dists
 
-            return lambda q, lo, hi: single(self.index, q, lo, hi)
+            index = self.index  # bind the epoch's index, not the service
+            return lambda q, lo, hi: single(index, q, lo, hi)
 
         n_shards = self.index.num_shards
         if self._mesh is not None:
             from ..core.sharded import make_sharded_search_fn
             fn = make_sharded_search_fn(p, self._mesh,
                                         dist_fn=self._legacy_dist_fn)
-            return lambda q, lo, hi: fn(self.index, q, lo, hi)
+            index = self.index  # bind the epoch's index, not the service
+            return lambda q, lo, hi: fn(index, q, lo, hi)
 
         @jax.jit
         def fanout(skhi: ShardedKHI, q, qlo, qhi):
@@ -153,7 +193,8 @@ class KHIService:
             gids, dists, _ = jax.vmap(per_shard)(skhi.di, skhi.offsets)
             return _merge_topk(gids, dists, p.k)
 
-        return lambda q, lo, hi: fanout(self.index, q, lo, hi)
+        index = self.index  # bind the epoch's index, not the service
+        return lambda q, lo, hi: fanout(index, q, lo, hi)
 
     def _bucket(self, b: int) -> int:
         for size in self.config.buckets:
@@ -167,6 +208,7 @@ class KHIService:
         h.update(lo.tobytes())
         h.update(hi.tobytes())
         h.update(repr(self.params).encode())
+        h.update(self.epoch.to_bytes(8, "little"))  # per-epoch invalidation
         return h.digest()
 
     def _cache_get(self, key: bytes):
@@ -302,6 +344,7 @@ class KHIService:
         s = dict(self.stats)
         s["traced_buckets"] = sorted(s["traced_buckets"])
         s["cache_entries"] = len(self._cache)
+        s["epoch"] = self.epoch
         dq, ds = s["device_queries"], s["device_seconds"]
         s["device_qps"] = (dq / ds) if ds > 0 else None
         return s

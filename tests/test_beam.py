@@ -1,0 +1,131 @@
+"""Beam substrate (core/beam.py): the sorted-pool contract, the jax/numpy
+twin implementations, and the heap-vs-beam equivalence of the reference
+query (Algorithm 3's two priority queues == one sorted pool, because the
+result set never shrinks — DESIGN.md §7)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beam
+from repro.core import query_ref as qr
+
+
+# --------------------------------------------------------------------- jax
+
+def test_pool_seed_sorted_and_sealed():
+    ids = jnp.asarray([7, -1, 3], jnp.int32)
+    dists = jnp.asarray([2.0, np.inf, 1.0], jnp.float32)
+    valid = ids >= 0
+    pool = beam.pool_seed(6, ids, dists, valid)
+    assert pool.ids.tolist()[:2] == [3, 7]
+    assert pool.dists.tolist()[:2] == [1.0, 2.0]
+    assert not bool(pool.expanded[0]) and not bool(pool.expanded[1])
+    # sealed slots: -1 / inf / expanded
+    assert pool.ids.tolist()[2:] == [-1, -1, -1, -1]
+    assert all(pool.expanded.tolist()[2:])
+
+
+def test_pool_step_cycle_matches_manual():
+    """One frontier step: pop best, merge two neighbors, pool stays sorted
+    ascending and truncates to the beam."""
+    ef = 2
+    pool = beam.pool_seed(ef + 2, jnp.asarray([5, 9], jnp.int32),
+                          jnp.asarray([4.0, 8.0], jnp.float32),
+                          jnp.asarray([True, True]))
+    assert bool(beam.pool_frontier_alive(pool, ef))
+    slot, u = beam.pool_best_unexpanded(pool, ef)
+    assert (int(slot), int(u)) == (0, 5)
+    pool = beam.pool_mark_expanded(pool, slot)
+    pool = beam.pool_merge_tail(
+        pool, ef, jnp.asarray([1, 2], jnp.int32),
+        jnp.asarray([3.0, 9.0], jnp.float32), jnp.asarray([True, True]))
+    # beam = [1 (3.0), 5 (4.0)]; 9.0 candidates fell off
+    assert pool.ids.tolist()[:ef] == [1, 5]
+    assert pool.dists.tolist()[:ef] == [3.0, 4.0]
+    slot, u = beam.pool_best_unexpanded(pool, ef)
+    assert int(u) == 1                      # 5 already expanded
+    pool = beam.pool_mark_expanded(pool, slot)
+    assert not bool(beam.pool_frontier_alive(pool, ef))
+
+
+def test_visited_mark_drops_invalid():
+    v = beam.visited_init(4)
+    v = beam.visited_mark(v, jnp.asarray([2, -1, 9], jnp.int32),
+                          jnp.asarray([True, False, False]))
+    assert v.tolist() == [False, False, True, False]
+
+
+# ------------------------------------------------------------------- numpy
+
+def test_np_pool_matches_jax_pool_on_random_trace():
+    """Drive both implementations through the same random merge sequence;
+    the pools must agree slot-for-slot (same stable-sort contract)."""
+    rng = np.random.default_rng(0)
+    ef, tail, steps = 8, 4, 12
+    ids, dists, expanded = beam.np_pool_alloc(1, ef + tail)
+    seeds = rng.permutation(100)[:4].astype(np.int64)
+    seed_d = rng.random(4).astype(np.float32)
+    beam.np_pool_seed(ids, dists, expanded, seeds[None], seed_d[None])
+    jpool = beam.pool_seed(ef + tail, jnp.asarray(seeds, jnp.int32),
+                           jnp.asarray(seed_d), jnp.ones(4, bool))
+    row = np.array([0])
+    for step in range(steps):
+        nid = rng.integers(0, 1000, tail).astype(np.int64)
+        nd = rng.random(tail).astype(np.float32)
+        valid = rng.random(tail) < 0.7
+        slot_np, alive_np = beam.np_pool_best_unexpanded(ids, dists,
+                                                         expanded, ef)
+        alive_j = bool(beam.pool_frontier_alive(jpool, ef))
+        assert bool(alive_np[0]) == alive_j
+        if alive_j:
+            slot_j, _ = beam.pool_best_unexpanded(jpool, ef)
+            assert int(slot_j) == int(slot_np[0])
+            expanded[0, slot_np[0]] = True
+            jpool = beam.pool_mark_expanded(jpool, slot_j)
+        beam.np_pool_merge_tail(ids, dists, expanded, row, nid[None],
+                                nd[None], valid[None], ef)
+        jpool = beam.pool_merge_tail(jpool, ef, jnp.asarray(nid, jnp.int32),
+                                     jnp.asarray(nd), jnp.asarray(valid))
+        np.testing.assert_array_equal(ids[0], np.asarray(jpool.ids, np.int64))
+        np.testing.assert_array_equal(dists[0], np.asarray(jpool.dists))
+        np.testing.assert_array_equal(expanded[0], np.asarray(jpool.expanded))
+
+
+def test_np_visited_fresh_mark():
+    visited = np.zeros((2, 8), bool)
+    rows = np.array([0, 1])
+    nbr = np.array([[1, 2], [1, 1]])
+    valid = np.array([[True, False], [True, True]])
+    fresh = beam.np_visited_fresh_mark(visited, rows, nbr, valid)
+    assert fresh.tolist() == [[True, False], [True, True]]
+    # second touch is stale
+    fresh2 = beam.np_visited_fresh_mark(visited, rows, nbr, valid)
+    assert fresh2.tolist() == [[False, False], [False, False]]
+
+
+# ------------------------------------------------- reference query parity
+
+def test_query_ref_beam_mode_matches_heap(tiny_index, tiny_queries):
+    """The heap oracle and the beam-substrate mode must return the same
+    result sets on the tier-1 workload (fixed seeds; equivalence argument
+    in core/beam.py's module docstring)."""
+    Q, preds = tiny_queries
+    for q, p in zip(Q, preds):
+        heap_ids = qr.query(tiny_index, q, p, 10, ef=48, pool="heap")
+        beam_ids = qr.query(tiny_index, q, p, 10, ef=48, pool="beam")
+        assert sorted(heap_ids.tolist()) == sorted(beam_ids.tolist())
+
+
+def test_query_ref_beam_mode_stats(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    ids, stats = qr.query(tiny_index, Q[0], preds[0], 10, ef=48,
+                          pool="beam", return_stats=True)
+    assert stats["hops"] >= 1 and stats["visited"] >= len(ids)
+    assert all(p >= 0 for p in ids)
+
+
+def test_query_ref_bad_pool_rejected(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    with pytest.raises(ValueError, match="pool"):
+        qr.query(tiny_index, Q[0], preds[0], 5, pool="deque")

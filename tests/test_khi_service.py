@@ -121,6 +121,65 @@ def test_sharded_service_matches_emulated_fanout(tiny_data, workload):
     np.testing.assert_allclose(dists, np.asarray(md), rtol=1e-5)
 
 
+def test_swap_index_epoch_invalidates_cache(tiny_data, tiny_index, workload):
+    """Hot-swap: a rebuilt index replaces the live one, the epoch bumps and
+    cached results from the old epoch can never be served again."""
+    vecs, attrs = tiny_data
+    Q, _, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=64))
+    ids_old, _ = svc.search(Q[:3], lo[:3], hi[:3])
+    assert svc.snapshot()["cache_entries"] == 3
+
+    rebuilt = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="device"))
+    svc.swap_index(rebuilt)
+    snap = svc.snapshot()
+    assert snap["epoch"] == 1 and snap["epoch_swaps"] == 1
+    assert snap["cache_entries"] == 0
+    before = svc.snapshot()["batches"]
+    ids_new, dists_new = svc.search(Q[:3], lo[:3], hi[:3])
+    assert svc.snapshot()["batches"] == before + 1, \
+        "old-epoch cache entry served after swap"
+    # new epoch answers come from the new (sharded, device-built) index
+    mi, md, _ = search_sharded_emulated(
+        rebuilt, Q[:3], lo[:3], hi[:3], svc.params)
+    np.testing.assert_array_equal(ids_new, np.asarray(mi))
+    np.testing.assert_allclose(dists_new, np.asarray(md), rtol=1e-5)
+
+
+def test_swap_index_drains_pending_on_old_epoch(tiny_data, tiny_index,
+                                                workload):
+    """Queued requests are not dropped by a swap: they flush against the
+    index they targeted and their Results come back from swap_index."""
+    vecs, attrs = tiny_data
+    Q, preds, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=0))
+    want, _ = svc.search(Q[:1], lo[:1], hi[:1])
+    t = svc.submit(Request(Q[0], lo[0], hi[0]))
+    rebuilt = build_sharded(vecs, attrs, 3, KHIConfig(M=16, builder="device"))
+    drained = svc.swap_index(rebuilt)
+    assert set(drained) == {t}
+    np.testing.assert_array_equal(drained[t].ids, want[0])
+    assert svc.flush() == {}                   # nothing left behind
+    assert svc.epoch == 1
+
+
+def test_swap_index_no_drain_runs_on_new_epoch(tiny_data, tiny_index,
+                                               workload):
+    vecs, attrs = tiny_data
+    Q, _, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=0))
+    t = svc.submit(Request(Q[0], lo[0], hi[0]))
+    rebuilt = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="device"))
+    assert svc.swap_index(rebuilt, drain=False) == {}
+    out = svc.flush()                          # executes on the new epoch
+    mi, _, _ = search_sharded_emulated(
+        rebuilt, Q[:1], lo[:1], hi[:1], svc.params)
+    np.testing.assert_array_equal(out[t].ids, np.asarray(mi)[0])
+
+
 def test_bad_bucket_config_rejected():
     with pytest.raises(ValueError, match="buckets"):
         ServeConfig(buckets=(32, 8))

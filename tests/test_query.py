@@ -61,10 +61,13 @@ def test_unconstrained_predicate_matches_plain_ann(tiny_index):
 def test_jit_engine_matches_reference(tiny_index, tiny_queries):
     Q, preds = tiny_queries
     params = eng.SearchParams(k=10, ef=48, c_e=10, c_n=tiny_index.config.M)
+    # search_batch auto-raises scan_budget to the derived exact value, at
+    # which the engine's windowed entry scan equals the reference's
+    # full-node scan — so the oracle runs unbudgeted here.
     ids, dists, hops = eng.search_batch(tiny_index, Q, preds, params)
     agree = []
     for i, (q, p) in enumerate(zip(Q, preds)):
-        ref = qr.query(tiny_index, q, p, 10, ef=48, scan_budget=params.scan_budget)
+        ref = qr.query(tiny_index, q, p, 10, ef=48)
         got = [x for x in ids[i].tolist() if x >= 0]
         assert all(p.matches(tiny_index.attrs[g]) for g in got)
         agree.append(len(set(ref.tolist()) & set(got)) / max(len(ref), 1))
@@ -111,8 +114,69 @@ def test_save_load_roundtrip(tmp_path, tiny_index, tiny_queries):
     tiny_index.save(f)
     idx2 = KHIIndex.load(f)
     assert (idx2.nbrs == tiny_index.nbrs).all()
-    assert (idx2.tree.path == tiny_index.tree.path).all()
+    # full tree-array roundtrip
+    t, t2 = tiny_index.tree, idx2.tree
+    for field in ("left", "right", "parent", "dim", "bl", "level", "order",
+                  "start", "count", "path"):
+        np.testing.assert_array_equal(getattr(t2, field), getattr(t, field))
+    for field in ("split", "lo", "hi"):
+        np.testing.assert_array_equal(
+            np.nan_to_num(getattr(t2, field)),
+            np.nan_to_num(getattr(t, field)))
+    assert (t2.tau, t2.leaf_capacity, t2.m) == (t.tau, t.leaf_capacity, t.m)
+    # config echo + build provenance survive the roundtrip
+    assert idx2.config == tiny_index.config
+    assert idx2.build_seconds == tiny_index.build_seconds > 0
     Q, preds = tiny_queries
     a = qr.query(tiny_index, Q[0], preds[0], 10)
     b = qr.query(idx2, Q[0], preds[0], 10)
     assert a.tolist() == b.tolist()
+
+
+def test_device_builder_config_roundtrip(tmp_path, tiny_data):
+    """builder="device" is preserved through save/load (config echo)."""
+    vecs, attrs = tiny_data
+    idx = KHIIndex.build(vecs[:300], attrs[:300],
+                         KHIConfig(M=8, builder="device"))
+    f = str(tmp_path / "dev.npz")
+    idx.save(f)
+    idx2 = KHIIndex.load(f)
+    assert idx2.config.builder == "device"
+    assert (idx2.nbrs == idx.nbrs).all()
+
+
+def test_search_params_validation(tiny_index):
+    """Undersized scan_budget/stack_cap must error (or auto-raise), never
+    silently return -1 entries for large scannable nodes."""
+    di = eng.device_put_index(tiny_index)
+    need_scan = eng.required_scan_budget(di)
+    need_stack = eng.required_stack_cap(di)
+    assert need_scan > 8 and need_stack == tiny_index.height + 1
+
+    small = eng.SearchParams(scan_budget=8, stack_cap=4)
+    with pytest.raises(ValueError, match="scan_budget"):
+        eng.make_search_fn(small, di=di)
+    adj = eng.validate_search_params(small, di, on_undersized="adjust")
+    assert adj.scan_budget == need_scan and adj.stack_cap == need_stack
+    # sufficient params pass through unchanged
+    ok = eng.SearchParams(scan_budget=need_scan, stack_cap=need_stack)
+    assert eng.validate_search_params(ok, di) is ok
+    # derivation only raises, never lowers
+    big = eng.SearchParams(scan_budget=10 * need_scan, stack_cap=64)
+    assert eng.derive_search_params(big, di).scan_budget == 10 * need_scan
+    # legacy escape hatch
+    assert eng.validate_search_params(small, di,
+                                      on_undersized="ignore") is small
+
+
+def test_search_params_validation_sharded(tiny_data):
+    """Validation sees through the shard-stacked DeviceIndex layout."""
+    from repro.core.sharded import build_sharded
+    vecs, attrs = tiny_data
+    skhi = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="device"))
+    need = eng.required_scan_budget(skhi.di)
+    assert need >= 1
+    assert eng.required_stack_cap(skhi.di) == skhi.di.nbrs.shape[2] + 1
+    adj = eng.validate_search_params(eng.SearchParams(scan_budget=1),
+                                     skhi.di, on_undersized="adjust")
+    assert adj.scan_budget >= need
