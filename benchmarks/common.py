@@ -90,6 +90,74 @@ def run_queries(method_name: str, method, vecs, attrs, Q, preds, k: int,
             "visited": float(np.mean(visited))}
 
 
+# engine_search staging memo: device transfer once per index, jit closure
+# once per (index, params) — sweep grids re-measure, they don't re-stage.
+# Values hold the index object itself, so a live cache entry pins the id()
+# key's referent and stale-id collisions cannot occur.
+_ENGINE_STAGE_CACHE: Dict[int, tuple] = {}
+
+
+def engine_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
+                  backend: str = "jnp", expand_width: int = 1,
+                  repeats: int = 1):
+    """Stage + jit + run the batched device engine once per repeat (compile
+    excluded); returns (ids, hops, seconds) for the best wall-clock run.
+    The shared staging path for every engine-measuring suite — qps_recall,
+    qps_smoke and convergence all go through here so they cannot drift."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import (SearchParams, device_put_index,
+                                   make_search_fn)
+
+    params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend,
+                          expand_width=expand_width)
+    cached = _ENGINE_STAGE_CACHE.get(id(index))
+    if cached is None or cached[0] is not index:
+        cached = (index, device_put_index(index), {})
+        _ENGINE_STAGE_CACHE[id(index)] = cached
+    _, di, fns = cached
+    fn = fns.get(params)
+    if fn is None:
+        fn = fns[params] = make_search_fn(params, di=di,
+                                          on_undersized="adjust")
+    qv = jnp.asarray(Q)
+    qlo = jnp.asarray(np.stack([p.lo for p in preds]).astype(np.float32))
+    qhi = jnp.asarray(np.stack([p.hi for p in preds]).astype(np.float32))
+    jax.block_until_ready(fn(di, qv, qlo, qhi))    # compile
+    best = None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        ids, _, hops = jax.block_until_ready(fn(di, qv, qlo, qhi))
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[2]:
+            best = (ids, hops, dt)
+    return np.asarray(best[0]), np.asarray(best[1]), best[2]
+
+
+def ground_truth(vecs, attrs, Q, preds, k: int) -> List[np.ndarray]:
+    """Exact brute-force top-k per query — compute ONCE per (Q, preds)
+    workload and pass to recall_at_k across the sweep grid (the O(|Q|*n)
+    scan dominates small-scale sweeps otherwise)."""
+    return [qr.brute_force(vecs, attrs, q, p, k) for q, p in zip(Q, preds)]
+
+
+def recall_at_k(vecs, attrs, Q, preds, ids, k: int,
+                gt: Optional[List[np.ndarray]] = None) -> float:
+    """Mean recall@k of returned id rows vs exact ground truth (the one
+    protocol every suite shares). ``gt`` short-circuits the brute-force
+    pass — see ``ground_truth``."""
+    if gt is None:
+        gt = ground_truth(vecs, attrs, Q, preds, k)
+    recalls = []
+    for i in range(len(Q)):
+        if len(gt[i]):
+            got = [x for x in np.asarray(ids)[i].tolist() if x >= 0]
+            recalls.append(len(set(gt[i].tolist()) & set(got))
+                           / min(k, len(gt[i])))
+    return float(np.mean(recalls)) if recalls else 1.0
+
+
 def qps_at_recall(points: List[dict], target: float) -> Optional[float]:
     """Best QPS among points with recall >= target (paper's protocol)."""
     ok = [p for p in points if p["recall"] >= target]

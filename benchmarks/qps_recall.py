@@ -6,60 +6,44 @@ KHI/iRangeGraph + KHI/Prefiltering speedups, plus the visited-work ratio.
 ``engine_backends`` adds batched jitted-engine points per distance backend
 ("jnp" | "pallas_l2" | "pallas_gather_l2") next to the per-query numpy
 methods — the backend axis of the serving path, measured under the same
-recall protocol.
+recall protocol. ``engine_expand`` sweeps the wide-frontier width on top
+(QPS x recall x E, DESIGN.md §8): every (backend, E) pair gets its own
+points list labelled ``engine[<backend>,E<E>]``, with the mean device hop
+count recorded per point so the fewer-fatter-hops tradeoff is a committed
+number, not a claim.
 """
 
 from __future__ import annotations
-
-import time
 
 import numpy as np
 
 from repro.data import make_dataset, make_queries
 
-from .common import (SCALES, build_methods, qps_at_recall, run_queries,
-                     save_results, scaled_spec)
+from .common import (SCALES, build_methods, engine_search, ground_truth,
+                     qps_at_recall, recall_at_k, run_queries, save_results,
+                     scaled_spec)
 
 SIGMAS = {"1/16": 1 / 16, "1/64": 1 / 64, "1/256": 1 / 256}
 
 
 def _engine_point(index, vecs, attrs, Q, preds, k: int, ef: int,
-                  backend: str) -> dict:
-    """One batched-engine measurement (compile excluded from timing)."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.core import query_ref as qr
-    from repro.core.engine import (SearchParams, device_put_index,
-                                   make_search_fn)
-
-    params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend)
-    # build the jitted fn ONCE and reuse it — search_batch would rebuild the
-    # jit wrapper per call and the "warm" call would warm nothing
-    di = device_put_index(index)
-    fn = make_search_fn(params, di=di, on_undersized="adjust")
-    qv = jnp.asarray(Q)
-    qlo = jnp.asarray(np.stack([p.lo for p in preds]).astype(np.float32))
-    qhi = jnp.asarray(np.stack([p.hi for p in preds]).astype(np.float32))
-    jax.block_until_ready(fn(di, qv, qlo, qhi))    # compile
-    t0 = time.perf_counter()
-    ids, _, _ = jax.block_until_ready(fn(di, qv, qlo, qhi))
-    dt = time.perf_counter() - t0
-    ids = np.asarray(ids)
-    recalls = []
-    for i, (q, p) in enumerate(zip(Q, preds)):
-        gt = qr.brute_force(vecs, attrs, q, p, k)
-        if len(gt):
-            got = [x for x in ids[i].tolist() if x >= 0]
-            recalls.append(len(set(gt.tolist()) & set(got))
-                           / min(k, len(gt)))
-    return {"method": f"engine[{backend}]", "ef": ef, "k": k,
-            "recall": float(np.mean(recalls)) if recalls else 1.0,
-            "qps": len(Q) / dt, "visited": None}
+                  backend: str, expand_width: int = 1,
+                  repeats: int = 1, gt=None) -> dict:
+    """One batched-engine measurement (compile excluded from timing; the
+    jitted fn is built once and reused — see common.engine_search).
+    ``gt`` is the workload's precomputed ground truth (common.ground_truth)
+    so a sweep grid pays one brute-force pass, not one per point."""
+    ids, hops, dt = engine_search(index, Q, preds, k, ef, backend=backend,
+                                  expand_width=expand_width, repeats=repeats)
+    return {"method": f"engine[{backend},E{expand_width}]", "ef": ef, "k": k,
+            "expand_width": expand_width,
+            "recall": recall_at_k(vecs, attrs, Q, preds, ids, k, gt=gt),
+            "qps": len(Q) / dt, "visited": None,
+            "hops": float(hops.mean())}
 
 
 def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
-        k: int = 10, engine_backends=()):
+        k: int = 10, engine_backends=(), engine_expand=(1,)):
     s = SCALES[scale]
     rows = []
     for ds in datasets:
@@ -75,15 +59,21 @@ def run(scale: str = "small", datasets=("laion", "msmarco", "dblp", "youtube"),
                 pts = [run_queries(mname, m, vecs, attrs, Q, preds, k, ef)
                        for ef in (s["efs"] if mname != "prefilter" else (0,))]
                 points[mname] = pts
+            gt = (ground_truth(vecs, attrs, Q, preds, k)
+                  if engine_backends else None)
             for backend in engine_backends:
-                points[f"engine[{backend}]"] = [
-                    _engine_point(methods["khi"], vecs, attrs, Q, preds,
-                                  k, ef, backend) for ef in s["efs"]]
+                for E in engine_expand:
+                    points[f"engine[{backend},E{E}]"] = [
+                        _engine_point(methods["khi"], vecs, attrs, Q, preds,
+                                      k, ef, backend, expand_width=E, gt=gt)
+                        for ef in s["efs"]]
             qk = qps_at_recall(points["khi"], target)
             qi = qps_at_recall(points["irange"], target)
             qp = points["prefilter"][0]["qps"]
-            engine_qps = {b: qps_at_recall(points[f"engine[{b}]"], target)
-                          for b in engine_backends}
+            engine_qps = {
+                f"{b},E{E}": qps_at_recall(points[f"engine[{b},E{E}]"],
+                                           target)
+                for b in engine_backends for E in engine_expand}
             # work ratio at matched recall
             vk = min((p["visited"] for p in points["khi"]
                       if p["recall"] >= target), default=None)

@@ -16,13 +16,13 @@ def main(argv=None) -> None:
     ap.add_argument("--scale", default="smoke",
                     choices=["smoke", "small", "paper"])
     ap.add_argument("--only", default=None,
-                    help="comma list: qps_recall,convergence,vary_k,"
-                         "vary_card,build,build_bench,kernels,serve")
+                    help="comma list: qps_recall,qps_smoke,convergence,"
+                         "vary_k,vary_card,build,build_bench,kernels,serve")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import build_and_size, build_bench, convergence, kernels_bench
-    from . import qps_recall, serve_bench, vary_card, vary_k
+    from . import qps_recall, qps_smoke, serve_bench, vary_card, vary_k
 
     lines = ["name,us_per_call,derived"]
     t0 = time.time()
@@ -32,6 +32,8 @@ def main(argv=None) -> None:
 
     if want("qps_recall"):
         lines += qps_recall.csv_lines(qps_recall.run(args.scale))
+    if want("qps_smoke"):
+        lines += qps_smoke.csv_lines(qps_smoke.run(args.scale))
     if want("convergence"):
         lines += convergence.csv_lines(convergence.run(args.scale))
     if want("vary_k"):

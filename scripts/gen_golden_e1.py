@@ -1,0 +1,59 @@
+"""Regenerate the E=1 golden snapshot (tests/golden/engine_e1.json).
+
+The wide-frontier engine promises ``expand_width=1`` is *bit-identical* to
+the single-expansion engine it replaced (ids, dists, hops) on fixed seeds,
+across every distance backend. This script records the canonical workload's
+outputs; ``tests/test_wide_frontier.py`` replays it. The committed snapshot
+was produced by the pre-wide-frontier engine — only regenerate it when the
+engine semantics are *intentionally* changed, and say so in the PR.
+
+    PYTHONPATH=src python scripts/gen_golden_e1.py
+"""
+
+import json
+import os
+import pathlib
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.data import DatasetSpec, make_dataset, make_queries
+
+# Mirrors tests/conftest.py's tiny fixture + test_engine_backends params.
+SPEC = DatasetSpec("tiny", n=1200, d=24, m=3, seed=0,
+                   attr_kinds=("year", "lognormal", "uniform"),
+                   attr_corr=0.6, n_clusters=16)
+N_QUERIES = 8
+PARAMS = dict(k=10, ef=32, c_e=10, c_n=16)
+
+
+def main() -> None:
+    vecs, attrs = make_dataset(SPEC)
+    index = KHIIndex.build(vecs, attrs, KHIConfig(M=16, merge_chunk=32))
+    Q, preds = make_queries(vecs, attrs, n_queries=24, sigma=1 / 16, seed=7)
+    Q, preds = Q[:N_QUERIES], preds[:N_QUERIES]
+    out = {"spec": "tiny/n=1200/d=24/m=3/seed=0", "n_queries": N_QUERIES,
+           "params": PARAMS, "backends": {}}
+    for backend in eng.BACKENDS:
+        p = eng.SearchParams(backend=backend, **PARAMS)
+        ids, dists, hops = eng.search_batch(index, Q, preds, p)
+        out["backends"][backend] = {
+            "ids": np.asarray(ids).tolist(),
+            # f32 -> double repr roundtrips exactly; tests cast back to f32
+            "dists": np.asarray(dists, np.float64).tolist(),
+            "hops": np.asarray(hops).tolist(),
+        }
+    dst = pathlib.Path(__file__).resolve().parent.parent / "tests" / \
+        "golden" / "engine_e1.json"
+    dst.parent.mkdir(exist_ok=True)
+    dst.write_text(json.dumps(out, indent=1))
+    print(f"wrote {dst}")
+
+
+if __name__ == "__main__":
+    main()

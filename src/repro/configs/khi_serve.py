@@ -20,6 +20,7 @@ class KHIServeConfig:
     ef: int = 128
     c_e: int = 10
     c_n: int = 32
+    expand_width: int = 4               # wide frontier: E expansions per hop
     # serving-layer knobs (repro.serve.khi_service)
     backend: str = "pallas_gather_l2"   # distance backend on TPU
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
@@ -29,7 +30,8 @@ class KHIServeConfig:
         """SearchParams for this serving cell (engine-side knobs only)."""
         from ..core.engine import SearchParams
         return SearchParams(k=self.k, ef=self.ef, c_e=self.c_e, c_n=self.c_n,
-                            backend=self.backend)
+                            backend=self.backend,
+                            expand_width=self.expand_width)
 
     def serve_config(self):
         from ..serve.khi_service import ServeConfig

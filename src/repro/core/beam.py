@@ -58,13 +58,17 @@ __all__ = [
     "pool_seed",
     "pool_frontier_alive",
     "pool_best_unexpanded",
+    "pool_top_unexpanded",
     "pool_mark_expanded",
+    "pool_mark_expanded_many",
     "pool_merge_tail",
     "visited_init",
     "visited_mark",
     "np_pool_alloc",
     "np_pool_seed",
     "np_pool_best_unexpanded",
+    "np_pool_top_unexpanded",
+    "np_pool_mark_expanded_many",
     "np_pool_merge_tail",
     "np_visited_fresh_mark",
 ]
@@ -110,8 +114,37 @@ def pool_best_unexpanded(pool: Pool, ef: int) -> Tuple[jax.Array, jax.Array]:
     return slot, pool.ids[slot]
 
 
+def pool_top_unexpanded(pool: Pool, ef: int,
+                        width: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(slots (width,), ids (width,), valid (width,)) of the up-to-``width``
+    closest unexpanded beam candidates, ascending by distance.
+
+    The pool invariant (sorted ascending) makes this a stable partition of
+    the beam's frontier mask, not a sort over distances: the first ``width``
+    frontier slots *in pool order* are exactly the ``width`` closest
+    unexpanded candidates, with ties broken the same way a repeated
+    ``pool_best_unexpanded`` + ``pool_mark_expanded`` cycle would break
+    them (first slot wins). ``width=1`` therefore returns the same slot as
+    ``pool_best_unexpanded`` whenever the frontier is alive."""
+    frontier = ~pool.expanded[:ef] & jnp.isfinite(pool.dists[:ef])
+    # stable argsort of the negated mask = frontier slots first, pool order
+    slots = jnp.argsort(jnp.where(frontier, 0, 1).astype(jnp.int32),
+                        stable=True)[:width]
+    valid = frontier[slots]
+    return slots, pool.ids[slots], valid
+
+
 def pool_mark_expanded(pool: Pool, slot: jax.Array) -> Pool:
     return pool._replace(expanded=pool.expanded.at[slot].set(True))
+
+
+def pool_mark_expanded_many(pool: Pool, slots: jax.Array,
+                            valid: jax.Array) -> Pool:
+    """Mark ``slots[valid]`` expanded (invalid lanes dropped)."""
+    size = pool.expanded.shape[0]
+    idx = jnp.where(valid, slots, size)
+    return pool._replace(
+        expanded=pool.expanded.at[idx].set(True, mode="drop"))
 
 
 def pool_merge_tail(pool: Pool, ef: int, new_ids: jax.Array,
@@ -181,6 +214,26 @@ def np_pool_best_unexpanded(ids: np.ndarray, dists: np.ndarray,
     slot = np.argmin(dmask, axis=1)
     alive = np.isfinite(dmask[np.arange(ids.shape[0]), slot])
     return slot, alive
+
+
+def np_pool_top_unexpanded(ids: np.ndarray, dists: np.ndarray,
+                           expanded: np.ndarray, ef: int,
+                           width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched twin of ``pool_top_unexpanded``: per-row (slots (B, width),
+    valid (B, width)) of the closest unexpanded beam slots, ascending by
+    distance (pool order). Same stable-partition contract as the jax op."""
+    frontier = ~expanded[:, :ef] & np.isfinite(dists[:, :ef])
+    slots = np.argsort(~frontier, axis=1, kind="stable")[:, :width]
+    valid = np.take_along_axis(frontier, slots, axis=1)
+    return slots, valid
+
+
+def np_pool_mark_expanded_many(expanded: np.ndarray, rows: np.ndarray,
+                               slots: np.ndarray,
+                               valid: np.ndarray) -> None:
+    """Mark ``slots[valid]`` of the given rows expanded, in place (twin of
+    ``pool_mark_expanded_many``; invalid lanes are no-ops)."""
+    expanded[rows[:, None], slots] |= valid
 
 
 def np_pool_merge_tail(ids: np.ndarray, dists: np.ndarray,

@@ -15,6 +15,17 @@ Everything is a fixed-shape array program (see DESIGN.md §2):
                                 never be expanded);
   * visited set              -> dense per-query bool mask (n,).
 
+The inner loop is a **wide frontier** (DESIGN.md §8): every hop expands the
+top-``expand_width`` unexpanded pool entries at once, fuses their E*H*M
+neighbor rows into one candidate stream (scatter-based first-occurrence
+dedup, per-expansion c_n budgets), and evaluates all surviving candidates
+in a single distance call — so a hop is one fat gather + one MXU-shaped
+reduction instead of E narrow ones, and the vmapped batch takes ~E-fold
+fewer lockstep iterations. ``expand_width=1`` is bit-identical to the
+single-expansion engine (pinned against a committed golden snapshot);
+``expand_width>1`` changes hop order only — the matching reference
+semantics live in ``query_ref.query(expand_width=)``.
+
 ``search_batch`` vmaps the per-query program and jits the whole thing;
 distance evaluation is pluggable (``SearchParams.backend``):
 
@@ -154,6 +165,17 @@ class SearchParams:
     scan_budget: int = 64    # entry-scan window per candidate node
     max_hops: int = 0        # 0 => ef * 4 (generous; loop exits on its own)
     backend: str = "jnp"     # distance backend, one of BACKENDS
+    expand_width: int = 1    # frontier width E: pool entries expanded per hop
+
+    def __post_init__(self):
+        if self.expand_width < 1:
+            raise ValueError(f"expand_width must be >= 1, "
+                             f"got {self.expand_width}")
+        if self.expand_width > self.ef:
+            # the frontier can never hold more than ef candidates, and the
+            # hop body's (E, H, M) gather assumes E selected slots exist
+            raise ValueError(f"expand_width must be <= ef "
+                             f"({self.ef}), got {self.expand_width}")
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
@@ -367,10 +389,13 @@ def _dist_ids_pallas_l2(vecs, q, ids, *, interpret):
 
 
 def _dist_ids_gather_l2(vecs, q, ids, *, interpret):
-    from ..kernels.gather_l2 import gather_l2_raw
+    # blocked production form: C_BLK candidate rows per grid step, one
+    # vectorized tile reduction (bitwise-equal to the row-per-step
+    # gather_l2_raw — tests/test_kernels.py pins it)
+    from ..kernels.gather_l2 import gather_l2_blocked_raw
 
-    return gather_l2_raw(ids[None], vecs, q[None].astype(vecs.dtype),
-                         interpret=interpret)[0]
+    return gather_l2_blocked_raw(ids[None], vecs, q[None].astype(vecs.dtype),
+                                 interpret=interpret)[0]
 
 
 def _ceil_mult(x: int, m: int) -> int:
@@ -408,6 +433,8 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
     n = di.n
     H, M = di.nbrs.shape[1], di.nbrs.shape[2]
     HM = H * M
+    E = p.expand_width
+    L = E * HM                               # fused candidate stream length
     INF = jnp.float32(jnp.inf)
 
     entries = _range_filter(di, qlo, qhi, p)
@@ -418,52 +445,71 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
     visited = beam.visited_init(n)
     visited = beam.visited_mark(visited, entries, e_valid)
 
-    # sorted pool (beam substrate): beam [0:ef] + scratch tail of c_n slots
-    pool0 = beam.pool_seed(p.ef + p.c_n, entries, e_dist, e_valid)
+    # sorted pool (beam substrate): beam [0:ef] + scratch tail of E*c_n slots
+    pool0 = beam.pool_seed(p.ef + E * p.c_n, entries, e_dist, e_valid)
+    # intra-hop first-occurrence scratch: seen[i] holds the hop-tagged
+    # stream position of id i's latest occurrence (see dedup note in body)
+    seen0 = jnp.full((n,), -1, jnp.int32)
 
     def cond(st):
-        pool, visited, hops = st
+        pool, visited, seen, hops = st
         return beam.pool_frontier_alive(pool, p.ef) & (hops < p.hops())
 
     def body(st):
-        pool, visited, hops = st
-        u_slot, u = beam.pool_best_unexpanded(pool, p.ef)
-        pool = beam.pool_mark_expanded(pool, u_slot)
+        pool, visited, seen, hops = st
+        # -------- wide frontier: top-E unexpanded, closest first
+        u_slots, us, uvalid = beam.pool_top_unexpanded(pool, p.ef, E)
+        pool = beam.pool_mark_expanded_many(pool, u_slots, uvalid)
 
-        # -------- ReconsNbr (Alg. 2), vectorized with exact budget semantics
-        rows = di.nbrs[u]                       # (H, M)
-        nid = rows.reshape(HM)
-        valid = nid >= 0
+        # -------- ReconsNbr (Alg. 2) over the fused E*H*M candidate stream,
+        # with exact per-expansion budget semantics
+        u_safe = jnp.where(uvalid, us, 0)
+        rows = di.nbrs[u_safe]                  # (E, H, M) — one gather
+        nid = rows.reshape(L)
+        valid = ((rows >= 0) & uvalid[:, None, None]).reshape(L)
         nid_safe = jnp.where(valid, nid, 0)
-        # intra-scan dedup: the sequential scan marks-then-skips, so only the
-        # first occurrence of an id (in level order) counts. Stable argsort
-        # groups equal ids keeping original order; mark group heads.
-        sidx = jnp.argsort(nid)
-        snid = nid[sidx]
-        head = jnp.concatenate([jnp.array([True]), snid[1:] != snid[:-1]])
-        is_first = jnp.zeros((HM,), jnp.bool_).at[sidx].set(head)
-        fresh = valid & is_first & ~visited[nid_safe]
+
+        # intra-stream dedup: the sequential scan marks-then-skips, so only
+        # an id's first occurrence (expansion-major, level order) counts.
+        # Scatter-based first-occurrence mark, O(L) instead of the former
+        # O(L log L) argsort: every lane scatter-maxes a hop-tagged key that
+        # DECREASES along the stream, so after the scatter an id's slot
+        # holds its earliest occurrence this hop; keys grow by L per hop,
+        # which makes stale entries lose every future max without an O(n)
+        # reset. A lane is first iff it reads its own key back.
+        pos = jnp.arange(L, dtype=jnp.int32)
+        tag = hops * L + (L - 1 - pos)
+        seen = seen.at[jnp.where(valid, nid, n)].max(tag, mode="drop")
+        is_first = valid & (seen[nid_safe] == tag)
+
+        fresh = is_first & ~visited[nid_safe]
         a = di.attrs[nid_safe]
         in_range = valid & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
         append = fresh & in_range
-        napp_excl = jnp.cumsum(append) - append.astype(jnp.int32)
-        scanned = napp_excl < p.c_n             # loop alive when reaching j
+        # per-expansion budget: each of the E expanded candidates scans its
+        # own HM segment under its own c_n window (segmented excl. cumsum)
+        seg = append.reshape(E, HM)
+        napp_excl = (jnp.cumsum(seg, axis=1) - seg).reshape(L)
+        scanned = napp_excl < p.c_n             # scan alive when reaching j
         visited = beam.visited_mark(visited, nid, fresh & scanned)
         keep = append & scanned
-        # compact kept ids into c_n slots (slot = #appends before j)
-        slots = jnp.where(keep, napp_excl, p.c_n)
-        buf = jnp.full((p.c_n,), -1, jnp.int32).at[slots].set(nid, mode="drop")
+        # compact kept ids into E*c_n slots (segment-major)
+        base = jnp.repeat(jnp.arange(E, dtype=jnp.int32) * p.c_n, HM)
+        slots = jnp.where(keep, base + napp_excl, E * p.c_n)
+        buf = jnp.full((E * p.c_n,), -1,
+                       jnp.int32).at[slots].set(nid, mode="drop")
 
+        # -------- ONE distance call over all E expansions' survivors
         bsafe = jnp.maximum(buf, 0)
         bvalid = buf >= 0
         bd = jnp.where(bvalid, dist_ids(di.vecs, q, bsafe), INF)
 
         # -------- pool merge (Alg. 3 lines 10-13)
         pool = beam.pool_merge_tail(pool, p.ef, buf, bd, bvalid)
-        return pool, visited, hops + 1
+        return pool, visited, seen, hops + 1
 
-    pool, visited, hops = jax.lax.while_loop(
-        cond, body, (pool0, visited, jnp.int32(0)))
+    pool, visited, seen, hops = jax.lax.while_loop(
+        cond, body, (pool0, visited, seen0, jnp.int32(0)))
     return pool.ids[: p.k], pool.dists[: p.k], hops
 
 

@@ -178,6 +178,7 @@ def query(
     scan_budget: Optional[int] = None,
     return_stats: bool = False,
     pool: str = "heap",
+    expand_width: int = 1,
 ):
     """Algorithm 3 (Query): greedy best-first search over O_B.
 
@@ -189,18 +190,36 @@ def query(
     candidate distances because R-hat never shrinks (exact ties at the ef
     boundary may route discovery differently — core/beam.py docstring);
     a fixed-seed test pins the agreement on the tier-1 workload.
+
+    ``expand_width`` (beam mode only) is the reference for the engine's
+    wide frontier (DESIGN.md §8): each hop expands the top-E unexpanded
+    pool entries at once over one fused candidate stream. ``1`` reproduces
+    the single-expansion hop exactly; ``>1`` changes hop order only.
     """
     c_e = c_e if c_e is not None else k         # paper: c_e = k
     c_n = c_n if c_n is not None else index.config.M  # paper: c_n = M
+    if expand_width < 1:
+        raise ValueError(f"expand_width must be >= 1, got {expand_width}")
+    if expand_width > ef:
+        # keep the reference's domain identical to the engine's
+        # (SearchParams rejects E > ef — the frontier never holds more
+        # than ef candidates)
+        raise ValueError(f"expand_width must be <= ef ({ef}), "
+                         f"got {expand_width}")
     visited = np.zeros(index.n, dtype=bool)
     q = np.asarray(q, dtype=np.float32)
 
     entries = range_filter(index, pred, c_e, scan_budget=scan_budget)
     if pool == "beam":
         return _query_beam(index, q, pred, k, entries, visited,
-                           ef=ef, c_n=c_n, return_stats=return_stats)
+                           ef=ef, c_n=c_n, expand_width=expand_width,
+                           return_stats=return_stats)
     if pool != "heap":
         raise ValueError(f"pool must be 'heap' or 'beam', got {pool!r}")
+    if expand_width != 1:
+        raise ValueError("expand_width > 1 requires pool='beam' (the heap "
+                         "form is the line-faithful single-expansion "
+                         "pseudocode)")
     # result queue: bounded max-heap of size ef (python: store negative dist)
     result: List[Tuple[float, int]] = []
     candq: List[Tuple[float, int]] = []
@@ -237,13 +256,61 @@ def query(
     return ids
 
 
+def _recons_nbr_fused(index: KHIIndex, us: np.ndarray, uvalid: np.ndarray,
+                      pred: Predicate, c_n: int,
+                      visited: np.ndarray) -> np.ndarray:
+    """Wide-frontier ReconsNbr over the fused E*H*M candidate stream — the
+    host twin of the engine's hop body (DESIGN.md §8 contract):
+
+      * the stream is the E expanded candidates' neighbor rows concatenated
+        expansion-major (closest expansion first), level order within each;
+      * dedup is global first occurrence over the stream (mark-then-skip);
+      * each expansion scans its own HM segment under its own c_n budget;
+      * visited marks exactly the fresh *scanned* first occurrences, in or
+        out of range.
+
+    Returns the kept ids compacted segment-major into (E*c_n,), -1 padded.
+    For E=1 this is the sequential ``recons_nbr`` scan verbatim.
+    """
+    E = len(us)
+    H, _, M = index.nbrs.shape
+    HM = H * M
+    L = E * HM
+    nid = np.full((L,), -1, dtype=np.int64)
+    for e, (u, uv) in enumerate(zip(us, uvalid)):
+        if uv:
+            nid[e * HM: (e + 1) * HM] = index.nbrs[:, u, :].reshape(HM)
+    valid = nid >= 0
+    nid_safe = np.where(valid, nid, 0)
+
+    # global first occurrence over the stream
+    first_pos = np.full((index.n,), L, dtype=np.int64)
+    np.minimum.at(first_pos, nid_safe[valid], np.nonzero(valid)[0])
+    is_first = valid & (first_pos[nid_safe] == np.arange(L))
+
+    fresh = is_first & ~visited[nid_safe]
+    in_range = valid & pred.matches(index.attrs[nid_safe])
+    append = fresh & in_range
+    seg = append.reshape(E, HM)
+    napp_excl = (np.cumsum(seg, axis=1) - seg).reshape(L)
+    scanned = napp_excl < c_n
+    visited[nid_safe[fresh & scanned]] = True
+    keep = append & scanned
+    base = np.repeat(np.arange(E, dtype=np.int64) * c_n, HM)
+    buf = np.full((E * c_n,), -1, dtype=np.int64)
+    buf[base[keep] + napp_excl[keep]] = nid[keep]
+    return buf
+
+
 def _query_beam(index: KHIIndex, q: np.ndarray, pred: Predicate, k: int,
                 entries: List[int], visited: np.ndarray, *, ef: int,
-                c_n: int, return_stats: bool):
+                c_n: int, expand_width: int, return_stats: bool):
     """Algorithm 3 on the shared pool substrate (single query = one row of
-    the batched numpy ops; same RangeFilter entries and ReconsNbr calls as
-    the heap form)."""
-    pool_size = ef + c_n
+    the batched numpy ops; same RangeFilter entries as the heap form). Each
+    hop expands the top-``expand_width`` unexpanded pool entries over one
+    fused candidate stream — the reference for the engine's wide frontier."""
+    E = expand_width
+    pool_size = ef + E * c_n
     ids, dists, expanded = beam.np_pool_alloc(1, pool_size)
     if entries:
         e = np.asarray(entries, dtype=np.int64)
@@ -256,21 +323,21 @@ def _query_beam(index: KHIIndex, q: np.ndarray, pred: Predicate, k: int,
     threshold_trace: List[float] = []
     row = np.array([0])
     while True:
-        slot, alive = beam.np_pool_best_unexpanded(ids, dists, expanded, ef)
-        if not alive[0]:
+        slots, uvalid = beam.np_pool_top_unexpanded(ids, dists, expanded,
+                                                    ef, E)
+        if not uvalid[0].any():
             break
-        u = int(ids[0, slot[0]])
-        expanded[0, slot[0]] = True
+        us = ids[0, slots[0]]
+        beam.np_pool_mark_expanded_many(expanded, row, slots, uvalid)
         hops += 1
-        out = recons_nbr(index, u, pred, c_n, visited)
-        buf = np.full((1, c_n), -1, dtype=np.int64)
-        bd = np.full((1, c_n), np.inf, dtype=np.float32)
-        if out:
-            v = np.asarray(out, dtype=np.int64)
+        buf1 = _recons_nbr_fused(index, us, uvalid[0], pred, c_n, visited)
+        bd = np.full((1, E * c_n), np.inf, dtype=np.float32)
+        got_any = buf1 >= 0
+        if got_any.any():
+            v = buf1[got_any]
             dv = index.vecs[v] - q
-            buf[0, : len(out)] = v
-            bd[0, : len(out)] = np.einsum("vd,vd->v", dv, dv)
-        beam.np_pool_merge_tail(ids, dists, expanded, row, buf, bd,
+            bd[0, got_any] = np.einsum("vd,vd->v", dv, dv)
+        beam.np_pool_merge_tail(ids, dists, expanded, row, buf1[None], bd,
                                 np.isfinite(bd), ef)
         if return_stats:
             worst = dists[0, : ef][np.isfinite(dists[0, : ef])]

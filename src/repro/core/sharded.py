@@ -14,6 +14,11 @@ Fault tolerance: every shard is an independent artifact ((shard_id, epoch)
 keyed .npz). A lost host reloads only its shard; `elastic_reshard` (see
 repro.distributed.elastic) re-partitions object ids and rebuilds only moved
 shards.
+
+Every engine-side knob — including the wide-frontier ``expand_width`` and
+the distance ``backend`` (DESIGN.md §8/§3) — rides in ``SearchParams``
+unchanged: each shard runs the same ``_query_one`` program the
+single-device engine runs.
 """
 
 from __future__ import annotations

@@ -1,15 +1,24 @@
-"""Fused gather + squared-L2 Pallas kernel (scalar-prefetch DMA gather).
+"""Fused gather + squared-L2 Pallas kernels (scalar-prefetch DMA gather).
 
 The KHI engine's expansion step gathers candidate rows ``corpus[idx]`` from
 HBM and immediately reduces them against the query — on TPU the idiomatic
-form is a *scalar-prefetched* index stream driving the input BlockSpec's
-index_map, so each grid step DMAs exactly the needed corpus row into VMEM
-(no materialized (B, C, d) gather in HBM). This removes the intermediate
-HBM round-trip: bytes move HBM->VMEM once instead of HBM->HBM->VMEM.
+form is a *scalar-prefetched* index stream driving the DMA source, so each
+candidate row moves HBM->VMEM exactly once and no (B, C, d) gather is ever
+materialized in HBM. Two forms share that contract:
 
-The row-per-step grid here is the semantics-bearing validation form; the
-production variant coalesces TC rows per DMA descriptor (same index_map
-mechanism, wider blocks). Distances are accumulated in f32.
+  * ``gather_l2_raw`` — the semantics-bearing validation form: grid (B, C),
+    the input BlockSpec's index_map selects one (1, d) corpus row per grid
+    step. One DMA descriptor and one scalar reduction per candidate.
+  * ``gather_l2_blocked_raw`` — the production form: grid (B, C/C_BLK),
+    corpus stays in ``ANY`` (compiler-chosen, HBM at size) memory and each
+    grid step issues C_BLK *overlapping* row DMAs into a (C_BLK, d) VMEM
+    scratch tile, waits once, then runs ONE vectorized (C_BLK, d) -> (C_BLK,)
+    reduction. The wide-frontier engine feeds this C = E·c_n candidates per
+    hop, so a hop is a handful of fat tiles instead of C scalar grid steps.
+
+Both accumulate distances in f32 (bf16 corpora supported) and both compute
+``sum((q - row)^2)`` with the same per-row reduction shape, so their outputs
+are bitwise identical — pinned by tests/test_kernels.py.
 """
 
 from __future__ import annotations
@@ -19,7 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gather_l2_kernel", "gather_l2_raw"]
+__all__ = ["gather_l2_kernel", "gather_l2_raw", "gather_l2_blocked_kernel",
+           "gather_l2_blocked_raw"]
 
 
 def gather_l2_kernel(idx_ref, corpus_ref, q_ref, o_ref):
@@ -51,3 +61,72 @@ def gather_l2_raw(idx: jax.Array, corpus: jax.Array, q: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(idx, corpus, q)
+
+
+def gather_l2_blocked_kernel(idx_ref, corpus_ref, q_ref, o_ref, rows_ref,
+                             sems_ref):
+    """Grid (B, C/C_BLK): step (i, j) gathers rows idx[i, j*C_BLK : (j+1)*
+    C_BLK] into the (C_BLK, d) VMEM scratch via C_BLK overlapping DMAs,
+    then reduces the whole tile against query row i in one shot."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    c_blk = rows_ref.shape[0]
+
+    def issue(r, carry):
+        row = idx_ref[i, j * c_blk + r]
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              sems_ref.at[r]).start()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, issue, 0)
+
+    def drain(r, carry):
+        row = idx_ref[i, j * c_blk + r]
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              sems_ref.at[r]).wait()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, drain, 0)
+    d = q_ref[...].astype(jnp.float32) - rows_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(d * d, axis=-1)[None, :]
+
+
+def gather_l2_blocked_raw(idx: jax.Array, corpus: jax.Array, q: jax.Array,
+                          *, c_blk: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """Blocked form of ``gather_l2_raw`` — same signature and bitwise-equal
+    output, C_BLK candidate rows per grid step.
+
+    Tiling contract (DESIGN.md §8): ``idx`` is padded to a multiple of
+    ``c_blk`` with index 0 (any in-range row — the padded lanes' distances
+    are sliced off before returning, mirroring the engine's convention that
+    invalid slots get their distances overwritten upstream); the corpus is
+    never reshaped or copied, only DMA'd row-wise into the scratch tile."""
+    B, C = idx.shape
+    N, D = corpus.shape
+    c_blk = min(c_blk, C)
+    pad = (-C) % c_blk
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+    n_blk = (C + pad) // c_blk
+    out = pl.pallas_call(
+        gather_l2_blocked_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_blk),
+            in_specs=[
+                # corpus stays whole in compiler-chosen (HBM) memory; the
+                # kernel DMAs the selected rows itself
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((1, D), lambda i, j, idx_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, c_blk), lambda i, j, idx_ref: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((c_blk, D), corpus.dtype),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, n_blk * c_blk), jnp.float32),
+        interpret=interpret,
+    )(idx, corpus, q)
+    return out[:, :C]

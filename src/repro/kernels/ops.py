@@ -73,16 +73,23 @@ def l2dist(q: jax.Array, c: jax.Array, *, interpret: Optional[bool] = None,
     raise ValueError(f"bad candidate rank {c.ndim}")
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _gather_l2(idx, corpus, q, interpret: bool):
-    return _gather.gather_l2_raw(idx, corpus, q, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=("interpret", "c_blk"))
+def _gather_l2(idx, corpus, q, interpret: bool, c_blk: Optional[int]):
+    if c_blk is None:
+        return _gather.gather_l2_raw(idx, corpus, q, interpret=interpret)
+    return _gather.gather_l2_blocked_raw(idx, corpus, q, c_blk=c_blk,
+                                         interpret=interpret)
 
 
 def gather_l2(idx: jax.Array, corpus: jax.Array, q: jax.Array,
-              *, interpret: Optional[bool] = None) -> jax.Array:
+              *, interpret: Optional[bool] = None,
+              c_blk: Optional[int] = None) -> jax.Array:
     """Fused gather+distance: idx (B, C) into corpus (N, d), q (B, d) ->
-    (B, C). Indices must be in-range (clamp upstream)."""
-    return _gather_l2(idx, corpus, q, _auto_interpret(interpret))
+    (B, C). Indices must be in-range (clamp upstream). ``c_blk`` selects
+    the blocked kernel (C_BLK rows per grid step — the serving engine's
+    form); ``None`` keeps the row-per-step validation form. Both are
+    bitwise-equal (DESIGN.md §8)."""
+    return _gather_l2(idx, corpus, q, _auto_interpret(interpret), c_blk)
 
 
 # re-export oracles for convenience

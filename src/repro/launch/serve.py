@@ -36,7 +36,8 @@ def serve_khi(args):
     else:
         index = KHIIndex.build(vecs, attrs, cfg)
     params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16,
-                          backend=args.backend)
+                          backend=args.backend,
+                          expand_width=args.expand_width)
     buckets = tuple(sorted({1, 8, args.batch}))
     svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
 
@@ -58,7 +59,8 @@ def serve_khi(args):
     print(f"[serve] {len(results)} requests in {dt:.2f}s "
           f"({len(results)/dt:.0f} QPS end-to-end; "
           f"device {snap['device_qps'] and round(snap['device_qps'])} QPS)")
-    print(f"[serve] backend={args.backend} batches={snap['batches']} "
+    print(f"[serve] backend={args.backend} E={args.expand_width} "
+          f"batches={snap['batches']} "
           f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
           f"buckets={snap['traced_buckets']}")
 
@@ -104,6 +106,8 @@ def main(argv=None):
 
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--backend", default="jnp", choices=list(BACKENDS))
+    ap.add_argument("--expand-width", type=int, default=1,
+                    help="frontier width E: pool entries expanded per hop")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "khi":

@@ -25,8 +25,13 @@ request-facing layer that turns the jitted engine into a service:
     cache (DESIGN.md §7 "Epoch swap protocol").
 
 The distance backend (``"jnp" | "pallas_l2" | "pallas_gather_l2"``) comes
-from ``SearchParams.backend`` — the fused gather+L2 kernel is selected the
-same way here as in offline search.
+from ``SearchParams.backend`` — the fused (blocked) gather+L2 kernel is
+selected the same way here as in offline search — and so does the
+wide-frontier width (``SearchParams.expand_width``, DESIGN.md §8): E > 1
+cuts the lockstep hop count of every micro-batch ~E-fold, which is worth
+the most exactly here, where a bucket pads heterogeneous requests into one
+vmapped program that runs to the slowest lane. Both knobs are part of the
+result-cache key (the key hashes ``repr(params)``).
 """
 
 from __future__ import annotations

@@ -1,11 +1,18 @@
 """Beam substrate (core/beam.py): the sorted-pool contract, the jax/numpy
 twin implementations, and the heap-vs-beam equivalence of the reference
 query (Algorithm 3's two priority queues == one sorted pool, because the
-result set never shrinks — DESIGN.md §7)."""
+result set never shrinks — DESIGN.md §7). The wide-frontier ops
+(``pool_top_unexpanded`` / ``pool_mark_expanded_many``, DESIGN.md §8) are
+pinned jax-vs-numpy here too."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; see pyproject
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import beam
 from repro.core import query_ref as qr
@@ -47,6 +54,85 @@ def test_pool_step_cycle_matches_manual():
     assert int(u) == 1                      # 5 already expanded
     pool = beam.pool_mark_expanded(pool, slot)
     assert not bool(beam.pool_frontier_alive(pool, ef))
+
+
+def test_pool_top_unexpanded_width1_matches_best():
+    """Width-1 degeneration: same slot/id as pool_best_unexpanded whenever
+    the frontier is alive (the E=1 bit-identity building block)."""
+    pool = beam.pool_seed(6, jnp.asarray([5, 9, 3], jnp.int32),
+                          jnp.asarray([4.0, 8.0, 4.0], jnp.float32),
+                          jnp.asarray([True, True, True]))
+    pool = beam.pool_mark_expanded(pool, jnp.int32(0))  # expand closest
+    slot_b, id_b = beam.pool_best_unexpanded(pool, 3)
+    slots, ids, valid = beam.pool_top_unexpanded(pool, 3, 1)
+    assert int(slots[0]) == int(slot_b) and int(ids[0]) == int(id_b)
+    assert bool(valid[0])
+
+
+def test_pool_top_unexpanded_order_and_validity():
+    """Slots come back ascending by distance (pool order) and lanes past
+    the frontier's size are flagged invalid."""
+    ef = 4
+    pool = beam.pool_seed(ef + 2, jnp.asarray([7, 2], jnp.int32),
+                          jnp.asarray([3.0, 1.0], jnp.float32),
+                          jnp.asarray([True, True]))
+    slots, ids, valid = beam.pool_top_unexpanded(pool, ef, 4)
+    assert ids.tolist()[:2] == [2, 7]          # ascending distance
+    assert valid.tolist() == [True, True, False, False]
+    pool = beam.pool_mark_expanded_many(pool, slots, valid)
+    assert not bool(beam.pool_frontier_alive(pool, ef))
+
+
+def test_pool_mark_expanded_many_drops_invalid_lanes():
+    pool = beam.pool_seed(4, jnp.asarray([1, 2], jnp.int32),
+                          jnp.asarray([1.0, 2.0], jnp.float32),
+                          jnp.asarray([True, True]))
+    # invalid lane points at slot 1 — must NOT be marked
+    pool = beam.pool_mark_expanded_many(
+        pool, jnp.asarray([0, 1], jnp.int32), jnp.asarray([True, False]))
+    assert pool.expanded.tolist()[:2] == [True, False]
+
+
+@settings(max_examples=8, deadline=None)
+@given(ef=st.integers(2, 10), tail=st.integers(1, 6),
+       width=st.integers(1, 6), seed=st.integers(0, 2**16))
+def test_frontier_ops_jax_np_twins(ef, tail, width, seed):
+    """Drive both implementations through a random expand-merge trace using
+    the WIDE ops each step; pools and frontier selections must agree
+    slot-for-slot (the query_ref-vs-engine fidelity substrate)."""
+    rng = np.random.default_rng(seed)
+    ids, dists, expanded = beam.np_pool_alloc(1, ef + tail)
+    n_seed = rng.integers(1, ef + 1)
+    seeds = rng.permutation(1000)[:n_seed].astype(np.int64)
+    seed_d = rng.random(n_seed).astype(np.float32)
+    beam.np_pool_seed(ids, dists, expanded, seeds[None], seed_d[None])
+    jpool = beam.pool_seed(ef + tail, jnp.asarray(seeds, jnp.int32),
+                           jnp.asarray(seed_d), jnp.ones(n_seed, bool))
+    row = np.array([0])
+    for _ in range(6):
+        slots_np, valid_np = beam.np_pool_top_unexpanded(
+            ids, dists, expanded, ef, width)
+        slots_j, ids_j, valid_j = beam.pool_top_unexpanded(jpool, ef, width)
+        np.testing.assert_array_equal(valid_np[0], np.asarray(valid_j))
+        # only valid lanes are contractually meaningful slots
+        np.testing.assert_array_equal(slots_np[0][valid_np[0]],
+                                      np.asarray(slots_j)[valid_np[0]])
+        np.testing.assert_array_equal(
+            ids[0, slots_np[0][valid_np[0]]],
+            np.asarray(ids_j, np.int64)[valid_np[0]])
+        beam.np_pool_mark_expanded_many(expanded, row, slots_np, valid_np)
+        jpool = beam.pool_mark_expanded_many(jpool, slots_j, valid_j)
+        np.testing.assert_array_equal(expanded[0],
+                                      np.asarray(jpool.expanded))
+        nid = rng.integers(0, 1000, tail).astype(np.int64)
+        nd = rng.random(tail).astype(np.float32)
+        valid = rng.random(tail) < 0.6
+        beam.np_pool_merge_tail(ids, dists, expanded, row, nid[None],
+                                nd[None], valid[None], ef)
+        jpool = beam.pool_merge_tail(jpool, ef, jnp.asarray(nid, jnp.int32),
+                                     jnp.asarray(nd), jnp.asarray(valid))
+        np.testing.assert_array_equal(ids[0], np.asarray(jpool.ids, np.int64))
+        np.testing.assert_array_equal(dists[0], np.asarray(jpool.dists))
 
 
 def test_visited_mark_drops_invalid():

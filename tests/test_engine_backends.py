@@ -41,6 +41,22 @@ def test_backend_results_in_range(backend_results, tiny_index, tiny_queries):
             assert all(p.matches(tiny_index.attrs[g]) for g in got), backend
 
 
+def test_wide_frontier_backend_ids_identical(tiny_index, tiny_queries):
+    """Backend equivalence must hold for E > 1 too — the wide frontier
+    feeds the blocked gather kernel an E*c_n candidate stream per hop."""
+    Q, preds = tiny_queries
+    Q, preds = Q[:N_QUERIES], preds[:N_QUERIES]
+    out = {}
+    for backend in ("jnp", "pallas_gather_l2"):
+        p = eng.SearchParams(k=10, ef=32, c_n=16, backend=backend,
+                             expand_width=4)
+        out[backend] = eng.search_batch(tiny_index, Q, preds, p)
+    np.testing.assert_array_equal(out["pallas_gather_l2"][0], out["jnp"][0])
+    np.testing.assert_array_equal(out["pallas_gather_l2"][2], out["jnp"][2])
+    np.testing.assert_allclose(out["pallas_gather_l2"][1], out["jnp"][1],
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError, match="unknown distance backend"):
         eng.resolve_dist_ids("mosaic_tf32")

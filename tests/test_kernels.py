@@ -82,6 +82,82 @@ def test_gather_l2_property(B, C, N, D, seed):
                                rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("B,C,N,D,c_blk", [
+    (1, 1, 4, 8, 1),        # degenerate single row
+    (2, 8, 64, 64, 4),      # c_blk divides C
+    (3, 10, 33, 96, 4),     # padding lanes (10 -> 12)
+    (2, 6, 40, 48, 128),    # c_blk clamped to C
+])
+def test_gather_l2_blocked_matches_raw(B, C, N, D, c_blk):
+    """The blocked production kernel is BITWISE equal to the row-per-step
+    validation form (same per-row reduction shape — DESIGN.md §8), which is
+    what keeps the engine's backend id-equality pins intact."""
+    from repro.kernels.gather_l2 import gather_l2_blocked_raw, gather_l2_raw
+
+    rng = np.random.default_rng(B * 7 + C + N + D)
+    idx = jnp.asarray(rng.integers(0, N, (B, C)), dtype=jnp.int32)
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    got = gather_l2_blocked_raw(idx, corpus, q, c_blk=c_blk, interpret=True)
+    raw = gather_l2_raw(idx, corpus, q, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(raw))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(gather_l2_ref(idx, corpus, q)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 4), C=st.integers(1, 24), N=st.integers(1, 80),
+       D=st.integers(1, 96), c_blk=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+def test_gather_l2_blocked_property(B, C, N, D, c_blk, seed):
+    """Blocked == raw on random shapes/block sizes, with duplicate and
+    boundary indices mixed in (the wide-frontier engine's E*c_n candidate
+    stream routinely repeats rows across expansions)."""
+    from repro.kernels.gather_l2 import gather_l2_blocked_raw, gather_l2_raw
+
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, N, (B, C))
+    idx.flat[:: 3] = rng.choice([0, N - 1], size=idx.flat[:: 3].shape)
+    if C >= 2:
+        idx[:, 1] = idx[:, 0]                  # guaranteed duplicate
+    idx = jnp.asarray(idx, dtype=jnp.int32)
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    got = gather_l2_blocked_raw(idx, corpus, q, c_blk=c_blk, interpret=True)
+    raw = gather_l2_raw(idx, corpus, q, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(raw))
+
+
+def test_gather_l2_blocked_bf16_corpus():
+    """bf16 rows DMA'd into a bf16 scratch tile still accumulate in f32."""
+    from repro.kernels.gather_l2 import gather_l2_blocked_raw
+
+    rng = np.random.default_rng(6)
+    N, D, B, C = 40, 48, 3, 7
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.bfloat16)
+    idx = jnp.asarray(rng.integers(0, N, (B, C)), dtype=jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.bfloat16)
+    got = gather_l2_blocked_raw(idx, corpus, q, c_blk=4, interpret=True)
+    want = gather_l2_ref(idx, corpus, q)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2 * D)
+
+
+def test_gather_l2_ops_wrapper_blocked_route():
+    """ops.gather_l2(c_blk=) routes to the blocked kernel and agrees with
+    the default route bitwise."""
+    rng = np.random.default_rng(9)
+    N, D, B, C = 50, 32, 2, 9
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    idx = jnp.asarray(rng.integers(0, N, (B, C)), dtype=jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    a = ops.gather_l2(idx, corpus, q, interpret=True)
+    b = ops.gather_l2(idx, corpus, q, interpret=True, c_blk=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_gather_l2_bf16_corpus():
     """bf16 corpus rows accumulate in f32 inside the kernel."""
     rng = np.random.default_rng(5)

@@ -1,0 +1,159 @@
+"""Wide-frontier engine (DESIGN.md §8): E=1 bit-identity against the
+committed pre-rework golden snapshot, device-vs-reference equality for
+E > 1, recall parity at equal ef, and the expand_width threading through
+the sharded fan-out and the serving layer."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import query_ref as qr
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "engine_e1.json"
+N_GOLDEN = 8
+GOLDEN_PARAMS = dict(k=10, ef=32, c_e=10, c_n=16)
+
+
+# ------------------------------------------------- E=1 golden bit-identity
+
+@pytest.mark.parametrize("backend", eng.BACKENDS)
+def test_e1_bit_identical_to_pre_rework_engine(tiny_index, tiny_queries,
+                                               backend):
+    """expand_width=1 must reproduce the single-expansion engine exactly —
+    ids, dists AND hops — on the committed fixed-seed snapshot
+    (scripts/gen_golden_e1.py), for every distance backend. This pins both
+    the frontier ops' width-1 degeneration and the blocked gather_l2's
+    bitwise equality with the row-per-step kernel it replaced."""
+    golden = json.loads(GOLDEN.read_text())["backends"][backend]
+    Q, preds = tiny_queries
+    p = eng.SearchParams(backend=backend, expand_width=1, **GOLDEN_PARAMS)
+    ids, dists, hops = eng.search_batch(tiny_index, Q[:N_GOLDEN],
+                                        preds[:N_GOLDEN], p)
+    np.testing.assert_array_equal(ids, np.asarray(golden["ids"]))
+    np.testing.assert_array_equal(hops, np.asarray(golden["hops"]))
+    np.testing.assert_array_equal(
+        np.asarray(dists, np.float32),
+        np.asarray(golden["dists"], np.float64).astype(np.float32))
+
+
+# --------------------------------------------- E>1 device-vs-reference pin
+
+@pytest.mark.parametrize("E", [2, 4])
+def test_wide_frontier_matches_reference(tiny_index, tiny_queries, E):
+    """The jitted wide-frontier hop and ``query_ref.query(expand_width=)``
+    implement the same fused-stream contract: same result sets, same hop
+    counts, on the fixed-seed tier-1 workload."""
+    Q, preds = tiny_queries
+    p = eng.SearchParams(k=10, ef=48, c_e=10, c_n=16, expand_width=E)
+    ids, _, hops = eng.search_batch(tiny_index, Q, preds, p)
+    for i, (q, pr) in enumerate(zip(Q, preds)):
+        ref, st = qr.query(tiny_index, q, pr, 10, ef=48, c_n=16,
+                           pool="beam", expand_width=E, return_stats=True)
+        got = sorted(x for x in ids[i].tolist() if x >= 0)
+        assert got == sorted(ref.tolist()), f"query {i}"
+        assert int(hops[i]) == st["hops"], f"query {i}"
+
+
+def test_wide_frontier_fewer_hops_equal_recall(tiny_index, tiny_queries):
+    """The tentpole claim at engine level: E=4 reaches the same recall as
+    E=1 at equal ef in ~4x fewer (fatter) hops."""
+    Q, preds = tiny_queries
+    out = {}
+    for E in (1, 4):
+        p = eng.SearchParams(k=10, ef=48, c_e=10, c_n=16, expand_width=E)
+        ids, _, hops = eng.search_batch(tiny_index, Q, preds, p)
+        recalls = []
+        for i, (q, pr) in enumerate(zip(Q, preds)):
+            gt = qr.brute_force(tiny_index.vecs, tiny_index.attrs, q, pr, 10)
+            if len(gt):
+                got = [x for x in ids[i].tolist() if x >= 0]
+                recalls.append(len(set(gt.tolist()) & set(got))
+                               / min(10, len(gt)))
+        out[E] = (float(np.mean(recalls)), float(np.asarray(hops).mean()))
+    assert out[4][0] >= out[1][0] - 0.02, out
+    assert out[4][1] <= out[1][1] / 2.5, out
+
+
+def test_wide_frontier_in_range(tiny_index, tiny_queries):
+    """The in-filtering guarantee survives the fused E-wide stream."""
+    Q, preds = tiny_queries
+    p = eng.SearchParams(k=10, ef=32, c_e=10, c_n=16, expand_width=4)
+    ids, _, _ = eng.search_batch(tiny_index, Q, preds, p)
+    for i, pr in enumerate(preds):
+        got = [x for x in ids[i].tolist() if x >= 0]
+        assert all(pr.matches(tiny_index.attrs[g]) for g in got)
+
+
+# ----------------------------------------------------------- validation
+
+def test_expand_width_validation():
+    with pytest.raises(ValueError, match="expand_width"):
+        eng.SearchParams(expand_width=0)
+    with pytest.raises(ValueError, match="expand_width"):
+        eng.SearchParams(expand_width=-3)
+    # the frontier never holds more than ef candidates — E > ef would
+    # crash the hop body's (E, H, M) gather at trace time
+    with pytest.raises(ValueError, match="expand_width"):
+        eng.SearchParams(ef=8, expand_width=16)
+    assert eng.SearchParams(ef=8, expand_width=8).expand_width == 8
+
+
+def test_query_ref_heap_rejects_wide_frontier(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    with pytest.raises(ValueError, match="expand_width"):
+        qr.query(tiny_index, Q[0], preds[0], 10, pool="heap", expand_width=2)
+    with pytest.raises(ValueError, match="expand_width"):
+        qr.query(tiny_index, Q[0], preds[0], 10, pool="beam", expand_width=0)
+    with pytest.raises(ValueError, match="expand_width"):
+        qr.query(tiny_index, Q[0], preds[0], 10, ef=8, pool="beam",
+                 expand_width=16)
+
+
+# ------------------------------------------------- sharded + serving path
+
+def test_sharded_wide_frontier_backend_identical(tiny_data):
+    """expand_width threads through the shard fan-out + merge, and the
+    blocked gather kernel stays id-identical to jnp under it."""
+    from repro.core.khi import KHIConfig
+    from repro.core.sharded import build_sharded, search_sharded_emulated
+    from repro.data import make_queries
+
+    vecs, attrs = tiny_data
+    skhi = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="bulk"))
+    Q, preds = make_queries(vecs, attrs, n_queries=6, sigma=1 / 16, seed=5)
+    qlo = np.stack([p.lo for p in preds])
+    qhi = np.stack([p.hi for p in preds])
+    res = {}
+    for backend in ("jnp", "pallas_gather_l2"):
+        p = eng.SearchParams(k=10, ef=32, c_n=16, backend=backend,
+                             expand_width=4)
+        mi, md, _ = search_sharded_emulated(skhi, Q, qlo, qhi, p)
+        res[backend] = (np.asarray(mi), np.asarray(md))
+    np.testing.assert_array_equal(res["pallas_gather_l2"][0], res["jnp"][0])
+    np.testing.assert_allclose(res["pallas_gather_l2"][1], res["jnp"][1],
+                               rtol=1e-4, atol=1e-4)
+    # in-range through the global-id recovery
+    for i, pr in enumerate(preds):
+        got = [x for x in res["jnp"][0][i].tolist() if x >= 0]
+        assert all(pr.matches(attrs[g]) for g in got)
+
+
+def test_service_wide_frontier(tiny_index, tiny_queries):
+    """KHIService accepts a wide-frontier SearchParams; results match the
+    offline engine at the same E (params ride the cache key via repr)."""
+    from repro.serve import KHIService
+
+    Q, preds = tiny_queries
+    Q = Q[:6]
+    preds = preds[:6]
+    lo = np.stack([p.lo for p in preds]).astype(np.float32)
+    hi = np.stack([p.hi for p in preds]).astype(np.float32)
+    p = eng.SearchParams(k=10, ef=32, c_e=10, c_n=16, expand_width=4)
+    svc = KHIService(tiny_index, p)
+    ids_svc, dists_svc = svc.search(Q, lo, hi)
+    ids_eng, dists_eng, _ = eng.search_batch(tiny_index, Q, preds, p)
+    np.testing.assert_array_equal(ids_svc, ids_eng)
+    np.testing.assert_allclose(dists_svc, dists_eng, rtol=1e-5, atol=1e-5)
