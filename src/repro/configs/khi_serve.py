@@ -21,8 +21,17 @@ class KHIServeConfig:
     c_e: int = 10
     c_n: int = 32
     expand_width: int = 4               # wide frontier: E expansions per hop
+    router: str = "level"               # Phase-A tree router (DESIGN.md §9)
+    # Level-sync per-level width bound for the DRY-RUN lowering cell
+    # (launch/specs lowers against ShapeDtypeStructs, so the exact
+    # per-index bound cannot be derived there — like its scan_budget,
+    # this is a declared truncation bound, clamp semantics of DESIGN §9).
+    # At serve time KHIService validates against the real index and
+    # auto-raises it to required_frontier_cap (set frontier_cap=0 in
+    # SearchParams to always derive).
+    frontier_cap: int = 8192
     # serving-layer knobs (repro.serve.khi_service)
-    backend: str = "pallas_gather_l2"   # distance backend on TPU
+    backend: str = "pallas_gather_l2_filter"  # predicate-fused scorer on TPU
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
     cache_size: int = 65536             # LRU result-cache entries
 
@@ -31,7 +40,9 @@ class KHIServeConfig:
         from ..core.engine import SearchParams
         return SearchParams(k=self.k, ef=self.ef, c_e=self.c_e, c_n=self.c_n,
                             backend=self.backend,
-                            expand_width=self.expand_width)
+                            expand_width=self.expand_width,
+                            router=self.router,
+                            frontier_cap=self.frontier_cap)
 
     def serve_config(self):
         from ..serve.khi_service import ServeConfig

@@ -1,9 +1,18 @@
-"""Jitted, batched KHI query engine — the TPU-native form of Algorithms 1-3.
+"""Jitted, batched KHI query engine — the TPU-native form of Algorithms 1-3,
+structured as an explicit **two-phase pipeline** (DESIGN.md §9):
+
+  * **Phase A — routing** (``core.router``): Algorithm 1 as a
+    level-synchronous batched frontier sweep over the flattened tree
+    (``SearchParams.router="level"``, the production default: a fixed
+    ``fori_loop`` over the O(log n) tree levels with per-level batched
+    entry scans), or the legacy per-query stack-DFS ``while_loop``
+    (``router="dfs"``). Both return identical entry vectors.
+  * **Phase B — filtered greedy search** on a pluggable ``Scorer``: the
+    wide-frontier hop loop (DESIGN.md §8) with candidate scoring behind
+    one registry contract (below).
 
 Everything is a fixed-shape array program (see DESIGN.md §2):
 
-  * RangeFilter's DFS        -> ``lax.while_loop`` over an explicit stack
-                                (depth <= tree height + 1 for DFS order);
   * ReconsNbr's early-exit   -> gather all H*M neighbor ids at once, then an
                                 exclusive-cumsum prefix cap reproduces the
                                 sequential c_n budget *and* its partial
@@ -19,7 +28,7 @@ The inner loop is a **wide frontier** (DESIGN.md §8): every hop expands the
 top-``expand_width`` unexpanded pool entries at once, fuses their E*H*M
 neighbor rows into one candidate stream (scatter-based first-occurrence
 dedup, per-expansion c_n budgets), and evaluates all surviving candidates
-in a single distance call — so a hop is one fat gather + one MXU-shaped
+in a single scoring call — so a hop is one fat gather + one MXU-shaped
 reduction instead of E narrow ones, and the vmapped batch takes ~E-fold
 fewer lockstep iterations. ``expand_width=1`` is bit-identical to the
 single-expansion engine (pinned against a committed golden snapshot);
@@ -27,7 +36,10 @@ single-expansion engine (pinned against a committed golden snapshot);
 semantics live in ``query_ref.query(expand_width=)``.
 
 ``search_batch`` vmaps the per-query program and jits the whole thing;
-distance evaluation is pluggable (``SearchParams.backend``):
+candidate scoring is pluggable (``SearchParams.backend``), unified behind
+the ``Scorer`` registry (DESIGN.md §9) — ``score(di, q, qlo, qhi, ids) ->
+(C,) f32`` with +inf for -1 (pad) lanes, plus the stream-side predicate
+``in_range``:
 
   * ``"jnp"``              — XLA gather + elementwise reduce (portable
                              reference path; under vmap the gather
@@ -38,10 +50,15 @@ distance evaluation is pluggable (``SearchParams.backend``):
                              (``kernels.gather_l2``): the candidate id
                              stream drives the DMA index_map, so each row
                              moves HBM->VMEM exactly once and no (B, C, d)
-                             gather is ever materialized.
-
-All backends share one contract — ``fn(vecs, q, safe_ids) -> (C,) f32`` —
-so the engine body is backend-agnostic (DESIGN.md §3).
+                             gather is ever materialized;
+  * ``"pallas_gather_l2_filter"`` — the predicate-fused production
+                             default (``kernels.gather_l2_filter``): each
+                             candidate's attribute row is DMA'd alongside
+                             its vector row, ``all(qlo <= a <= qhi)`` is
+                             evaluated in-kernel and out-of-range or pad
+                             lanes emit +inf — no separate attrs gather
+                             and no caller-side validity overwrite at the
+                             scoring site.
 """
 
 from __future__ import annotations
@@ -56,13 +73,15 @@ import numpy as np
 
 from . import beam
 from .khi import KHIIndex
+from .router import ROUTERS, required_frontier_cap, resolve_router
 
-__all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "device_put_index",
-           "resolve_dist_ids", "search_batch", "make_search_fn",
-           "required_scan_budget", "required_stack_cap",
+__all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS", "Scorer",
+           "device_put_index", "resolve_dist_ids", "resolve_scorer",
+           "search_batch", "make_search_fn", "required_scan_budget",
+           "required_stack_cap", "required_frontier_cap",
            "derive_search_params", "validate_search_params"]
 
-BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2")
+BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2", "pallas_gather_l2_filter")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -161,11 +180,18 @@ class SearchParams:
     c_e: int = 10            # paper: k
     c_n: int = 32            # paper: M
     stack_cap: int = 64      # DFS stack depth bound (height + slack)
-    max_steps: int = 4096    # RangeFilter pop budget
+    max_steps: int = 4096    # RangeFilter pop budget (router="dfs" only)
     scan_budget: int = 64    # entry-scan window per candidate node
     max_hops: int = 0        # 0 => ef * 4 (generous; loop exits on its own)
-    backend: str = "jnp"     # distance backend, one of BACKENDS
+    backend: str = "jnp"     # scoring backend, one of BACKENDS
     expand_width: int = 1    # frontier width E: pool entries expanded per hop
+    router: str = "level"    # Phase-A tree router, one of ROUTERS
+    # level-sync frontier width bound (per level). 0 = derive from the
+    # index (derive/validate_search_params fill it in; routing with 0
+    # raises at trace time instead of silently dropping branches — no
+    # fixed default is safe across index sizes, unlike stack_cap whose
+    # height+1 bound is)
+    frontier_cap: int = 0
 
     def __post_init__(self):
         if self.expand_width < 1:
@@ -176,6 +202,20 @@ class SearchParams:
             # hop body's (E, H, M) gather assumes E selected slots exist
             raise ValueError(f"expand_width must be <= ef "
                              f"({self.ef}), got {self.expand_width}")
+        if self.c_e > self.ef:
+            # entry seeding writes pool slots [0:c_e) but the beam is only
+            # ef wide — entries past it would be silently sealed by the
+            # first merge (and the seed would over-mark tail slots that
+            # pool_merge_tail expects sealed)
+            raise ValueError(f"c_e must be <= ef ({self.ef}), got "
+                             f"{self.c_e}: the entry seed writes the first "
+                             f"c_e pool slots and the beam holds only ef")
+        if self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; expected "
+                             f"one of {ROUTERS}")
+        if self.frontier_cap < 0:
+            raise ValueError(f"frontier_cap must be >= 0 (0 = derive from "
+                             f"the index), got {self.frontier_cap}")
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
@@ -185,14 +225,16 @@ class SearchParams:
 # Parameter validation against a concrete index
 # --------------------------------------------------------------------------
 #
-# Two SearchParams fields bound fixed-shape buffers whose sufficiency depends
-# on the *index*, not the query: an undersized ``stack_cap`` silently drops
-# DFS branches at the overflow clamp, and an undersized ``scan_budget`` makes
-# ``_range_filter.scan_entry`` return -1 for a scannable node whose first
-# in-range object sits past the window — both degrade recall with no error.
-# The helpers below derive the exact sufficient values from a DeviceIndex so
-# callers can refuse (``"raise"``) or auto-raise (``"adjust"``) undersized
-# params instead of silently missing entries.
+# Three SearchParams fields bound fixed-shape buffers whose sufficiency
+# depends on the *index*, not the query: an undersized ``stack_cap``
+# silently drops DFS branches at the overflow clamp, an undersized
+# ``frontier_cap`` does the same to the level-sync router's per-level
+# frontier, and an undersized ``scan_budget`` makes the entry scan return
+# -1 for a scannable node whose first in-range object sits past the window
+# — all degrade recall with no error. The helpers below derive the exact
+# sufficient values from a DeviceIndex so callers can refuse (``"raise"``)
+# or auto-raise (``"adjust"``) undersized params instead of silently
+# missing entries.
 
 def _di_height(di: "DeviceIndex") -> int:
     """Tree height for a plain (n, H, M) or shard-stacked (S, n, H, M)
@@ -225,12 +267,14 @@ def required_scan_budget(di: "DeviceIndex") -> int:
 
 
 def derive_search_params(p: SearchParams, di: "DeviceIndex") -> SearchParams:
-    """Copy of ``p`` with scan_budget/stack_cap raised (never lowered) to the
-    sufficient values for ``di``."""
+    """Copy of ``p`` with scan_budget/stack_cap/frontier_cap raised (never
+    lowered) to the sufficient values for ``di``."""
     return dataclasses.replace(
         p,
         scan_budget=max(p.scan_budget, required_scan_budget(di)),
         stack_cap=max(p.stack_cap, required_stack_cap(di)),
+        frontier_cap=(max(p.frontier_cap, required_frontier_cap(di))
+                      if p.router == "level" else p.frontier_cap),
     )
 
 
@@ -250,110 +294,29 @@ def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
                          f"got {on_undersized!r}")
     need_scan = required_scan_budget(di)
     need_stack = required_stack_cap(di)
-    if p.scan_budget >= need_scan and p.stack_cap >= need_stack:
+    # the frontier bound only backs the level-sync router's buffers
+    need_front = required_frontier_cap(di) if p.router == "level" else 0
+    if (p.scan_budget >= need_scan and p.stack_cap >= need_stack
+            and p.frontier_cap >= need_front):
         return p
     if on_undersized == "adjust":
         return dataclasses.replace(
             p, scan_budget=max(p.scan_budget, need_scan),
-            stack_cap=max(p.stack_cap, need_stack))
+            stack_cap=max(p.stack_cap, need_stack),
+            frontier_cap=max(p.frontier_cap, need_front))
     raise ValueError(
         f"SearchParams undersized for this index: need scan_budget >= "
-        f"{need_scan} (got {p.scan_budget}) and stack_cap >= {need_stack} "
-        f"(got {p.stack_cap}); an undersized scan_budget silently returns "
-        f"-1 entries for large scannable nodes. Use derive_search_params() "
-        f"or pass on_undersized='adjust'.")
-
-
-# --------------------------------------------------------------------------
-# Algorithm 1: RangeFilter
-# --------------------------------------------------------------------------
-
-def _range_filter(di: DeviceIndex, qlo: jax.Array, qhi: jax.Array,
-                  p: SearchParams) -> jax.Array:
-    """Returns entry-point object ids (c_e,), -1 padded."""
-    m = di.attrs.shape[1]
-    full = (1 << m) - 1
-    S = p.stack_cap
-
-    # D seeded with dims the root rectangle already covers.
-    root_cov = ((di.lo[di.root] >= qlo) & (di.hi[di.root] <= qhi))
-    D0 = jnp.sum(jnp.where(root_cov, 1 << jnp.arange(m), 0)).astype(jnp.int32)
-
-    def scan_entry(node):
-        s = di.start[node]
-        win = jax.lax.dynamic_slice(
-            jnp.pad(di.order, (0, p.scan_budget)), (s,), (p.scan_budget,))
-        in_node = jnp.arange(p.scan_budget) < di.count[node]
-        a = di.attrs[win]
-        ok = in_node & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
-        idx = jnp.argmax(ok)
-        return jnp.where(ok.any(), win[idx], -1).astype(jnp.int32)
-
-    State = tuple  # (stack_node, stack_D, sp, entries, n_e, steps)
-    stack_node = jnp.full((S,), -1, jnp.int32).at[0].set(di.root)
-    stack_D = jnp.zeros((S,), jnp.int32).at[0].set(D0)
-    entries = jnp.full((p.c_e,), -1, jnp.int32)
-    state: State = (stack_node, stack_D, jnp.int32(1), entries,
-                    jnp.int32(0), jnp.int32(0))
-
-    def cond(st):
-        _, _, sp, _, n_e, steps = st
-        return (sp > 0) & (n_e < p.c_e) & (steps < p.max_steps)
-
-    def body(st):
-        stack_node, stack_D, sp, entries, n_e, steps = st
-        node = stack_node[sp - 1]
-        D = stack_D[sp - 1] | di.bl[node]
-        sp = sp - 1
-
-        is_full = D == full
-        is_leaf = di.left[node] < 0
-
-        # entry scan for covered nodes AND leaves (leaf fallback — see
-        # query_ref.range_filter for the rationale)
-        do_scan = is_full | is_leaf
-        e = jnp.where(do_scan, scan_entry(node), -1)
-        got = do_scan & (e >= 0)
-        entries = entries.at[jnp.where(got, n_e, p.c_e)].set(e, mode="drop")
-        n_e = n_e + got.astype(jnp.int32)
-
-        # children pushes (only when internal & not full)
-        dsp = di.dim[node]
-        cl, cr = di.left[node], di.right[node]
-        covered = ((D >> dsp) & 1) == 1
-
-        def child_push(pc):
-            lc = di.lo[pc, dsp]
-            rc = di.hi[pc, dsp]
-            disjoint = (lc > qhi[dsp]) | (rc < qlo[dsp])
-            contained = (lc >= qlo[dsp]) & (rc <= qhi[dsp])
-            newD = jnp.where(contained, D | (1 << dsp), D)
-            valid = ~disjoint
-            # covered split dim: always push with unchanged D
-            newD = jnp.where(covered, D, newD)
-            valid = jnp.where(covered, True, valid)
-            return valid & ~is_full & ~is_leaf, newD
-
-        vl, Dl = child_push(cl)
-        vr, Dr = child_push(cr)
-        # push left first (popped last) to match the reference DFS order
-        slot_l = jnp.where(vl, sp, S)
-        stack_node = stack_node.at[slot_l].set(cl, mode="drop")
-        stack_D = stack_D.at[slot_l].set(Dl, mode="drop")
-        sp = sp + vl.astype(jnp.int32)
-        slot_r = jnp.where(vr, sp, S)
-        stack_node = stack_node.at[slot_r].set(cr, mode="drop")
-        stack_D = stack_D.at[slot_r].set(Dr, mode="drop")
-        sp = sp + vr.astype(jnp.int32)
-        sp = jnp.minimum(sp, S)  # overflow clamp (documented bound)
-        return (stack_node, stack_D, sp, entries, n_e, steps + 1)
-
-    state = jax.lax.while_loop(cond, body, state)
-    return state[3]
+        f"{need_scan} (got {p.scan_budget}), stack_cap >= {need_stack} "
+        f"(got {p.stack_cap}) and frontier_cap >= {need_front} (got "
+        f"{p.frontier_cap}); an undersized scan_budget silently returns "
+        f"-1 entries for large scannable nodes, and an undersized "
+        f"frontier_cap silently drops level-sync router branches. Use "
+        f"derive_search_params() or pass on_undersized='adjust'.")
 
 
 # --------------------------------------------------------------------------
 # Algorithms 2+3: greedy search with on-the-fly neighbor reconstruction
+# (Algorithm 1 — Phase A routing — lives in core.router)
 # --------------------------------------------------------------------------
 
 def _dist_jnp(q: jax.Array, cand: jax.Array) -> jax.Array:
@@ -409,10 +372,12 @@ def _pad2(x, r, c):
 def resolve_dist_ids(backend: Optional[str] = None, *,
                      dist_fn: Optional[Callable] = None,
                      interpret: Optional[bool] = None) -> Callable:
-    """Resolve a distance backend to the engine's ``fn(vecs, q, ids)``
-    contract. ``dist_fn`` (legacy ``fn(q, rows)`` signature) wins if given;
-    ``interpret=None`` auto-selects by JAX backend (Mosaic on TPU,
-    interpreter elsewhere)."""
+    """Resolve an *unfused* distance backend to the legacy
+    ``fn(vecs, q, ids)`` contract. ``dist_fn`` (legacy ``fn(q, rows)``
+    signature) wins if given; ``interpret=None`` auto-selects by JAX
+    backend (Mosaic on TPU, interpreter elsewhere). Predicate-fused
+    backends have no dist-only form — resolve them via
+    ``resolve_scorer`` (the engine-facing registry)."""
     if dist_fn is not None:
         return lambda vecs, q, ids: dist_fn(q, vecs[ids])
     backend = backend or "jnp"
@@ -424,23 +389,101 @@ def resolve_dist_ids(backend: Optional[str] = None, *,
         return functools.partial(_dist_ids_pallas_l2, interpret=interpret)
     if backend == "pallas_gather_l2":
         return functools.partial(_dist_ids_gather_l2, interpret=interpret)
+    if backend == "pallas_gather_l2_filter":
+        raise ValueError(
+            f"{backend!r} is predicate-fused and has no dist-only form; "
+            f"resolve it with resolve_scorer()")
     raise ValueError(f"unknown distance backend {backend!r}; "
                      f"expected one of {BACKENDS}")
 
 
+# --------------------------------------------------------------------------
+# Scorer registry (DESIGN.md §9) — Phase B's pluggable scoring contract
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scorer:
+    """One scoring backend behind one contract.
+
+    ``score(di, q, qlo, qhi, ids) -> (C,) f32``: exact squared L2 for
+    valid lanes, ``+inf`` for ``-1`` (pad/invalid) lanes — scorers with
+    ``fused_filter=True`` additionally emit ``+inf`` for lanes whose
+    attribute row falls outside ``[qlo, qhi]`` (the in-kernel predicate;
+    for the engine's candidate buffers, which are in-range by
+    construction, this is defense in depth at the cost of an m-float DMA
+    per row). ``in_range`` is the stream-side predicate the hop budget
+    consumes (Alg. 2's early-exit counts *in-range* appends, so the
+    predicate must be known for the whole fused stream before the c_n
+    compaction — DESIGN.md §9 spells out why it cannot move into the
+    compacted scoring call without changing results).
+    """
+
+    name: str
+    fused_filter: bool
+    score: Callable  # (di, q, qlo, qhi, ids (C,) i32) -> (C,) f32
+
+    def in_range(self, di: "DeviceIndex", qlo: jax.Array, qhi: jax.Array,
+                 ids: jax.Array) -> jax.Array:
+        """Predicate over pre-clamped ids: (C,) bool (garbage rows allowed
+        — callers AND with their validity mask)."""
+        a = di.attrs[ids]
+        return jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+
+
+def _unfused_scorer(name: str, dist_ids: Callable) -> Scorer:
+    def score(di, q, qlo, qhi, ids):
+        safe = jnp.maximum(ids, 0)
+        d = dist_ids(di.vecs, q, safe)
+        return jnp.where(ids >= 0, d, jnp.float32(jnp.inf))
+    return Scorer(name=name, fused_filter=False, score=score)
+
+
+def _filter_scorer(interpret: bool) -> Scorer:
+    from ..kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+
+    def score(di, q, qlo, qhi, ids):
+        # the kernel consumes -1 lanes natively (emits +inf), so there is
+        # no caller-side clamp or validity overwrite here
+        return gather_l2_filter_blocked_raw(
+            ids[None], di.vecs, di.attrs, q[None].astype(di.vecs.dtype),
+            qlo[None], qhi[None], interpret=interpret)[0]
+    return Scorer(name="pallas_gather_l2_filter", fused_filter=True,
+                  score=score)
+
+
+def resolve_scorer(backend: Optional[str] = None, *,
+                   dist_fn: Optional[Callable] = None,
+                   interpret: Optional[bool] = None) -> Scorer:
+    """Resolve ``SearchParams.backend`` to a ``Scorer``. A legacy
+    ``dist_fn(q, rows)`` override wins if given (wrapped as an unfused
+    scorer); ``interpret=None`` auto-selects by JAX backend."""
+    if dist_fn is not None:
+        return _unfused_scorer("dist_fn", resolve_dist_ids(dist_fn=dist_fn))
+    backend = backend or "jnp"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown scoring backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "pallas_gather_l2_filter":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _filter_scorer(interpret)
+    return _unfused_scorer(
+        backend, resolve_dist_ids(backend, interpret=interpret))
+
+
 def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
-               p: SearchParams, dist_ids) -> tuple[jax.Array, jax.Array, jax.Array]:
+               p: SearchParams, scorer: Scorer
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
     n = di.n
     H, M = di.nbrs.shape[1], di.nbrs.shape[2]
     HM = H * M
     E = p.expand_width
     L = E * HM                               # fused candidate stream length
-    INF = jnp.float32(jnp.inf)
 
-    entries = _range_filter(di, qlo, qhi, p)
-    e_safe = jnp.maximum(entries, 0)
+    # Phase A: tree routing (level-sync sweep or legacy DFS — core.router)
+    entries = resolve_router(p.router)(di, qlo, qhi, p)
     e_valid = entries >= 0
-    e_dist = jnp.where(e_valid, dist_ids(di.vecs, q, e_safe), INF)
+    e_dist = scorer.score(di, q, qlo, qhi, entries)
 
     visited = beam.visited_init(n)
     visited = beam.visited_mark(visited, entries, e_valid)
@@ -483,8 +526,7 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
         is_first = valid & (seen[nid_safe] == tag)
 
         fresh = is_first & ~visited[nid_safe]
-        a = di.attrs[nid_safe]
-        in_range = valid & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+        in_range = valid & scorer.in_range(di, qlo, qhi, nid_safe)
         append = fresh & in_range
         # per-expansion budget: each of the E expanded candidates scans its
         # own HM segment under its own c_n window (segmented excl. cumsum)
@@ -499,10 +541,11 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
         buf = jnp.full((E * p.c_n,), -1,
                        jnp.int32).at[slots].set(nid, mode="drop")
 
-        # -------- ONE distance call over all E expansions' survivors
-        bsafe = jnp.maximum(buf, 0)
+        # -------- ONE scoring call over all E expansions' survivors (the
+        # scorer owns pad-lane +inf; fused scorers re-check the predicate
+        # in-kernel — a no-op here, the buffer is in-range by construction)
         bvalid = buf >= 0
-        bd = jnp.where(bvalid, dist_ids(di.vecs, q, bsafe), INF)
+        bd = scorer.score(di, q, qlo, qhi, buf)
 
         # -------- pool merge (Alg. 3 lines 10-13)
         pool = beam.pool_merge_tail(pool, p.ef, buf, bd, bvalid)
@@ -519,19 +562,19 @@ def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False,
     """Builds jit(search)(di, queries (B,d), qlo (B,m), qhi (B,m)) ->
     (ids (B,k) int32, dists (B,k) f32, hops (B,) int32).
 
-    The distance backend comes from ``p.backend`` unless a legacy
+    The scoring backend comes from ``p.backend`` unless a legacy
     ``dist_fn(q, rows)`` override is supplied. Pass the target ``di`` to
-    validate the index-dependent buffer bounds (scan_budget / stack_cap)
-    up front: by default an undersized configuration raises instead of
-    silently returning -1 entries (``on_undersized`` selects
+    validate the index-dependent buffer bounds (scan_budget / stack_cap /
+    frontier_cap) up front: by default an undersized configuration raises
+    instead of silently returning -1 entries (``on_undersized`` selects
     raise/adjust/ignore — see ``validate_search_params``)."""
     if di is not None:
         p = validate_search_params(p, di, on_undersized=on_undersized)
-    dist_ids = resolve_dist_ids(p.backend, dist_fn=dist_fn)
+    scorer = resolve_scorer(p.backend, dist_fn=dist_fn)
 
     @functools.partial(jax.jit, static_argnames=())
     def search(di: DeviceIndex, queries, qlo, qhi):
-        fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
+        fn = functools.partial(_query_one, p=p, scorer=scorer)
         return jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(queries, qlo, qhi)
 
     return search

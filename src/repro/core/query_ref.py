@@ -16,7 +16,8 @@ import numpy as np
 from . import beam
 from .khi import KHIIndex
 
-__all__ = ["Predicate", "range_filter", "recons_nbr", "query", "brute_force"]
+__all__ = ["Predicate", "range_filter", "range_filter_level", "recons_nbr",
+           "query", "brute_force"]
 
 
 class Predicate:
@@ -139,6 +140,67 @@ def range_filter(index: KHIIndex, pred: Predicate, c_e: int,
     return entries
 
 
+def range_filter_level(index: KHIIndex, pred: Predicate, c_e: int,
+                       *, scan_budget: Optional[int] = None) -> List[int]:
+    """Numpy twin of the device level-synchronous router
+    (``core.router.route_level_sync``): a breadth-first sweep over tree
+    levels that collects every scannable node's entry tagged with the
+    DFS-rank key ``n - (start + count)`` and returns the ``c_e`` smallest
+    keys' entries, ascending. Scanned nodes form an antichain, so their
+    object ranges are disjoint and descending range end IS right-first
+    pre-order — the exact order ``range_filter``'s DFS collects entries
+    in, with the DFS's early stop only ever dropping larger keys. The two
+    routers therefore return identical entry lists (pinned by
+    tests/test_router.py)."""
+    t = index.tree
+    m = index.m
+    full = (1 << m) - 1
+    qlo, qhi = pred.lo, pred.hi
+    n = index.n
+
+    root = int(np.nonzero(t.parent < 0)[0][0])
+    D0 = 0
+    for i in range(m):
+        if t.lo[root, i] >= qlo[i] and t.hi[root, i] <= qhi[i]:
+            D0 |= 1 << i
+
+    def scan_entry(p: int) -> Optional[int]:
+        objs = t.node_objects(p)
+        if scan_budget is not None:
+            objs = objs[:scan_budget]
+        ok = pred.matches(index.attrs[objs])
+        hit = np.nonzero(ok)[0]
+        return int(objs[hit[0]]) if len(hit) else None
+
+    found: List[Tuple[int, int]] = []       # (dfs key, entry id)
+    frontier: List[Tuple[int, int]] = [(root, D0)]
+    while frontier:
+        nxt: List[Tuple[int, int]] = []
+        for p, D in frontier:
+            D |= int(t.bl[p])
+            if D == full or t.is_leaf(p):
+                e = scan_entry(p)           # leaf fallback incl. (DESIGN §6)
+                if e is not None:
+                    end = int(t.start[p]) + int(t.count[p])
+                    found.append((n - end, e))
+                continue
+            dsp = int(t.dim[p])
+            for pc in (int(t.left[p]), int(t.right[p])):
+                if (D >> dsp) & 1:
+                    nxt.append((pc, D))
+                    continue
+                lc, rc = float(t.lo[pc, dsp]), float(t.hi[pc, dsp])
+                if lc > qhi[dsp] or rc < qlo[dsp]:
+                    continue  # disjoint
+                if lc >= qlo[dsp] and rc <= qhi[dsp]:
+                    nxt.append((pc, D | (1 << dsp)))
+                else:
+                    nxt.append((pc, D))
+        frontier = nxt
+    found.sort()
+    return [e for _, e in found[:c_e]]
+
+
 def recons_nbr(index: KHIIndex, o: int, pred: Predicate, c_n: int,
                visited: np.ndarray) -> List[int]:
     """Algorithm 2 (ReconsNbr): root->leaf aggregation of in-range neighbors.
@@ -179,6 +241,7 @@ def query(
     return_stats: bool = False,
     pool: str = "heap",
     expand_width: int = 1,
+    router: str = "dfs",
 ):
     """Algorithm 3 (Query): greedy best-first search over O_B.
 
@@ -195,6 +258,11 @@ def query(
     wide frontier (DESIGN.md §8): each hop expands the top-E unexpanded
     pool entries at once over one fused candidate stream. ``1`` reproduces
     the single-expansion hop exactly; ``>1`` changes hop order only.
+
+    ``router`` selects the Phase-A twin: ``"dfs"`` is the line-faithful
+    stack DFS, ``"level"`` the level-synchronous sweep the device engine
+    defaults to — the two return identical entry lists (DESIGN.md §9), so
+    this knob exists for twin-vs-twin pinning, not behavior.
     """
     c_e = c_e if c_e is not None else k         # paper: c_e = k
     c_n = c_n if c_n is not None else index.config.M  # paper: c_n = M
@@ -209,7 +277,13 @@ def query(
     visited = np.zeros(index.n, dtype=bool)
     q = np.asarray(q, dtype=np.float32)
 
-    entries = range_filter(index, pred, c_e, scan_budget=scan_budget)
+    if router == "level":
+        entries = range_filter_level(index, pred, c_e,
+                                     scan_budget=scan_budget)
+    elif router == "dfs":
+        entries = range_filter(index, pred, c_e, scan_budget=scan_budget)
+    else:
+        raise ValueError(f"router must be 'dfs' or 'level', got {router!r}")
     if pool == "beam":
         return _query_beam(index, q, pred, k, entries, visited,
                            ef=ef, c_n=c_n, expand_width=expand_width,

@@ -1,0 +1,273 @@
+"""Tree routing (Algorithm 1) — Phase A of the two-phase query pipeline.
+
+Routing finds up to ``c_e`` entry points in O_B by walking the attribute
+partition tree. Two device implementations share one contract
+(``route(di, qlo, qhi, p) -> (c_e,) int32 entry ids, -1 padded, in DFS
+order``) and return **identical entry vectors** (pinned by
+tests/test_router.py):
+
+  * ``route_dfs`` — the legacy per-query stack DFS ``lax.while_loop``
+    (one node pop per iteration). Inside the vmapped batch every lane
+    pays the slowest lane's pop count: the while_loop is lockstep, so a
+    single deep query serializes the whole batch.
+  * ``route_level_sync`` — the production router: a fixed
+    ``lax.fori_loop`` over tree **levels** (height is O(log n), Lemma 1)
+    with a per-query fixed-width frontier of (node, D-bitmask) pairs.
+    Every level processes its whole frontier at once — entry scans are
+    batched per level as one ``(F, scan_budget)`` window gather instead
+    of one scan per pop — and the loop trip count is the tree height,
+    identical for every lane of the batch.
+
+Why the two return the same entries: the DFS collects entries in pop
+order (right child pushed last, popped first — right-first pre-order)
+and stops after ``c_e``. The set of *scannable* nodes (covered or leaf)
+is traversal-order independent, and scanned nodes form an antichain
+(a scanned node is never descended), so their object ranges
+``[start, start+count)`` are disjoint — which makes right-first
+pre-order over them exactly **descending range end**. The level-sync
+router therefore tags each candidate entry with the key
+``n - (start + count)``, keeps the ``c_e`` smallest keys across the
+sweep (a sorted running merge per level), and returns them ascending:
+the same entries, in the same order, as the DFS with its early stop
+(the stop only ever drops larger keys). The numpy twin is
+``query_ref.range_filter_level``.
+
+The frontier width is bounded by ``SearchParams.frontier_cap`` with the
+same overflow-clamp semantics as the DFS ``stack_cap`` (excess pushes
+drop); ``required_frontier_cap(di)`` derives the exact sufficient value
+(max nodes on any tree level) and ``engine.validate_search_params``
+raises/adjusts undersized configs, like it does for scan_budget.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .engine import DeviceIndex, SearchParams
+
+__all__ = ["ROUTERS", "resolve_router", "route_dfs", "route_level_sync",
+           "required_frontier_cap"]
+
+ROUTERS = ("level", "dfs")
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def _root_D0(di, qlo, qhi, m: int) -> jax.Array:
+    """D seeded with dims the root rectangle already covers."""
+    root_cov = ((di.lo[di.root] >= qlo) & (di.hi[di.root] <= qhi))
+    return jnp.sum(jnp.where(root_cov, 1 << jnp.arange(m), 0)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Legacy per-query stack DFS (reference form of the device router)
+# --------------------------------------------------------------------------
+
+def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
+    """Returns entry-point object ids (c_e,), -1 padded, DFS order."""
+    m = di.attrs.shape[1]
+    full = (1 << m) - 1
+    S = p.stack_cap
+    # padded order hoisted out of the loop body — the pop body used to
+    # re-pad (n,) -> (n + scan_budget,) on every node pop
+    order_pad = jnp.pad(di.order, (0, p.scan_budget))
+
+    D0 = _root_D0(di, qlo, qhi, m)
+
+    def scan_entry(node):
+        s = di.start[node]
+        win = jax.lax.dynamic_slice(order_pad, (s,), (p.scan_budget,))
+        in_node = jnp.arange(p.scan_budget) < di.count[node]
+        a = di.attrs[win]
+        ok = in_node & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+        idx = jnp.argmax(ok)
+        return jnp.where(ok.any(), win[idx], -1).astype(jnp.int32)
+
+    State = tuple  # (stack_node, stack_D, sp, entries, n_e, steps)
+    stack_node = jnp.full((S,), -1, jnp.int32).at[0].set(di.root)
+    stack_D = jnp.zeros((S,), jnp.int32).at[0].set(D0)
+    entries = jnp.full((p.c_e,), -1, jnp.int32)
+    state: State = (stack_node, stack_D, jnp.int32(1), entries,
+                    jnp.int32(0), jnp.int32(0))
+
+    def cond(st):
+        _, _, sp, _, n_e, steps = st
+        return (sp > 0) & (n_e < p.c_e) & (steps < p.max_steps)
+
+    def body(st):
+        stack_node, stack_D, sp, entries, n_e, steps = st
+        node = stack_node[sp - 1]
+        D = stack_D[sp - 1] | di.bl[node]
+        sp = sp - 1
+
+        is_full = D == full
+        is_leaf = di.left[node] < 0
+
+        # entry scan for covered nodes AND leaves (leaf fallback — see
+        # query_ref.range_filter for the rationale)
+        do_scan = is_full | is_leaf
+        e = jnp.where(do_scan, scan_entry(node), -1)
+        got = do_scan & (e >= 0)
+        entries = entries.at[jnp.where(got, n_e, p.c_e)].set(e, mode="drop")
+        n_e = n_e + got.astype(jnp.int32)
+
+        # children pushes (only when internal & not full)
+        dsp = di.dim[node]
+        cl, cr = di.left[node], di.right[node]
+        covered = ((D >> dsp) & 1) == 1
+
+        def child_push(pc):
+            lc = di.lo[pc, dsp]
+            rc = di.hi[pc, dsp]
+            disjoint = (lc > qhi[dsp]) | (rc < qlo[dsp])
+            contained = (lc >= qlo[dsp]) & (rc <= qhi[dsp])
+            newD = jnp.where(contained, D | (1 << dsp), D)
+            valid = ~disjoint
+            # covered split dim: always push with unchanged D
+            newD = jnp.where(covered, D, newD)
+            valid = jnp.where(covered, True, valid)
+            return valid & ~is_full & ~is_leaf, newD
+
+        vl, Dl = child_push(cl)
+        vr, Dr = child_push(cr)
+        # push left first (popped last) to match the reference DFS order
+        slot_l = jnp.where(vl, sp, S)
+        stack_node = stack_node.at[slot_l].set(cl, mode="drop")
+        stack_D = stack_D.at[slot_l].set(Dl, mode="drop")
+        sp = sp + vl.astype(jnp.int32)
+        slot_r = jnp.where(vr, sp, S)
+        stack_node = stack_node.at[slot_r].set(cr, mode="drop")
+        stack_D = stack_D.at[slot_r].set(Dr, mode="drop")
+        sp = sp + vr.astype(jnp.int32)
+        sp = jnp.minimum(sp, S)  # overflow clamp (documented bound)
+        return (stack_node, stack_D, sp, entries, n_e, steps + 1)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return state[3]
+
+
+# --------------------------------------------------------------------------
+# Level-synchronous batched router (production form)
+# --------------------------------------------------------------------------
+
+def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
+    """Returns entry-point object ids (c_e,), -1 padded, DFS order
+    (module docstring: the DFS-rank key makes the two routers agree)."""
+    F = p.frontier_cap
+    if F <= 0:
+        raise ValueError(
+            "SearchParams.frontier_cap is unset (0 = derive from the "
+            "index): resolve it with derive_search_params / "
+            "validate_search_params, or build the search via "
+            "make_search_fn(p, di=...) / search_batch, which do. An "
+            "arbitrary fixed width would silently drop router branches.")
+    m = di.attrs.shape[1]
+    full = (1 << m) - 1
+    H = di.nbrs.shape[1]          # tree levels == path height (tree.py)
+    n = di.order.shape[0]
+    SB = p.scan_budget
+    order_pad = jnp.pad(di.order, (0, SB))
+    scan_lane = jnp.arange(SB)
+
+    fnode0 = jnp.full((F,), -1, jnp.int32).at[0].set(di.root)
+    fD0 = jnp.zeros((F,), jnp.int32).at[0].set(_root_D0(di, qlo, qhi, m))
+    keys0 = jnp.full((p.c_e,), _I32_MAX, jnp.int32)
+    ents0 = jnp.full((p.c_e,), -1, jnp.int32)
+
+    def level(_lvl, st):
+        fnode, fD, keys, ents = st
+        alive = fnode >= 0
+        node = jnp.maximum(fnode, 0)
+        D = jnp.where(alive, fD | di.bl[node], 0)
+        is_full = D == full
+        is_leaf = di.left[node] < 0
+        do_scan = alive & (is_full | is_leaf)
+
+        # ---- batched entry scan: the whole level's windows in one gather
+        s = di.start[node]                              # (F,)
+        win = order_pad[s[:, None] + scan_lane[None, :]]  # (F, SB)
+        in_node = scan_lane[None, :] < di.count[node][:, None]
+        a = di.attrs[win]                               # (F, SB, m)
+        ok = in_node & jnp.all((a >= qlo) & (a <= qhi), axis=-1)
+        hit = jnp.argmax(ok, axis=1)
+        e = jnp.take_along_axis(win, hit[:, None], axis=1)[:, 0]
+        e = jnp.where(do_scan & ok.any(axis=1), e, -1).astype(jnp.int32)
+
+        # ---- DFS-rank keys: right-first pre-order over the scanned
+        # antichain == descending range end (module docstring)
+        key = jnp.where(e >= 0, n - (s + di.count[node]), _I32_MAX)
+        allk = jnp.concatenate([keys, key.astype(jnp.int32)])
+        alle = jnp.concatenate([ents, e])
+        srt = jnp.argsort(allk, stable=True)[: p.c_e]
+        keys, ents = allk[srt], alle[srt]
+
+        # ---- children pushes for alive internal non-covered nodes
+        expand = alive & ~is_full & ~is_leaf
+        dsp = jnp.maximum(di.dim[node], 0)              # leaf-safe (masked)
+        covered = ((D >> dsp) & 1) == 1
+        qlod, qhid = qlo[dsp], qhi[dsp]
+
+        def child(pc):
+            csafe = jnp.maximum(pc, 0)
+            lc = di.lo[csafe, dsp]
+            rc = di.hi[csafe, dsp]
+            disjoint = (lc > qhid) | (rc < qlod)
+            contained = (lc >= qlod) & (rc <= qhid)
+            newD = jnp.where(contained, D | (1 << dsp), D)
+            valid = ~disjoint
+            newD = jnp.where(covered, D, newD)
+            valid = jnp.where(covered, True, valid)
+            return expand & valid, newD
+
+        cl, cr = di.left[node], di.right[node]
+        vl, Dl = child(cl)
+        vr, Dr = child(cr)
+        cand_node = jnp.stack([cl, cr], axis=1).reshape(2 * F)
+        cand_D = jnp.stack([Dl, Dr], axis=1).reshape(2 * F)
+        cand_valid = jnp.stack([vl, vr], axis=1).reshape(2 * F)
+        pos = jnp.cumsum(cand_valid) - cand_valid        # exclusive
+        slot = jnp.where(cand_valid, pos, F)             # F+: overflow clamp
+        fnode = jnp.full((F,), -1, jnp.int32).at[slot].set(cand_node,
+                                                           mode="drop")
+        fD = jnp.zeros((F,), jnp.int32).at[slot].set(cand_D, mode="drop")
+        return fnode, fD, keys, ents
+
+    st = jax.lax.fori_loop(0, H, level, (fnode0, fD0, keys0, ents0))
+    return st[3]
+
+
+def required_frontier_cap(di) -> int:
+    """Smallest frontier width that can never drop a branch: the max node
+    count over tree levels (per shard for a stacked DeviceIndex). The
+    frontier at sweep step l holds a subset of the level-l nodes, so this
+    bound is sufficient for every query. Vectorized per level — O(height)
+    numpy ops, not O(num_nodes) Python iterations (this runs inside
+    validate_search_params on every index install/hot-swap)."""
+    left = np.asarray(jax.device_get(di.left))
+    right = np.asarray(jax.device_get(di.right))
+    root = np.asarray(jax.device_get(di.root))
+    if left.ndim == 1:
+        left, right, root = left[None], right[None], root[None]
+    cap = 1
+    for s in range(left.shape[0]):
+        frontier = np.asarray([root[s]], dtype=np.int64)
+        while frontier.size:
+            cap = max(cap, int(frontier.size))
+            children = np.concatenate([left[s][frontier],
+                                       right[s][frontier]])
+            frontier = children[children >= 0]
+    return cap
+
+
+def resolve_router(name: str) -> Callable:
+    """Router name -> route(di, qlo, qhi, p) (the Phase-A contract)."""
+    if name == "level":
+        return route_level_sync
+    if name == "dfs":
+        return route_dfs
+    raise ValueError(f"unknown router {name!r}; expected one of {ROUTERS}")

@@ -15,9 +15,10 @@ keyed .npz). A lost host reloads only its shard; `elastic_reshard` (see
 repro.distributed.elastic) re-partitions object ids and rebuilds only moved
 shards.
 
-Every engine-side knob — including the wide-frontier ``expand_width`` and
-the distance ``backend`` (DESIGN.md §8/§3) — rides in ``SearchParams``
-unchanged: each shard runs the same ``_query_one`` program the
+Every engine-side knob — the wide-frontier ``expand_width``, the scoring
+``backend`` (Scorer registry, DESIGN.md §9) and the Phase-A ``router``
+(level-sync sweep or legacy DFS) — rides in ``SearchParams`` unchanged:
+each shard runs the same two-phase ``_query_one`` program the
 single-device engine runs.
 """
 
@@ -33,7 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import (DeviceIndex, SearchParams, _query_one, device_put_index,
-                     resolve_dist_ids, validate_search_params)
+                     resolve_scorer, validate_search_params)
 from .khi import KHIConfig, KHIIndex
 
 __all__ = ["ShardedKHI", "build_sharded", "make_sharded_search_fn",
@@ -97,8 +98,8 @@ def _local_to_global(local_ids: jax.Array, shard: jax.Array,
 
 
 def _shard_search(di: DeviceIndex, shard_id: jax.Array, n_shards: int,
-                  queries, qlo, qhi, p: SearchParams, dist_ids):
-    fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
+                  queries, qlo, qhi, p: SearchParams, scorer):
+    fn = functools.partial(_query_one, p=p, scorer=scorer)
     ids, dists, hops = jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(
         queries, qlo, qhi)
     gids = _local_to_global(ids, shard_id, n_shards)
@@ -130,7 +131,7 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
     if skhi is not None:
         params = validate_search_params(params, skhi.di,
                                         on_undersized=on_undersized)
-    dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
+    scorer = resolve_scorer(params.backend, dist_fn=dist_fn)
     n_shards = mesh.shape[model_axis]
     dspec = P(tuple(data_axes))
 
@@ -140,7 +141,7 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
         di = jax.tree.map(lambda x: x[0], di_blk)      # squeeze shard axis
         shard_id = off_blk[0]
         gids, dists, hops = _shard_search(di, shard_id, n_shards,
-                                          queries, qlo, qhi, params, dist_ids)
+                                          queries, qlo, qhi, params, scorer)
         allg = jax.lax.all_gather(gids, model_axis)    # (S, B, k)
         alld = jax.lax.all_gather(dists, model_axis)
         mi, md = _merge_topk(allg, alld, params.k)
@@ -163,14 +164,14 @@ def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
     Index-dependent buffer bounds are auto-raised by default."""
     params = validate_search_params(params, skhi.di,
                                     on_undersized=on_undersized)
-    dist_ids = resolve_dist_ids(params.backend, dist_fn=dist_fn)
+    scorer = resolve_scorer(params.backend, dist_fn=dist_fn)
     n_shards = skhi.num_shards
 
     @jax.jit
     def run(skhi, queries, qlo, qhi):
         def per_shard(di, off):
             return _shard_search(di, off, n_shards, queries, qlo, qhi,
-                                 params, dist_ids)
+                                 params, scorer)
         gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
         mi, md = _merge_topk(gids, dists, params.k)
         return mi, md, hops

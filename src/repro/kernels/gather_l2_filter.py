@@ -1,0 +1,122 @@
+"""Predicate-fused gather + squared-L2 Pallas kernel (DESIGN.md §9).
+
+The KHI engine's scoring step evaluates candidate rows against BOTH the
+query vector (squared L2) and the query's range predicate
+``all(qlo <= attrs[id] <= qhi)``.  The unfused backends leave the
+predicate to a separate XLA gather of ``di.attrs``; this kernel extends
+the blocked scalar-prefetched gather (``kernels.gather_l2``) to DMA each
+candidate's **attribute row alongside its vector row** and evaluate the
+predicate in-kernel, emitting ``+inf`` for out-of-range rows — one pass
+over the id stream, no separately materialized attrs gather at the
+scoring site.
+
+Contract extensions over ``gather_l2_blocked_raw``:
+
+  * ``idx`` may contain ``-1`` (the engine's pad/invalid lanes): those
+    lanes DMA row 0 (any in-range row) and emit ``+inf`` — the kernel
+    natively consumes the engine's -1-padded candidate buffers, so the
+    caller-side ``where(valid, d, inf)`` overwrite disappears;
+  * per-query bounds ``qlo``/``qhi`` ride in as ``(B, m)`` blocked inputs;
+  * finite lanes are **bitwise identical** to ``gather_l2_blocked_raw``
+    (same ``(C_BLK, d) -> (C_BLK,)`` f32 reduction shape) — pinned by
+    tests/test_kernels.py, which is what lets the engine's cross-backend
+    id-equality and the E=1 golden snapshot survive the backend swap.
+
+Attribute rows are tiny (m ~ 3-5 floats), so the extra per-row DMA rides
+in the shadow of the (d,)-row vector DMA; distances accumulate in f32
+(bf16 corpora supported, attrs stay f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_l2_filter_blocked_kernel", "gather_l2_filter_blocked_raw"]
+
+
+def gather_l2_filter_blocked_kernel(idx_ref, corpus_ref, attrs_ref, q_ref,
+                                    qlo_ref, qhi_ref, o_ref, rows_ref,
+                                    arows_ref, vsems_ref, asems_ref):
+    """Grid (B, C/C_BLK): step (i, j) gathers vector AND attribute rows for
+    idx[i, j*C_BLK : (j+1)*C_BLK] via overlapping per-row DMAs, then emits
+    ``where(in_range & valid, sum((q-row)^2), +inf)`` for the whole tile."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    c_blk = rows_ref.shape[0]
+
+    def issue(r, carry):
+        row = jnp.maximum(idx_ref[i, j * c_blk + r], 0)
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              vsems_ref.at[r]).start()
+        pltpu.make_async_copy(attrs_ref.at[row], arows_ref.at[r],
+                              asems_ref.at[r]).start()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, issue, 0)
+
+    def drain(r, carry):
+        row = jnp.maximum(idx_ref[i, j * c_blk + r], 0)
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              vsems_ref.at[r]).wait()
+        pltpu.make_async_copy(attrs_ref.at[row], arows_ref.at[r],
+                              asems_ref.at[r]).wait()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, drain, 0)
+
+    d = q_ref[...].astype(jnp.float32) - rows_ref[...].astype(jnp.float32)
+    dist = jnp.sum(d * d, axis=-1)                       # (c_blk,)
+    a = arows_ref[...].astype(jnp.float32)               # (c_blk, m)
+    ok = jnp.all((a >= qlo_ref[...]) & (a <= qhi_ref[...]), axis=-1)
+    valid = idx_ref[i, pl.dslice(j * c_blk, c_blk)] >= 0
+    o_ref[...] = jnp.where(ok & valid, dist, jnp.inf)[None, :]
+
+
+def gather_l2_filter_blocked_raw(idx: jax.Array, corpus: jax.Array,
+                                 attrs: jax.Array, q: jax.Array,
+                                 qlo: jax.Array, qhi: jax.Array,
+                                 *, c_blk: int = 128,
+                                 interpret: bool = False) -> jax.Array:
+    """idx (B, C) int32 (-1 = pad/invalid), corpus (N, d), attrs (N, m) f32,
+    q (B, d), qlo/qhi (B, m) f32 -> (B, C) f32 with +inf on invalid or
+    out-of-range lanes.
+
+    Same tiling contract as ``gather_l2_blocked_raw`` (idx padded to a
+    ``c_blk`` multiple — with -1 here, so pad lanes emit +inf and are
+    sliced off); the corpus and attrs planes stay whole in compiler-chosen
+    (HBM at size) memory and are DMA'd row-wise into the scratch tiles."""
+    B, C = idx.shape
+    N, D = corpus.shape
+    M = attrs.shape[1]
+    c_blk = min(c_blk, C)
+    pad = (-C) % c_blk
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    n_blk = (C + pad) // c_blk
+    out = pl.pallas_call(
+        gather_l2_filter_blocked_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_blk),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),    # corpus (rows DMA'd)
+                pl.BlockSpec(memory_space=pltpu.ANY),    # attrs  (rows DMA'd)
+                pl.BlockSpec((1, D), lambda i, j, idx_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, j, idx_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, j, idx_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, c_blk), lambda i, j, idx_ref: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((c_blk, D), corpus.dtype),
+                pltpu.VMEM((c_blk, M), attrs.dtype),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, n_blk * c_blk), jnp.float32),
+        interpret=interpret,
+    )(idx, corpus, attrs, q, qlo, qhi)
+    return out[:, :C]

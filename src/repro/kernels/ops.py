@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from . import gather_l2 as _gather
+from . import gather_l2_filter as _gather_filter
 from . import l2dist as _l2
 from . import ref as _ref
 
-__all__ = ["l2dist", "gather_l2", "use_pallas_default"]
+__all__ = ["l2dist", "gather_l2", "gather_l2_filtered",
+           "use_pallas_default"]
 
 
 def use_pallas_default() -> bool:
@@ -92,7 +94,28 @@ def gather_l2(idx: jax.Array, corpus: jax.Array, q: jax.Array,
     return _gather_l2(idx, corpus, q, _auto_interpret(interpret), c_blk)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "c_blk"))
+def _gather_l2_filtered(idx, corpus, attrs, q, qlo, qhi, interpret: bool,
+                        c_blk: int):
+    return _gather_filter.gather_l2_filter_blocked_raw(
+        idx, corpus, attrs, q, qlo, qhi, c_blk=c_blk, interpret=interpret)
+
+
+def gather_l2_filtered(idx: jax.Array, corpus: jax.Array, attrs: jax.Array,
+                       q: jax.Array, qlo: jax.Array, qhi: jax.Array,
+                       *, interpret: Optional[bool] = None,
+                       c_blk: int = 128) -> jax.Array:
+    """Predicate-fused gather+distance: idx (B, C) int32 (-1 = pad/invalid)
+    into corpus (N, d) / attrs (N, m), q (B, d), qlo/qhi (B, m) ->
+    (B, C) f32 with +inf on invalid or out-of-range lanes. Finite lanes are
+    bitwise-equal to ``gather_l2`` on the same ids (DESIGN.md §9); the
+    oracle is ``gather_l2_filter_ref``."""
+    return _gather_l2_filtered(idx, corpus, attrs, q, qlo, qhi,
+                               _auto_interpret(interpret), c_blk)
+
+
 # re-export oracles for convenience
 l2dist_qn_ref = _ref.l2dist_qn_ref
 l2dist_qc_ref = _ref.l2dist_qc_ref
 gather_l2_ref = _ref.gather_l2_ref
+gather_l2_filter_ref = _ref.gather_l2_filter_ref

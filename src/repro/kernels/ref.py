@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref"]
+__all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref",
+           "gather_l2_filter_ref"]
 
 
 def l2dist_qn_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -30,3 +31,17 @@ def gather_l2_ref(idx: jnp.ndarray, corpus: jnp.ndarray,
     q (B, d) -> (B, C), f32."""
     rows = corpus[idx]                                   # (B, C, d)
     return l2dist_qc_ref(q, rows)
+
+
+def gather_l2_filter_ref(idx: jnp.ndarray, corpus: jnp.ndarray,
+                         attrs: jnp.ndarray, q: jnp.ndarray,
+                         qlo: jnp.ndarray, qhi: jnp.ndarray) -> jnp.ndarray:
+    """Predicate-fused gather+distance oracle: idx (B, C) int32
+    (-1 = pad/invalid) into corpus (N, d) / attrs (N, m), q (B, d),
+    qlo/qhi (B, m) -> (B, C) f32 with +inf on invalid or out-of-range
+    lanes (the jnp-mask reference for kernels.gather_l2_filter)."""
+    safe = jnp.maximum(idx, 0)
+    dist = l2dist_qc_ref(q, corpus[safe])
+    a = attrs[safe].astype(jnp.float32)                  # (B, C, m)
+    ok = jnp.all((a >= qlo[:, None, :]) & (a <= qhi[:, None, :]), axis=-1)
+    return jnp.where(ok & (idx >= 0), dist, jnp.inf)

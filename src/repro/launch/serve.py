@@ -4,7 +4,8 @@
 (micro-batching + shard fan-out + result cache, DESIGN.md §3) and drives it
 with a stream of mixed-size request bursts — the serving workload, not just
 a fixed-batch loop. ``--shards S`` serves a sharded corpus, ``--backend``
-picks the distance backend (``pallas_gather_l2`` = the fused kernel);
+picks the scoring backend (``pallas_gather_l2_filter`` = the
+predicate-fused kernel), ``--router`` the Phase-A tree router;
 ``--mode generate`` runs prefill+decode on a smoke LM.
 """
 
@@ -37,7 +38,8 @@ def serve_khi(args):
         index = KHIIndex.build(vecs, attrs, cfg)
     params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16,
                           backend=args.backend,
-                          expand_width=args.expand_width)
+                          expand_width=args.expand_width,
+                          router=args.router)
     buckets = tuple(sorted({1, 8, args.batch}))
     svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
 
@@ -60,6 +62,7 @@ def serve_khi(args):
           f"({len(results)/dt:.0f} QPS end-to-end; "
           f"device {snap['device_qps'] and round(snap['device_qps'])} QPS)")
     print(f"[serve] backend={args.backend} E={args.expand_width} "
+          f"router={args.router} "
           f"batches={snap['batches']} "
           f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
           f"buckets={snap['traced_buckets']}")
@@ -102,12 +105,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--iters", type=int, default=3)
-    from repro.core.engine import BACKENDS
+    from repro.core.engine import BACKENDS, ROUTERS
 
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--backend", default="jnp", choices=list(BACKENDS))
     ap.add_argument("--expand-width", type=int, default=1,
                     help="frontier width E: pool entries expanded per hop")
+    ap.add_argument("--router", default="level", choices=list(ROUTERS),
+                    help="Phase-A tree router (level = batched sweep)")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "khi":

@@ -274,7 +274,8 @@ def _build_khi_lowering(cell: str, mesh, sizes, rules, variant: str = ""):
         vec_dtype=jnp.bfloat16 if variant == "bf16vec" else None)
     hops = 64 if variant == "hops64" else kc.ef
     params = SearchParams(k=kc.k, ef=kc.ef, c_e=kc.c_e, c_n=kc.c_n,
-                          max_hops=hops, expand_width=kc.expand_width)
+                          max_hops=hops, expand_width=kc.expand_width,
+                          router=kc.router, frontier_cap=kc.frontier_cap)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     fn = make_sharded_search_fn(params, mesh, data_axes=data_axes)
 

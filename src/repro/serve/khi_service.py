@@ -24,9 +24,11 @@ request-facing layer that turns the jitted engine into a service:
     requests; every swap bumps the epoch, which invalidates the result
     cache (DESIGN.md §7 "Epoch swap protocol").
 
-The distance backend (``"jnp" | "pallas_l2" | "pallas_gather_l2"``) comes
-from ``SearchParams.backend`` — the fused (blocked) gather+L2 kernel is
-selected the same way here as in offline search — and so does the
+The scoring backend (``"jnp" | "pallas_l2" | "pallas_gather_l2" |
+"pallas_gather_l2_filter"``) comes from ``SearchParams.backend`` via the
+Scorer registry (DESIGN.md §9) — the predicate-fused gather+filter+L2
+kernel is selected the same way here as in offline search — and so do
+the Phase-A ``router`` (level-sync sweep by default) and the
 wide-frontier width (``SearchParams.expand_width``, DESIGN.md §8): E > 1
 cuts the lockstep hop count of every micro-batch ~E-fold, which is worth
 the most exactly here, where a bucket pads heterogeneous requests into one
@@ -48,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import (DeviceIndex, SearchParams, _query_one,
-                           device_put_index, resolve_dist_ids,
+                           device_put_index, resolve_scorer,
                            validate_search_params)
 from ..core.khi import KHIIndex
 from ..core.sharded import ShardedKHI, _merge_topk, _shard_search
@@ -130,8 +132,8 @@ class KHIService:
         di = index.di if self._sharded else index
         self.params = validate_search_params(
             self._user_params, di, on_undersized=self._on_undersized)
-        self._dist_ids = resolve_dist_ids(self.params.backend,
-                                          dist_fn=self._legacy_dist_fn)
+        self._scorer = resolve_scorer(self.params.backend,
+                                      dist_fn=self._legacy_dist_fn)
         self.index = index
         self._search = self._build_search_fn()
 
@@ -170,11 +172,11 @@ class KHIService:
             else self.index.attrs.shape[-1]
 
     def _build_search_fn(self):
-        p, dist_ids = self.params, self._dist_ids
+        p, scorer = self.params, self._scorer
         if not self._sharded:
             @jax.jit
             def single(di: DeviceIndex, q, qlo, qhi):
-                fn = functools.partial(_query_one, p=p, dist_ids=dist_ids)
+                fn = functools.partial(_query_one, p=p, scorer=scorer)
                 ids, dists, _ = jax.vmap(
                     lambda qq, lo, hi: fn(di, qq, lo, hi))(q, qlo, qhi)
                 return ids, dists
@@ -194,7 +196,7 @@ class KHIService:
         def fanout(skhi: ShardedKHI, q, qlo, qhi):
             def per_shard(di, off):
                 return _shard_search(di, off, n_shards, q, qlo, qhi,
-                                     p, dist_ids)
+                                     p, scorer)
             gids, dists, _ = jax.vmap(per_shard)(skhi.di, skhi.offsets)
             return _merge_topk(gids, dists, p.k)
 

@@ -172,6 +172,118 @@ def test_gather_l2_bf16_corpus():
                                rtol=2e-2, atol=2e-2 * D)
 
 
+# ------------------------------------------------ predicate-fused kernel
+
+def _filter_inputs(B, C, N, D, M, seed, *, neg_every=4):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, N, (B, C))
+    if neg_every:
+        idx.flat[::neg_every] = -1                 # pad/invalid lanes
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=jnp.float32)
+    attrs = jnp.asarray(rng.uniform(0, 10, (N, M)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    qlo = jnp.asarray(rng.uniform(0, 6, (B, M)), dtype=jnp.float32)
+    qhi = qlo + jnp.asarray(rng.uniform(1, 6, (B, M)), dtype=jnp.float32)
+    return jnp.asarray(idx, jnp.int32), corpus, attrs, q, qlo, qhi
+
+
+@pytest.mark.parametrize("B,C,N,D,M,c_blk", [
+    (1, 1, 4, 8, 1, 1),      # degenerate single row
+    (2, 8, 64, 64, 3, 4),    # c_blk divides C
+    (3, 10, 33, 96, 4, 4),   # padding lanes (10 -> 12)
+    (2, 6, 40, 48, 2, 128),  # c_blk clamped to C
+])
+def test_gather_l2_filter_matches_ref(B, C, N, D, M, c_blk):
+    """The predicate-fused kernel agrees with the jnp-mask oracle: exact
+    distances on in-range lanes, +inf on out-of-range AND -1 lanes."""
+    from repro.kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+    from repro.kernels.ref import gather_l2_filter_ref
+
+    idx, corpus, attrs, q, qlo, qhi = _filter_inputs(B, C, N, D, M,
+                                                     B * 13 + C + N + D)
+    got = gather_l2_filter_blocked_raw(idx, corpus, attrs, q, qlo, qhi,
+                                       c_blk=c_blk, interpret=True)
+    want = gather_l2_filter_ref(idx, corpus, attrs, q, qlo, qhi)
+    np.testing.assert_array_equal(np.isfinite(np.asarray(got)),
+                                  np.isfinite(np.asarray(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,C,N,D,M,c_blk", [(2, 8, 64, 64, 3, 4),
+                                             (3, 10, 33, 96, 4, 8)])
+def test_gather_l2_filter_finite_lanes_bitwise_gather_l2(B, C, N, D, M,
+                                                         c_blk):
+    """In-range lanes are BITWISE equal to the unfused blocked kernel (same
+    per-row reduction shape — DESIGN.md §9): the engine's cross-backend
+    id-equality and the E=1 golden pin rest on this."""
+    from repro.kernels.gather_l2 import gather_l2_blocked_raw
+    from repro.kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+
+    idx, corpus, attrs, q, qlo, qhi = _filter_inputs(B, C, N, D, M,
+                                                     B + C * 7 + N)
+    got = gather_l2_filter_blocked_raw(idx, corpus, attrs, q, qlo, qhi,
+                                       c_blk=c_blk, interpret=True)
+    plain = gather_l2_blocked_raw(jnp.maximum(idx, 0), corpus, q,
+                                  c_blk=c_blk, interpret=True)
+    f = np.isfinite(np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(got)[f], np.asarray(plain)[f])
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 4), C=st.integers(1, 24), N=st.integers(1, 80),
+       D=st.integers(1, 96), M=st.integers(1, 5), c_blk=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+def test_gather_l2_filter_property(B, C, N, D, M, c_blk, seed):
+    """Fused kernel == oracle on random shapes/blocks with -1, duplicate and
+    boundary ids mixed in (the engine's -1-padded candidate buffers)."""
+    from repro.kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+    from repro.kernels.ref import gather_l2_filter_ref
+
+    idx, corpus, attrs, q, qlo, qhi = _filter_inputs(B, C, N, D, M, seed,
+                                                     neg_every=3)
+    got = gather_l2_filter_blocked_raw(idx, corpus, attrs, q, qlo, qhi,
+                                       c_blk=c_blk, interpret=True)
+    want = gather_l2_filter_ref(idx, corpus, attrs, q, qlo, qhi)
+    np.testing.assert_array_equal(np.isfinite(np.asarray(got)),
+                                  np.isfinite(np.asarray(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gather_l2_filter_bf16_corpus():
+    """bf16 vector rows with f32 attrs: distances still accumulate in f32
+    and the predicate is evaluated on the exact f32 attribute values."""
+    from repro.kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+    from repro.kernels.ref import gather_l2_filter_ref
+
+    idx, corpus, attrs, q, qlo, qhi = _filter_inputs(3, 7, 40, 48, 3, 17)
+    corpus16 = corpus.astype(jnp.bfloat16)
+    got = gather_l2_filter_blocked_raw(idx, corpus16, attrs,
+                                       q.astype(jnp.bfloat16), qlo, qhi,
+                                       c_blk=4, interpret=True)
+    want = gather_l2_filter_ref(idx, corpus16, attrs, q.astype(jnp.bfloat16),
+                                qlo, qhi)
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.isfinite(np.asarray(got)),
+                                  np.isfinite(np.asarray(want)))
+    f = np.isfinite(np.asarray(got))
+    np.testing.assert_allclose(np.asarray(got)[f], np.asarray(want)[f],
+                               rtol=2e-2, atol=2e-2 * 48)
+
+
+def test_gather_l2_filtered_ops_wrapper():
+    """ops.gather_l2_filtered jits, dispatches and matches the raw call."""
+    from repro.kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+
+    idx, corpus, attrs, q, qlo, qhi = _filter_inputs(2, 9, 50, 32, 3, 23)
+    a = ops.gather_l2_filtered(idx, corpus, attrs, q, qlo, qhi,
+                               interpret=True, c_blk=4)
+    b = gather_l2_filter_blocked_raw(idx, corpus, attrs, q, qlo, qhi,
+                                     c_blk=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @settings(max_examples=12, deadline=None)
 @given(B=st.integers(1, 12), N=st.integers(1, 140), D=st.integers(1, 260),
        seed=st.integers(0, 2**16))

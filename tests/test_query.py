@@ -153,17 +153,23 @@ def test_search_params_validation(tiny_index):
     need_stack = eng.required_stack_cap(di)
     assert need_scan > 8 and need_stack == tiny_index.height + 1
 
+    need_front = eng.required_frontier_cap(di)
+
     small = eng.SearchParams(scan_budget=8, stack_cap=4)
     with pytest.raises(ValueError, match="scan_budget"):
         eng.make_search_fn(small, di=di)
     adj = eng.validate_search_params(small, di, on_undersized="adjust")
     assert adj.scan_budget == need_scan and adj.stack_cap == need_stack
+    assert adj.frontier_cap == need_front
     # sufficient params pass through unchanged
-    ok = eng.SearchParams(scan_budget=need_scan, stack_cap=need_stack)
+    ok = eng.SearchParams(scan_budget=need_scan, stack_cap=need_stack,
+                          frontier_cap=need_front)
     assert eng.validate_search_params(ok, di) is ok
     # derivation only raises, never lowers
-    big = eng.SearchParams(scan_budget=10 * need_scan, stack_cap=64)
+    big = eng.SearchParams(scan_budget=10 * need_scan, stack_cap=64,
+                           frontier_cap=4 * need_front)
     assert eng.derive_search_params(big, di).scan_budget == 10 * need_scan
+    assert eng.derive_search_params(big, di).frontier_cap == 4 * need_front
     # legacy escape hatch
     assert eng.validate_search_params(small, di,
                                       on_undersized="ignore") is small

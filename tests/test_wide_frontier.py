@@ -97,8 +97,8 @@ def test_expand_width_validation():
     # the frontier never holds more than ef candidates — E > ef would
     # crash the hop body's (E, H, M) gather at trace time
     with pytest.raises(ValueError, match="expand_width"):
-        eng.SearchParams(ef=8, expand_width=16)
-    assert eng.SearchParams(ef=8, expand_width=8).expand_width == 8
+        eng.SearchParams(ef=8, c_e=8, expand_width=16)
+    assert eng.SearchParams(ef=8, c_e=8, expand_width=8).expand_width == 8
 
 
 def test_query_ref_heap_rejects_wide_frontier(tiny_index, tiny_queries):
