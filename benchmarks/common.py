@@ -97,6 +97,32 @@ def run_queries(method_name: str, method, vecs, attrs, Q, preds, k: int,
 _ENGINE_STAGE_CACHE: Dict[int, tuple] = {}
 
 
+def _staged(index: KHIIndex):
+    """(device index, per-params closure memo) for ``index`` — the one
+    staging path every measuring helper below goes through."""
+    from repro.core.engine import device_put_index
+
+    cached = _ENGINE_STAGE_CACHE.get(id(index))
+    if cached is None or cached[0] is not index:
+        cached = (index, device_put_index(index), {})
+        _ENGINE_STAGE_CACHE[id(index)] = cached
+    return cached[1], cached[2]
+
+
+def _staged_planner(index: KHIIndex, params):
+    di, fns = _staged(index)
+    planner = fns.get(("planner", params))
+    if planner is None:
+        from repro.core.engine import Planner
+        planner = fns[("planner", params)] = Planner(di, params)
+    return planner
+
+
+def _boxes(preds):
+    return (np.stack([p.lo for p in preds]).astype(np.float32),
+            np.stack([p.hi for p in preds]).astype(np.float32))
+
+
 def engine_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
                   backend: str = "jnp", expand_width: int = 1,
                   repeats: int = 1):
@@ -107,23 +133,18 @@ def engine_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
     import jax
     import jax.numpy as jnp
 
-    from repro.core.engine import (SearchParams, device_put_index,
-                                   make_search_fn)
+    from repro.core.engine import SearchParams, make_search_fn
 
     params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend,
                           expand_width=expand_width)
-    cached = _ENGINE_STAGE_CACHE.get(id(index))
-    if cached is None or cached[0] is not index:
-        cached = (index, device_put_index(index), {})
-        _ENGINE_STAGE_CACHE[id(index)] = cached
-    _, di, fns = cached
+    di, fns = _staged(index)
     fn = fns.get(params)
     if fn is None:
         fn = fns[params] = make_search_fn(params, di=di,
                                           on_undersized="adjust")
     qv = jnp.asarray(Q)
-    qlo = jnp.asarray(np.stack([p.lo for p in preds]).astype(np.float32))
-    qhi = jnp.asarray(np.stack([p.hi for p in preds]).astype(np.float32))
+    lo, hi = _boxes(preds)
+    qlo, qhi = jnp.asarray(lo), jnp.asarray(hi)
     jax.block_until_ready(fn(di, qv, qlo, qhi))    # compile
     best = None
     for _ in range(max(1, repeats)):
@@ -133,6 +154,47 @@ def engine_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
         if best is None or dt < best[2]:
             best = (ids, hops, dt)
     return np.asarray(best[0]), np.asarray(best[1]), best[2]
+
+
+def planner_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
+                   backend: str = "jnp", strategy: str = "auto",
+                   scan_threshold: int = 0, expand_width: int = 1,
+                   repeats: int = 1):
+    """Stage + run the selectivity-adaptive planner (DESIGN.md §10) over
+    one workload; returns (ids, hops, seconds, Plan) for the best
+    wall-clock run. Shares engine_search's staging memo (one device
+    transfer per index, one Planner per SearchParams), so planner rows
+    and graph rows in a sweep can't drift in how they are measured."""
+    from repro.core.engine import SearchParams
+
+    params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend,
+                          expand_width=expand_width, strategy=strategy,
+                          scan_threshold=scan_threshold)
+    planner = _staged_planner(index, params)
+    qlo, qhi = _boxes(preds)
+    Q = np.asarray(Q, np.float32)
+    planner.search(Q, qlo, qhi)                    # compile/warm every path
+    best = None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        ids, _, hops, plan = planner.search(Q, qlo, qhi)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[2]:
+            best = (ids, hops, dt, plan)
+    return best
+
+
+def planner_plan(index: KHIIndex, preds, k: int, ef: int, *,
+                 backend: str = "jnp"):
+    """Dispatch cards only (no search): the Phase-A routing bound per
+    predicate, through the same staged Planner ``planner_search`` uses."""
+    from repro.core.engine import SearchParams
+
+    params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend,
+                          strategy="auto", scan_threshold=1)
+    planner = _staged_planner(index, params)
+    qlo, qhi = _boxes(preds)
+    return planner.plan(qlo, qhi)
 
 
 def ground_truth(vecs, attrs, Q, preds, k: int) -> List[np.ndarray]:

@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Docs cross-reference checker (CI-gated; ISSUE 5 satellite).
+
+Two classes of dead reference rot silently in this repo, because the
+module docstrings are the architecture map (DESIGN.md's header asks
+every module to cite the section it implements) and the READMEs source
+their claims from committed experiment files:
+
+  1. **Section citations.** Every ``§N`` / ``§N.M`` citation in ``src/``,
+     ``benchmarks/``, ``scripts/``, ``tests/`` python files and every
+     ``*.md`` must resolve to a real DESIGN.md heading (``## §N ...``);
+     ``§N.M`` must additionally resolve to numbered item ``M.`` inside
+     section N (e.g. ``§6.4`` = deviation 4 of §6). Citations of the
+     *source paper* ("paper §5.1", "paper §2.2") are a different
+     namespace and are skipped — the word "paper" within the preceding
+     few words marks them. Named anchors (``§Perf``, ``§Dry-run``) are
+     prose shorthands, not numbered sections, and are not checked.
+  2. **Experiment files.** Every committed ``experiments/*.json`` must
+     be referenced from README.md, DESIGN.md, or benchmarks/README.md
+     (an unreferenced trajectory is dead weight), and every
+     ``bench_*.json`` mention in those docs must point to a committed
+     file (a dangling mention is a broken claim).
+
+Exit 0 when clean; exit 1 with a list of dead references otherwise.
+
+    python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "DESIGN.md"
+DOC_HOMES = ("README.md", "DESIGN.md", "benchmarks/README.md")
+
+CITE_RE = re.compile(r"§(\d+)(?:\.(\d+))?")
+HEADING_RE = re.compile(r"^#{2,}\s*§(\d+)\b", re.M)
+ITEM_RE = re.compile(r"^(\d+)\.\s", re.M)
+BENCH_JSON_RE = re.compile(r"\bbench_[A-Za-z0-9_]+\.json\b")
+# "paper §5.1" etc. cite the SOURCE PAPER's numbering, not DESIGN.md
+PAPER_CONTEXT = re.compile(r"paper[^\n§]{0,40}$", re.I)
+
+
+def design_sections() -> dict[int, set[int]]:
+    """{section number: set of top-level numbered item labels inside}."""
+    text = DESIGN.read_text()
+    heads = list(HEADING_RE.finditer(text))
+    out: dict[int, set[int]] = {}
+    for i, h in enumerate(heads):
+        end = heads[i + 1].start() if i + 1 < len(heads) else len(text)
+        body = text[h.end():end]
+        out[int(h.group(1))] = {int(m.group(1))
+                                for m in ITEM_RE.finditer(body)}
+    return out
+
+
+def cited_files() -> list[pathlib.Path]:
+    files = []
+    for pat in ("src/**/*.py", "benchmarks/**/*.py", "scripts/*.py",
+                "tests/*.py", "examples/*.py", "*.md", "benchmarks/*.md"):
+        files.extend(ROOT.glob(pat))
+    return sorted(set(files))
+
+
+def check_citations() -> list[str]:
+    sections = design_sections()
+    errors = []
+    for f in cited_files():
+        text = f.read_text(errors="replace")
+        for m in CITE_RE.finditer(text):
+            prefix = text[max(0, m.start() - 60):m.start()]
+            # a §X.Y chained after "paper §A.B/§X.Y" shares its namespace
+            if PAPER_CONTEXT.search(prefix.split("\n")[-1]) \
+                    or prefix.endswith("/"):
+                continue
+            sec, item = int(m.group(1)), m.group(2)
+            line = text.count("\n", 0, m.start()) + 1
+            where = f"{f.relative_to(ROOT)}:{line}"
+            if sec not in sections:
+                errors.append(f"{where}: dead citation §{m.group(0)[1:]} — "
+                              f"no DESIGN.md heading '## §{sec}'")
+            elif item is not None and int(item) not in sections[sec]:
+                errors.append(f"{where}: dead citation §{sec}.{item} — "
+                              f"DESIGN.md §{sec} has no numbered item "
+                              f"{item}.")
+    return errors
+
+
+def check_experiments() -> list[str]:
+    errors = []
+    docs = {p: (ROOT / p).read_text() for p in DOC_HOMES}
+    committed = sorted((ROOT / "experiments").glob("*.json"))
+    for f in committed:
+        if not any(f.name in text for text in docs.values()):
+            errors.append(
+                f"experiments/{f.name}: committed but referenced from none "
+                f"of {', '.join(DOC_HOMES)} — document it or delete it")
+    names = {f.name for f in committed}
+    for doc, text in docs.items():
+        for m in BENCH_JSON_RE.finditer(text):
+            if m.group(0) not in names:
+                line = text.count("\n", 0, m.start()) + 1
+                errors.append(f"{doc}:{line}: mentions {m.group(0)} but no "
+                              f"such file is committed under experiments/")
+    return errors
+
+
+def main() -> int:
+    errors = check_citations() + check_experiments()
+    if errors:
+        print(f"check_docs: {len(errors)} dead cross-reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_files = len(cited_files())
+    print(f"check_docs: OK — all §N citations across {n_files} files "
+          f"resolve to DESIGN.md headings; all experiments/*.json "
+          f"cross-references are live both ways")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

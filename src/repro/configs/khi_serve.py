@@ -32,6 +32,17 @@ class KHIServeConfig:
     frontier_cap: int = 8192
     # serving-layer knobs (repro.serve.khi_service)
     backend: str = "pallas_gather_l2_filter"  # predicate-fused scorer on TPU
+    # Execution strategy (DESIGN.md §10): "auto" = per-query planner
+    # dispatch between the graph engine and the exact brute-scan kernel
+    # on the routing sweep's cardinality bound — the serving default.
+    strategy: str = "auto"
+    # Calibrated dispatch threshold, absolute in-range-object units per
+    # query: scan when the routing bound is <= this. 100_000 = 10% of the
+    # 1M-object shard — the paper-shaped crossover (graph traversal
+    # degrades below ~10% selectivity); the box-specific measured
+    # crossover ships with experiments/bench_selectivity.json
+    # (benchmarks/selectivity_bench.py recalibrates it per run).
+    scan_threshold: int = 100_000
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
     cache_size: int = 65536             # LRU result-cache entries
 
@@ -42,7 +53,9 @@ class KHIServeConfig:
                             backend=self.backend,
                             expand_width=self.expand_width,
                             router=self.router,
-                            frontier_cap=self.frontier_cap)
+                            frontier_cap=self.frontier_cap,
+                            strategy=self.strategy,
+                            scan_threshold=self.scan_threshold)
 
     def serve_config(self):
         from ..serve.khi_service import ServeConfig
@@ -56,5 +69,5 @@ def config() -> KHIServeConfig:
 def smoke_config() -> KHIServeConfig:
     return KHIServeConfig(name="khi-serve-smoke", n_per_shard=2000, d=32,
                           m=3, M=8, height=12, nodes_per_shard=4096, ef=32,
-                          backend="jnp", buckets=(1, 8, 32),
-                          cache_size=1024)
+                          backend="jnp", scan_threshold=200,  # same 10% rule
+                          buckets=(1, 8, 32), cache_size=1024)

@@ -2,12 +2,20 @@
 tree + per-node filtered HNSW graphs + range-filtering greedy search."""
 
 from .khi import KHIConfig, KHIIndex  # noqa: F401
-from .query_ref import Predicate, brute_force, query  # noqa: F401
+from .query_ref import (  # noqa: F401
+    Predicate,
+    brute_force,
+    estimate_cardinality,
+    query,
+)
 from .build_device import build_graphs_device  # noqa: F401
 from .engine import (  # noqa: F401
     BACKENDS,
     ROUTERS,
+    STRATEGIES,
     DeviceIndex,
+    Plan,
+    Planner,
     Scorer,
     SearchParams,
     derive_search_params,

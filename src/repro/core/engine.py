@@ -1,5 +1,10 @@
 """Jitted, batched KHI query engine — the TPU-native form of Algorithms 1-3,
-structured as an explicit **two-phase pipeline** (DESIGN.md §9):
+structured as an explicit **two-phase pipeline** (DESIGN.md §9) behind a
+**selectivity-adaptive planner** (DESIGN.md §10; ``Planner`` at the end
+of this module): ``SearchParams.strategy`` dispatches each query to this
+graph program, to the exact predicate-fused brute scan
+(``kernels/scan_topk.py``), or — ``"auto"`` — per query on the routing
+sweep's in-range cardinality bound. The graph program:
 
   * **Phase A — routing** (``core.router``): Algorithm 1 as a
     level-synchronous batched frontier sweep over the flattened tree
@@ -71,17 +76,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import collections
+import hashlib
+
 from . import beam
 from .khi import KHIIndex
-from .router import ROUTERS, required_frontier_cap, resolve_router
+from .router import (HostCardEstimator, ROUTERS, required_frontier_cap,
+                     resolve_router)
 
-__all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS", "Scorer",
+__all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS",
+           "STRATEGIES", "SCAN_BACKENDS", "DEFAULT_SCAN_FRAC", "Scorer",
+           "Plan", "Planner",
            "device_put_index", "resolve_dist_ids", "resolve_scorer",
            "search_batch", "make_search_fn", "required_scan_budget",
            "required_stack_cap", "required_frontier_cap",
            "derive_search_params", "validate_search_params"]
 
 BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2", "pallas_gather_l2_filter")
+
+# Execution strategies (DESIGN.md §10): "graph" is the two-phase tree-routed
+# greedy search, "scan" the exact predicate-fused brute scan
+# (kernels/scan_topk.py), "auto" the per-query planner dispatch on the
+# routing sweep's in-range cardinality bound.
+STRATEGIES = ("graph", "scan", "auto")
+
+# Backends the scan strategy can execute on: the scan is predicate-masked
+# inside the pass, so it needs either the fused filter kernel or the jnp
+# mask oracle — the unfused pallas backends have no in-pass predicate.
+SCAN_BACKENDS = ("jnp", "pallas_gather_l2_filter")
+
+# Default dispatch threshold as a fraction of the (total) corpus when
+# SearchParams.scan_threshold is 0: scan when the routing bound says at
+# most this fraction of objects is in range. 0.1 is the paper-shaped
+# crossover (graph traversal degrades below ~10% selectivity — PAPER.md);
+# benchmarks/selectivity_bench.py measures the box-specific crossover and
+# records it with the committed experiment, and configs/khi_serve.py pins
+# the calibrated absolute value for the production cell.
+DEFAULT_SCAN_FRAC = 0.1
 
 
 @jax.tree_util.register_pytree_node_class
@@ -186,6 +217,11 @@ class SearchParams:
     backend: str = "jnp"     # scoring backend, one of BACKENDS
     expand_width: int = 1    # frontier width E: pool entries expanded per hop
     router: str = "level"    # Phase-A tree router, one of ROUTERS
+    strategy: str = "graph"  # execution strategy, one of STRATEGIES (§10)
+    # "auto" dispatch threshold in absolute in-range-object units: scan
+    # when the routing bound is <= this. 0 = derive from the index as
+    # DEFAULT_SCAN_FRAC of the (total) corpus at Planner build time.
+    scan_threshold: int = 0
     # level-sync frontier width bound (per level). 0 = derive from the
     # index (derive/validate_search_params fill it in; routing with 0
     # raises at trace time instead of silently dropping branches — no
@@ -213,6 +249,15 @@ class SearchParams:
         if self.router not in ROUTERS:
             raise ValueError(f"unknown router {self.router!r}; expected "
                              f"one of {ROUTERS}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; expected "
+                             f"one of {STRATEGIES} (graph = tree-routed "
+                             f"greedy search, scan = exact brute scan, "
+                             f"auto = per-query planner dispatch)")
+        if self.scan_threshold < 0:
+            raise ValueError(f"scan_threshold must be >= 0 (0 = derive "
+                             f"DEFAULT_SCAN_FRAC of the corpus from the "
+                             f"index), got {self.scan_threshold}")
         if self.frontier_cap < 0:
             raise ValueError(f"frontier_cap must be >= 0 (0 = derive from "
                              f"the index), got {self.frontier_cap}")
@@ -278,15 +323,42 @@ def derive_search_params(p: SearchParams, di: "DeviceIndex") -> SearchParams:
     )
 
 
+def _check_strategy_combo(p: SearchParams) -> None:
+    """Reject strategy combinations that cannot execute (DESIGN.md §10) —
+    checked by every runtime entry point via validate_search_params, with
+    actionable messages (satellite contract, tests/test_planner.py)."""
+    if p.strategy in ("scan", "auto") and p.backend not in SCAN_BACKENDS:
+        unfused = [b for b in BACKENDS if b not in SCAN_BACKENDS]
+        raise ValueError(
+            f"strategy={p.strategy!r} is incompatible with backend "
+            f"{p.backend!r}: the brute-scan path masks the pass with the "
+            f"range predicate, which needs the fused filter kernel "
+            f"('pallas_gather_l2_filter') or the jnp mask oracle ('jnp'); "
+            f"the unfused pallas backends {unfused} have no filter form. "
+            f"Switch backend, or force strategy='graph'.")
+    if p.strategy == "auto" and p.router != "level":
+        raise ValueError(
+            f"strategy='auto' requires router='level' (got "
+            f"{p.router!r}): the DFS router early-stops after c_e entries "
+            f"and never sweeps the full scannable antichain, so its "
+            f"subtree-count sum is not an in-range cardinality bound "
+            f"(core/router.py). Use router='level', or pick the strategy "
+            f"explicitly.")
+
+
 def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
                            on_undersized: str = "raise") -> SearchParams:
-    """Check ``p``'s index-dependent buffer bounds against ``di``.
+    """Check ``p``'s index-dependent buffer bounds against ``di``, plus the
+    strategy/backend/router compatibility rules (``_check_strategy_combo``
+    — those raise regardless of ``on_undersized``; they are contract
+    violations, not sizing choices).
 
     on_undersized: ``"raise"`` (error with the sufficient values),
     ``"adjust"`` (return an auto-raised copy), or ``"ignore"`` (legacy
     silent-truncation behavior, for callers that deliberately trade recall
     for a smaller scan window).
     """
+    _check_strategy_combo(p)
     if on_undersized == "ignore":
         return p
     if on_undersized not in ("raise", "adjust"):
@@ -480,8 +552,9 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
     E = p.expand_width
     L = E * HM                               # fused candidate stream length
 
-    # Phase A: tree routing (level-sync sweep or legacy DFS — core.router)
-    entries = resolve_router(p.router)(di, qlo, qhi, p)
+    # Phase A: tree routing (level-sync sweep or legacy DFS — core.router);
+    # the card byproduct is the planner's signal (§10) — unused in-graph
+    entries, _ = resolve_router(p.router)(di, qlo, qhi, p)
     e_valid = entries >= 0
     e_dist = scorer.score(di, q, qlo, qhi, entries)
 
@@ -568,6 +641,11 @@ def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False,
     frontier_cap) up front: by default an undersized configuration raises
     instead of silently returning -1 entries (``on_undersized`` selects
     raise/adjust/ignore — see ``validate_search_params``)."""
+    if p.strategy != "graph":
+        raise ValueError(
+            f"make_search_fn builds the jitted graph program only; "
+            f"strategy={p.strategy!r} dispatches per query on the host — "
+            f"build an engine.Planner (or call search_batch, which does).")
     if di is not None:
         p = validate_search_params(p, di, on_undersized=on_undersized)
     scorer = resolve_scorer(p.backend, dist_fn=dist_fn)
@@ -586,14 +664,314 @@ def search_batch(index_or_di, queries: np.ndarray, preds, params: SearchParams,
     list of ``Predicate``s; returns numpy (ids, dists, hops).
 
     Index-dependent buffer bounds are auto-raised by default (the derived
-    scan_budget makes the windowed entry scan exact — DESIGN.md §6)."""
+    scan_budget makes the windowed entry scan exact — DESIGN.md §6).
+    ``params.strategy`` other than ``"graph"`` routes through a Planner
+    (DESIGN.md §10): ``"scan"`` answers every query with the exact brute
+    scan (hops = 0), ``"auto"`` dispatches per query on the routing
+    bound."""
     di = index_or_di
     if isinstance(di, KHIIndex):
         di = device_put_index(di)
     qlo = np.stack([pr.lo for pr in preds]).astype(np.float32)
     qhi = np.stack([pr.hi for pr in preds]).astype(np.float32)
+    if params.strategy != "graph":
+        planner = Planner(di, params, dist_fn=dist_fn,
+                          on_undersized=on_undersized)
+        ids, dists, hops, _ = planner.search(queries, qlo, qhi)
+        return ids, dists, hops
     fn = make_search_fn(params, dist_fn=dist_fn, di=di,
                         on_undersized=on_undersized)
     ids, dists, hops = fn(di, jnp.asarray(queries), jnp.asarray(qlo),
                           jnp.asarray(qhi))
     return np.asarray(ids), np.asarray(dists), np.asarray(hops)
+
+
+# --------------------------------------------------------------------------
+# Selectivity-adaptive query planner (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Plan:
+    """Host-side record of one batch's dispatch decisions.
+
+    ``card`` is the Phase-A routing sweep's in-range cardinality bound
+    per query (-1 when the strategy was forced and no estimate ran);
+    ``use_scan`` the per-query dispatch; ``threshold`` the resolved
+    absolute dispatch threshold (SearchParams.scan_threshold, or the
+    DEFAULT_SCAN_FRAC derivation when that was 0)."""
+
+    card: np.ndarray       # (B,) int64/int32
+    use_scan: np.ndarray   # (B,) bool
+    threshold: int
+
+
+class Planner:
+    """Per-query strategy dispatch over one (sharded) index (DESIGN.md §10).
+
+    Two device programs and one host estimator behind one front door:
+
+      * **plan** (``strategy="auto"`` only) — the routing cardinality
+        bound: per query, the sum of subtree counts over the scanned
+        KD-antichain, an upper bound on |O_B| that is exact on contained
+        nodes; summed across shards for a ``ShardedKHI``. Evaluated by
+        the node-parallel ``router.HostCardEstimator`` (the dispatch
+        decision is host-side even in TPU serving; the device sweep
+        ``route_level_card`` computes the identical quantity — pinned)
+        behind a per-query **plan cache** keyed on the range-box bytes,
+        so repeated boxes (faceted search, dashboard refreshes, the
+        bench's steady state) re-dispatch without re-estimating.
+      * **graph** — the two-phase wide-frontier engine (``_query_one``),
+        vmapped; for a sharded index the same fan-out + O(S·k) merge the
+        serving layer uses, with per-query hops = max over shards (the
+        lockstep cost a vmapped shard pays).
+      * **scan** — the exact predicate-fused brute scan: the
+        ``kernels/scan_topk`` Pallas kernel when ``backend=
+        "pallas_gather_l2_filter"``, the jnp oracle ``scan_topk_ref``
+        when ``backend="jnp"`` (bit-identical outputs — pinned).
+        Structurally padded index rows are NaN-masked out of the scan
+        once at build time (they are unreachable by construction in the
+        graph path, but a scan visits every row). Scan lanes report
+        ``hops=0`` and are exact: recall 1.0 by construction.
+
+    Dispatch (``"auto"``): scan iff ``0 < card <= threshold``. Zero-card
+    queries (provably empty range, e.g. the serving layer's pad lanes)
+    go to the graph program, which exits its hop loop immediately —
+    both programs return all (-1, +inf) for them, but the graph exit is
+    near-free while a scan lane always pays a full corpus pass. Mixed
+    batches split into two sub-batches padded up to the next power of
+    two (bounded trace count, ≤ 2× padding work) with empty-range pad
+    lanes, and results scatter back by lane.
+
+    The legacy ``dist_fn`` override affects the graph path's scoring
+    only (the scan's contract is exactness against the jnp oracle).
+    """
+
+    def __init__(self, index, params: SearchParams, *, dist_fn=None,
+                 interpret: Optional[bool] = None,
+                 on_undersized: str = "adjust"):
+        if isinstance(index, KHIIndex):
+            index = device_put_index(index)
+        # duck-typed ShardedKHI check (sharded.py imports this module)
+        self._sharded = hasattr(index, "offsets") and hasattr(index, "di")
+        di = index.di if self._sharded else index
+        self.params = p = validate_search_params(params, di,
+                                                 on_undersized=on_undersized)
+        self.index = index
+        self._dist_fn = dist_fn
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = interpret
+
+        # per-shard real row counts: the tree root's count — DeviceIndex
+        # arrays may be padded (pad_n / shard stacking) past the corpus
+        root = np.atleast_1d(np.asarray(jax.device_get(di.root)))
+        count = np.asarray(jax.device_get(di.count))
+        if count.ndim == 1:
+            count = count[None]
+        self._n_shard = count[np.arange(root.shape[0]), root]
+        self.n_total = int(self._n_shard.sum())
+        self.scan_threshold = int(p.scan_threshold) or max(
+            1, int(DEFAULT_SCAN_FRAC * self.n_total))
+
+        # NaN-mask structurally padded rows ONCE: NaN fails every range
+        # predicate (even unconstrained ±inf bounds), so padded rows can
+        # never enter a scan's top-k — kernels/scan_topk.py's convention
+        N = di.attrs.shape[-2]
+        valid = np.arange(N)[None, :] < self._n_shard[:, None]
+        if not self._sharded:
+            valid = valid[0]
+        self._scan_attrs = jnp.where(jnp.asarray(valid)[..., None],
+                                     di.attrs, jnp.nan)
+
+        self._graph_fn = (self._build_graph_fn()
+                          if p.strategy in ("graph", "auto") else None)
+        self._scan_fn = (self._build_scan_fn()
+                         if p.strategy in ("scan", "auto") else None)
+        self._estimators = (self._build_estimators()
+                            if p.strategy == "auto" else None)
+        self._plan_cache: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
+        self.plan_cache_size = 65536
+
+    # --------------------------------------------------------- plan pass
+    def _build_estimators(self):
+        """One HostCardEstimator per shard from host copies of the
+        flattened tree (small next to the vector plane; fetched once per
+        Planner/epoch)."""
+        di = self.index.di if self._sharded else self.index
+        host = {f: np.asarray(jax.device_get(getattr(di, f)))
+                for f in ("left", "right", "dim", "bl", "lo", "hi",
+                          "count", "root")}
+        if not self._sharded:
+            host = {k: v[None] for k, v in host.items()}
+        return [HostCardEstimator(
+            host["left"][s], host["right"][s], host["dim"][s],
+            host["bl"][s], host["lo"][s], host["hi"][s], host["count"][s],
+            int(host["root"][s])) for s in range(host["left"].shape[0])]
+
+    def _cards(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
+        """Per-query routing bound through the plan cache (repeated boxes
+        re-dispatch without re-estimating)."""
+        B = qlo.shape[0]
+        out = np.zeros(B, np.int64)
+        keys, miss = [], []
+        for i in range(B):
+            h = hashlib.blake2b(digest_size=16)
+            h.update(qlo[i].tobytes())
+            h.update(qhi[i].tobytes())
+            key = h.digest()
+            keys.append(key)
+            hit = self._plan_cache.get(key)
+            if hit is None:
+                miss.append(i)
+            else:
+                self._plan_cache.move_to_end(key)
+                out[i] = hit
+        if miss:
+            mi = np.asarray(miss)
+            card = sum(est.cards(qlo[mi], qhi[mi])
+                       for est in self._estimators)
+            for j, i in enumerate(miss):
+                out[i] = card[j]
+                self._plan_cache[keys[i]] = int(card[j])
+            while len(self._plan_cache) > self.plan_cache_size:
+                self._plan_cache.popitem(last=False)
+        return out
+
+    # ------------------------------------------------------ device programs
+    def _build_graph_fn(self):
+        p = self.params
+        scorer = resolve_scorer(p.backend, dist_fn=self._dist_fn)
+        if not self._sharded:
+            @jax.jit
+            def graph(di, q, qlo, qhi):
+                fn = functools.partial(_query_one, p=p, scorer=scorer)
+                return jax.vmap(lambda qq, lo, hi: fn(di, qq, lo, hi))(
+                    q, qlo, qhi)
+            return lambda q, qlo, qhi: graph(self.index, q, qlo, qhi)
+
+        from .sharded import _merge_topk, _shard_search
+        S = self.index.num_shards
+
+        @jax.jit
+        def graph_sharded(skhi, q, qlo, qhi):
+            def per_shard(di, off):
+                return _shard_search(di, off, S, q, qlo, qhi, p, scorer)
+            gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
+            mi, md = _merge_topk(gids, dists, p.k)
+            return mi, md, jnp.max(hops, axis=0)
+
+        return lambda q, qlo, qhi: graph_sharded(self.index, q, qlo, qhi)
+
+    def _build_scan_fn(self):
+        p = self.params
+        interpret = self._interpret
+        use_kernel = p.backend == "pallas_gather_l2_filter"
+
+        def scan_one(vecs, attrs_nan, q, qlo, qhi):
+            if use_kernel:
+                from ..kernels.scan_topk import scan_topk_raw
+                return scan_topk_raw(vecs, attrs_nan, q, qlo, qhi, k=p.k,
+                                     interpret=interpret)
+            from ..kernels.ref import scan_topk_ref
+            return scan_topk_ref(vecs, attrs_nan, q, qlo, qhi, p.k)
+
+        if not self._sharded:
+            @jax.jit
+            def scan(di, attrs_nan, q, qlo, qhi):
+                return scan_one(di.vecs, attrs_nan, q, qlo, qhi)
+            return lambda q, qlo, qhi: scan(self.index, self._scan_attrs,
+                                            q, qlo, qhi)
+
+        from .sharded import _local_to_global, _merge_topk
+        S = self.index.num_shards
+
+        @jax.jit
+        def scan_sharded(skhi, attrs_nan, q, qlo, qhi):
+            gi, gd = [], []
+            for s in range(S):       # static unroll: S identical-shape scans
+                ids, dd = scan_one(skhi.di.vecs[s], attrs_nan[s], q, qlo, qhi)
+                gids = _local_to_global(ids, skhi.offsets[s], S)
+                gi.append(gids)
+                gd.append(jnp.where(gids >= 0, dd, jnp.inf))
+            return _merge_topk(jnp.stack(gi), jnp.stack(gd), p.k)
+
+        return lambda q, qlo, qhi: scan_sharded(self.index, self._scan_attrs,
+                                                q, qlo, qhi)
+
+    # -------------------------------------------------------- host dispatch
+    def plan(self, qlo: np.ndarray, qhi: np.ndarray) -> Plan:
+        """Per-query dispatch decisions for one batch of range boxes."""
+        qlo = np.ascontiguousarray(qlo, np.float32)
+        qhi = np.ascontiguousarray(qhi, np.float32)
+        B = qlo.shape[0]
+        p = self.params
+        if p.strategy == "graph":
+            return Plan(card=np.full(B, -1, np.int64),
+                        use_scan=np.zeros(B, bool),
+                        threshold=self.scan_threshold)
+        if p.strategy == "scan":
+            return Plan(card=np.full(B, -1, np.int64),
+                        use_scan=np.ones(B, bool),
+                        threshold=self.scan_threshold)
+        card = self._cards(qlo, qhi)
+        use_scan = (card > 0) & (card <= self.scan_threshold)
+        return Plan(card=card, use_scan=use_scan,
+                    threshold=self.scan_threshold)
+
+    @staticmethod
+    def _pad_pow2(qs, lo, hi):
+        """Pad a sub-batch to the next power of two with empty-range lanes
+        (lo=+inf > hi=-inf: zero entries and zero in-range rows), bounding
+        the jit trace count at O(log B) shapes per strategy."""
+        b = qs.shape[0]
+        bp = 1 << max(0, (b - 1).bit_length())
+        pad = bp - b
+        if pad:
+            qs = np.concatenate([qs, np.zeros((pad,) + qs.shape[1:],
+                                              np.float32)])
+            lo = np.concatenate([lo, np.full((pad,) + lo.shape[1:],
+                                             np.inf, np.float32)])
+            hi = np.concatenate([hi, np.full((pad,) + hi.shape[1:],
+                                             -np.inf, np.float32)])
+        return qs, lo, hi
+
+    def _run_graph(self, qs, lo, hi):
+        ids, dists, hops = self._graph_fn(jnp.asarray(qs), jnp.asarray(lo),
+                                          jnp.asarray(hi))
+        return np.asarray(ids), np.asarray(dists), np.asarray(hops)
+
+    def _run_scan(self, qs, lo, hi):
+        ids, dists = self._scan_fn(jnp.asarray(qs), jnp.asarray(lo),
+                                   jnp.asarray(hi))
+        return (np.asarray(ids), np.asarray(dists),
+                np.zeros(qs.shape[0], np.int32))
+
+    def search(self, queries, qlo, qhi):
+        """(B, d) × (B, m) × (B, m) -> (ids (B, k) int32, dists (B, k)
+        f32, hops (B,) int32, Plan). Global ids for a sharded index;
+        scan lanes carry hops = 0."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        qlo = np.ascontiguousarray(qlo, np.float32)
+        qhi = np.ascontiguousarray(qhi, np.float32)
+        plan = self.plan(qlo, qhi)
+        B, k = queries.shape[0], self.params.k
+        scan_idx = np.nonzero(plan.use_scan)[0]
+        graph_idx = np.nonzero(~plan.use_scan)[0]
+        if not len(graph_idx):
+            ids, dists, hops = self._run_scan(queries, qlo, qhi)
+            return ids, dists, hops, plan
+        if not len(scan_idx):
+            ids, dists, hops = self._run_graph(queries, qlo, qhi)
+            return ids, dists, hops, plan
+        out_ids = np.full((B, k), -1, np.int32)
+        out_d = np.full((B, k), np.inf, np.float32)
+        out_h = np.zeros((B,), np.int32)
+        for idx, run in ((graph_idx, self._run_graph),
+                         (scan_idx, self._run_scan)):
+            qs, lo, hi = self._pad_pow2(queries[idx], qlo[idx], qhi[idx])
+            ids, dists, hops = run(qs, lo, hi)
+            out_ids[idx] = ids[: len(idx)]
+            out_d[idx] = dists[: len(idx)]
+            out_h[idx] = hops[: len(idx)]
+        return out_ids, out_d, out_h, plan

@@ -17,7 +17,7 @@ from . import beam
 from .khi import KHIIndex
 
 __all__ = ["Predicate", "range_filter", "range_filter_level", "recons_nbr",
-           "query", "brute_force"]
+           "estimate_cardinality", "query", "brute_force"]
 
 
 class Predicate:
@@ -201,6 +201,55 @@ def range_filter_level(index: KHIIndex, pred: Predicate, c_e: int,
     return [e for _, e in found[:c_e]]
 
 
+def estimate_cardinality(index: KHIIndex, pred: Predicate,
+                         *, exact: bool = False) -> int:
+    """Numpy twin of the device planner's selectivity estimate
+    (``router.route_level_card``, DESIGN.md §10): sweep the tree exactly
+    like ``range_filter_level`` and sum ``count`` over the *scanned*
+    antichain (covered or leaf nodes). Every in-range object lives in
+    exactly one scanned node (disjoint branches are dropped only when
+    provably empty on the split dim), so the sum upper-bounds |O_B| —
+    exact on genuinely contained nodes, an overcount only on leaves and
+    BL-covered nodes. ``exact=True`` returns the true |O_B| instead (the
+    oracle the bound is validated against)."""
+    if exact:
+        return int(pred.matches(index.attrs).sum())
+    t = index.tree
+    m = index.m
+    full = (1 << m) - 1
+    qlo, qhi = pred.lo, pred.hi
+
+    root = int(np.nonzero(t.parent < 0)[0][0])
+    D0 = 0
+    for i in range(m):
+        if t.lo[root, i] >= qlo[i] and t.hi[root, i] <= qhi[i]:
+            D0 |= 1 << i
+
+    card = 0
+    frontier: List[Tuple[int, int]] = [(root, D0)]
+    while frontier:
+        nxt: List[Tuple[int, int]] = []
+        for p, D in frontier:
+            D |= int(t.bl[p])
+            if D == full or t.is_leaf(p):
+                card += int(t.count[p])
+                continue
+            dsp = int(t.dim[p])
+            for pc in (int(t.left[p]), int(t.right[p])):
+                if (D >> dsp) & 1:
+                    nxt.append((pc, D))
+                    continue
+                lc, rc = float(t.lo[pc, dsp]), float(t.hi[pc, dsp])
+                if lc > qhi[dsp] or rc < qlo[dsp]:
+                    continue  # disjoint
+                if lc >= qlo[dsp] and rc <= qhi[dsp]:
+                    nxt.append((pc, D | (1 << dsp)))
+                else:
+                    nxt.append((pc, D))
+        frontier = nxt
+    return card
+
+
 def recons_nbr(index: KHIIndex, o: int, pred: Predicate, c_n: int,
                visited: np.ndarray) -> List[int]:
     """Algorithm 2 (ReconsNbr): root->leaf aggregation of in-range neighbors.
@@ -242,6 +291,8 @@ def query(
     pool: str = "heap",
     expand_width: int = 1,
     router: str = "dfs",
+    strategy: str = "graph",
+    scan_threshold: Optional[int] = None,
 ):
     """Algorithm 3 (Query): greedy best-first search over O_B.
 
@@ -263,9 +314,33 @@ def query(
     stack DFS, ``"level"`` the level-synchronous sweep the device engine
     defaults to — the two return identical entry lists (DESIGN.md §9), so
     this knob exists for twin-vs-twin pinning, not behavior.
+
+    ``strategy`` is the host twin of the device planner (DESIGN.md §10):
+    ``"scan"`` answers with the exact brute scan over O_B
+    (``brute_force``); ``"auto"`` estimates |O_B| via
+    ``estimate_cardinality`` (the routing bound) and dispatches to scan
+    when ``0 < card <= scan_threshold`` (default: the engine's
+    ``DEFAULT_SCAN_FRAC`` of n), to the graph search otherwise — the
+    same decision rule the device ``Planner`` applies per batch lane.
     """
     c_e = c_e if c_e is not None else k         # paper: c_e = k
     c_n = c_n if c_n is not None else index.config.M  # paper: c_n = M
+    if strategy not in ("graph", "scan", "auto"):
+        raise ValueError(f"strategy must be graph|scan|auto, "
+                         f"got {strategy!r}")
+    if strategy == "auto":
+        if scan_threshold is None:
+            from .engine import DEFAULT_SCAN_FRAC
+            scan_threshold = max(1, int(DEFAULT_SCAN_FRAC * index.n))
+        card = estimate_cardinality(index, pred)
+        strategy = "scan" if 0 < card <= scan_threshold else "graph"
+    if strategy == "scan":
+        ids = brute_force(index.vecs, index.attrs, np.asarray(q, np.float32),
+                          pred, k)
+        if return_stats:
+            return ids, {"hops": 0, "entries": 0, "threshold_trace": [],
+                         "visited": index.n, "strategy": "scan"}
+        return ids
     if expand_width < 1:
         raise ValueError(f"expand_width must be >= 1, got {expand_width}")
     if expand_width > ef:

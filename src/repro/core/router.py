@@ -1,10 +1,12 @@
-"""Tree routing (Algorithm 1) — Phase A of the two-phase query pipeline.
+"""Tree routing (Algorithm 1) — Phase A of the two-phase query pipeline
+(DESIGN.md §9), plus the planner's routing-state cardinality estimators
+(DESIGN.md §10).
 
 Routing finds up to ``c_e`` entry points in O_B by walking the attribute
 partition tree. Two device implementations share one contract
-(``route(di, qlo, qhi, p) -> (c_e,) int32 entry ids, -1 padded, in DFS
-order``) and return **identical entry vectors** (pinned by
-tests/test_router.py):
+(``route(di, qlo, qhi, p) -> ((c_e,) int32 entry ids, -1 padded, in DFS
+order; () int32 in-range cardinality bound)``) and return **identical
+entry vectors** (pinned by tests/test_router.py):
 
   * ``route_dfs`` — the legacy per-query stack DFS ``lax.while_loop``
     (one node pop per iteration). Inside the vmapped batch every lane
@@ -37,6 +39,22 @@ same overflow-clamp semantics as the DFS ``stack_cap`` (excess pushes
 drop); ``required_frontier_cap(di)`` derives the exact sufficient value
 (max nodes on any tree level) and ``engine.validate_search_params``
 raises/adjusts undersized configs, like it does for scan_budget.
+
+**Cardinality bound** (DESIGN.md §10): every in-range object lives in
+exactly one *scanned* node (disjoint branches are dropped only when
+provably empty on the split dim, and the scanned antichain covers every
+surviving branch), so the sum of ``count`` over scanned nodes is an
+upper bound on |O_B| — exact on nodes whose rectangle is genuinely
+contained (covered with no blacklisted dims), an overcount only on
+leaves and BL-covered nodes, whose object counts are small by
+construction. Both routers accumulate it as a byproduct of the
+traversal they already do; it is the planner's selectivity estimate.
+Caveat: the DFS early-stops after ``c_e`` entries, so *its* sum covers
+only the visited prefix of the antichain and is NOT a bound — the
+planner therefore requires ``router="level"`` (the sweep always runs
+all levels). ``route_level_card`` is the estimate-only form: same
+traversal, no entry scans (it skips the per-level ``(F, scan_budget)``
+window gather, the expensive part of routing).
 """
 
 from __future__ import annotations
@@ -51,6 +69,7 @@ if TYPE_CHECKING:  # pragma: no cover
     from .engine import DeviceIndex, SearchParams
 
 __all__ = ["ROUTERS", "resolve_router", "route_dfs", "route_level_sync",
+           "route_level_card", "HostCardEstimator",
            "required_frontier_cap"]
 
 ROUTERS = ("level", "dfs")
@@ -68,8 +87,12 @@ def _root_D0(di, qlo, qhi, m: int) -> jax.Array:
 # Legacy per-query stack DFS (reference form of the device router)
 # --------------------------------------------------------------------------
 
-def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
-    """Returns entry-point object ids (c_e,), -1 padded, DFS order."""
+def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p):
+    """Returns (entry-point object ids (c_e,), -1 padded, DFS order;
+    () int32 sum of scanned-node counts). The DFS early-stops after c_e
+    entries, so its count sum covers only the visited antichain prefix —
+    NOT an |O_B| bound (module docstring); the planner requires the
+    level router for that."""
     m = di.attrs.shape[1]
     full = (1 << m) - 1
     S = p.stack_cap
@@ -88,19 +111,19 @@ def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
         idx = jnp.argmax(ok)
         return jnp.where(ok.any(), win[idx], -1).astype(jnp.int32)
 
-    State = tuple  # (stack_node, stack_D, sp, entries, n_e, steps)
+    State = tuple  # (stack_node, stack_D, sp, entries, n_e, card, steps)
     stack_node = jnp.full((S,), -1, jnp.int32).at[0].set(di.root)
     stack_D = jnp.zeros((S,), jnp.int32).at[0].set(D0)
     entries = jnp.full((p.c_e,), -1, jnp.int32)
     state: State = (stack_node, stack_D, jnp.int32(1), entries,
-                    jnp.int32(0), jnp.int32(0))
+                    jnp.int32(0), jnp.int32(0), jnp.int32(0))
 
     def cond(st):
-        _, _, sp, _, n_e, steps = st
+        _, _, sp, _, n_e, _, steps = st
         return (sp > 0) & (n_e < p.c_e) & (steps < p.max_steps)
 
     def body(st):
-        stack_node, stack_D, sp, entries, n_e, steps = st
+        stack_node, stack_D, sp, entries, n_e, card, steps = st
         node = stack_node[sp - 1]
         D = stack_D[sp - 1] | di.bl[node]
         sp = sp - 1
@@ -111,6 +134,7 @@ def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
         # entry scan for covered nodes AND leaves (leaf fallback — see
         # query_ref.range_filter for the rationale)
         do_scan = is_full | is_leaf
+        card = card + jnp.where(do_scan, di.count[node], 0)
         e = jnp.where(do_scan, scan_entry(node), -1)
         got = do_scan & (e >= 0)
         entries = entries.at[jnp.where(got, n_e, p.c_e)].set(e, mode="drop")
@@ -145,20 +169,17 @@ def route_dfs(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
         stack_D = stack_D.at[slot_r].set(Dr, mode="drop")
         sp = sp + vr.astype(jnp.int32)
         sp = jnp.minimum(sp, S)  # overflow clamp (documented bound)
-        return (stack_node, stack_D, sp, entries, n_e, steps + 1)
+        return (stack_node, stack_D, sp, entries, n_e, card, steps + 1)
 
     state = jax.lax.while_loop(cond, body, state)
-    return state[3]
+    return state[3], state[5]
 
 
 # --------------------------------------------------------------------------
 # Level-synchronous batched router (production form)
 # --------------------------------------------------------------------------
 
-def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
-    """Returns entry-point object ids (c_e,), -1 padded, DFS order
-    (module docstring: the DFS-rank key makes the two routers agree)."""
-    F = p.frontier_cap
+def _require_frontier(F: int) -> None:
     if F <= 0:
         raise ValueError(
             "SearchParams.frontier_cap is unset (0 = derive from the "
@@ -166,6 +187,59 @@ def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
             "validate_search_params, or build the search via "
             "make_search_fn(p, di=...) / search_batch, which do. An "
             "arbitrary fixed width would silently drop router branches.")
+
+
+def _frontier_step(di, qlo, qhi, F: int, full: int, fnode, fD):
+    """One level of the sweep, shared by the entry router and the
+    card-only estimator: classify the frontier (scanned antichain nodes
+    vs nodes to expand) and compact the children into the next frontier
+    (overflow clamps at F, the documented ``frontier_cap`` bound).
+    Returns (node (F,) leaf-safe ids, do_scan (F,) bool, fnode', fD')."""
+    alive = fnode >= 0
+    node = jnp.maximum(fnode, 0)
+    D = jnp.where(alive, fD | di.bl[node], 0)
+    is_full = D == full
+    is_leaf = di.left[node] < 0
+    do_scan = alive & (is_full | is_leaf)
+
+    expand = alive & ~is_full & ~is_leaf
+    dsp = jnp.maximum(di.dim[node], 0)              # leaf-safe (masked)
+    covered = ((D >> dsp) & 1) == 1
+    qlod, qhid = qlo[dsp], qhi[dsp]
+
+    def child(pc):
+        csafe = jnp.maximum(pc, 0)
+        lc = di.lo[csafe, dsp]
+        rc = di.hi[csafe, dsp]
+        disjoint = (lc > qhid) | (rc < qlod)
+        contained = (lc >= qlod) & (rc <= qhid)
+        newD = jnp.where(contained, D | (1 << dsp), D)
+        valid = ~disjoint
+        newD = jnp.where(covered, D, newD)
+        valid = jnp.where(covered, True, valid)
+        return expand & valid, newD
+
+    cl, cr = di.left[node], di.right[node]
+    vl, Dl = child(cl)
+    vr, Dr = child(cr)
+    cand_node = jnp.stack([cl, cr], axis=1).reshape(2 * F)
+    cand_D = jnp.stack([Dl, Dr], axis=1).reshape(2 * F)
+    cand_valid = jnp.stack([vl, vr], axis=1).reshape(2 * F)
+    pos = jnp.cumsum(cand_valid) - cand_valid        # exclusive
+    slot = jnp.where(cand_valid, pos, F)             # F+: overflow clamp
+    fnode2 = jnp.full((F,), -1, jnp.int32).at[slot].set(cand_node,
+                                                        mode="drop")
+    fD2 = jnp.zeros((F,), jnp.int32).at[slot].set(cand_D, mode="drop")
+    return node, do_scan, fnode2, fD2
+
+
+def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p):
+    """Returns (entry-point object ids (c_e,), -1 padded, DFS order;
+    () int32 in-range cardinality bound — the full-antichain count sum,
+    module docstring). The DFS-rank key makes the two routers' entry
+    vectors agree."""
+    F = p.frontier_cap
+    _require_frontier(F)
     m = di.attrs.shape[1]
     full = (1 << m) - 1
     H = di.nbrs.shape[1]          # tree levels == path height (tree.py)
@@ -180,13 +254,10 @@ def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
     ents0 = jnp.full((p.c_e,), -1, jnp.int32)
 
     def level(_lvl, st):
-        fnode, fD, keys, ents = st
-        alive = fnode >= 0
-        node = jnp.maximum(fnode, 0)
-        D = jnp.where(alive, fD | di.bl[node], 0)
-        is_full = D == full
-        is_leaf = di.left[node] < 0
-        do_scan = alive & (is_full | is_leaf)
+        fnode, fD, keys, ents, card = st
+        node, do_scan, fnode, fD = _frontier_step(di, qlo, qhi, F, full,
+                                                  fnode, fD)
+        card = card + jnp.sum(jnp.where(do_scan, di.count[node], 0))
 
         # ---- batched entry scan: the whole level's windows in one gather
         s = di.start[node]                              # (F,)
@@ -205,40 +276,122 @@ def route_level_sync(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
         alle = jnp.concatenate([ents, e])
         srt = jnp.argsort(allk, stable=True)[: p.c_e]
         keys, ents = allk[srt], alle[srt]
+        return fnode, fD, keys, ents, card
 
-        # ---- children pushes for alive internal non-covered nodes
-        expand = alive & ~is_full & ~is_leaf
-        dsp = jnp.maximum(di.dim[node], 0)              # leaf-safe (masked)
-        covered = ((D >> dsp) & 1) == 1
-        qlod, qhid = qlo[dsp], qhi[dsp]
+    st = jax.lax.fori_loop(0, H, level,
+                           (fnode0, fD0, keys0, ents0, jnp.int32(0)))
+    return st[3], st[4]
 
-        def child(pc):
-            csafe = jnp.maximum(pc, 0)
-            lc = di.lo[csafe, dsp]
-            rc = di.hi[csafe, dsp]
-            disjoint = (lc > qhid) | (rc < qlod)
-            contained = (lc >= qlod) & (rc <= qhid)
-            newD = jnp.where(contained, D | (1 << dsp), D)
-            valid = ~disjoint
-            newD = jnp.where(covered, D, newD)
-            valid = jnp.where(covered, True, valid)
-            return expand & valid, newD
 
-        cl, cr = di.left[node], di.right[node]
-        vl, Dl = child(cl)
-        vr, Dr = child(cr)
-        cand_node = jnp.stack([cl, cr], axis=1).reshape(2 * F)
-        cand_D = jnp.stack([Dl, Dr], axis=1).reshape(2 * F)
-        cand_valid = jnp.stack([vl, vr], axis=1).reshape(2 * F)
-        pos = jnp.cumsum(cand_valid) - cand_valid        # exclusive
-        slot = jnp.where(cand_valid, pos, F)             # F+: overflow clamp
-        fnode = jnp.full((F,), -1, jnp.int32).at[slot].set(cand_node,
-                                                           mode="drop")
-        fD = jnp.zeros((F,), jnp.int32).at[slot].set(cand_D, mode="drop")
-        return fnode, fD, keys, ents
+def route_level_card(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
+    """Estimate-only sweep: the () int32 in-range cardinality bound of
+    ``route_level_sync`` without the entry scans — same traversal, same
+    ``frontier_cap`` contract, but no per-level ``(F, scan_budget)``
+    window gather, so the planner's plan pass costs a fraction of a full
+    route (DESIGN.md §10)."""
+    F = p.frontier_cap
+    _require_frontier(F)
+    m = di.attrs.shape[1]
+    full = (1 << m) - 1
+    H = di.nbrs.shape[1]
 
-    st = jax.lax.fori_loop(0, H, level, (fnode0, fD0, keys0, ents0))
-    return st[3]
+    fnode0 = jnp.full((F,), -1, jnp.int32).at[0].set(di.root)
+    fD0 = jnp.zeros((F,), jnp.int32).at[0].set(_root_D0(di, qlo, qhi, m))
+
+    def level(_lvl, st):
+        fnode, fD, card = st
+        node, do_scan, fnode, fD = _frontier_step(di, qlo, qhi, F, full,
+                                                  fnode, fD)
+        return fnode, fD, card + jnp.sum(jnp.where(do_scan,
+                                                   di.count[node], 0))
+
+    st = jax.lax.fori_loop(0, H, level, (fnode0, fD0, jnp.int32(0)))
+    return st[2]
+
+
+class HostCardEstimator:
+    """Vectorized host form of the routing cardinality bound — the
+    planner's plan-pass workhorse (DESIGN.md §10).
+
+    Same quantity as ``route_level_card`` and the python twin
+    ``query_ref.estimate_cardinality`` (three-way pinned by
+    tests/test_planner.py), computed **node-parallel** instead of
+    frontier-sequential. The rewrite rests on two path monotonicities of
+    the tree: BL masks only grow (``bl[child] ⊇ bl[parent]`` — asserted
+    by ``tree.validate``) and a dim's rectangle projection only shrinks,
+    so the traversal's incrementally-maintained D equals the closed form
+    ``D(p) = bl[p] | {i: proj_i(R(p)) ⊆ box_i}`` at every node. That
+    turns the sweep into dense (B, P) numpy passes — D / stop / edge
+    masks for all nodes at once, then one level-ordered reachability
+    propagation (each node touched exactly once) — with none of the
+    per-level gather/scatter traffic that makes the device frontier form
+    expensive off-TPU. The plan decision is host-side even in TPU
+    serving, so this is the form ``engine.Planner`` dispatches on.
+
+    Built once per index/shard from host copies of the flattened tree;
+    ``cards((B, m) qlo, (B, m) qhi) -> (B,) int64``.
+    """
+
+    def __init__(self, left, right, dim, bl, lo, hi, count, root: int):
+        P, m = lo.shape
+        self.m = int(m)
+        self.full = (1 << m) - 1
+        self.bl = bl.astype(np.int64)
+        self.lo, self.hi = lo, hi
+        self.count = count.astype(np.int64)
+        self.is_leaf = left < 0
+        self.root = int(root)
+        # parent pointers + levels via one host BFS (DeviceIndex drops
+        # the tree's parent array; rebuilding it is O(P))
+        parent = np.full(P, -1, np.int64)
+        for child in (left, right):
+            src = np.nonzero(child >= 0)[0]
+            parent[child[src]] = src
+        self.parent = parent
+        level = np.full(P, -1, np.int64)
+        level[self.root] = 0
+        frontier = np.asarray([self.root])
+        levels = [frontier]
+        while True:
+            children = np.concatenate([left[frontier], right[frontier]])
+            frontier = children[children >= 0]
+            if not frontier.size:
+                break
+            level[frontier] = len(levels)
+            levels.append(frontier)
+        self.levels = levels
+        # static per-node edge data: the parent's split dim and this
+        # node's rectangle bounds on it (what the push's disjoint check
+        # reads)
+        ps = np.where(parent >= 0, dim[np.maximum(parent, 0)], 0)
+        self.ps = ps.astype(np.int64)
+        self.plo = lo[np.arange(P), ps]
+        self.phi = hi[np.arange(P), ps]
+
+    def cards(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
+        B = qlo.shape[0]
+        P = self.parent.shape[0]
+        pa = np.maximum(self.parent, 0)
+        # closed-form D for every node at once (class docstring)
+        D = np.broadcast_to(self.bl, (B, P)).copy()
+        for i in range(self.m):
+            D |= ((self.lo[:, i] >= qlo[:, i, None])
+                  & (self.hi[:, i] <= qhi[:, i, None])).astype(np.int64) << i
+        stop = (D == self.full) | self.is_leaf
+        # edge survival: pushed unless the parent's split dim is
+        # uncovered AND this node's projection on it misses the box
+        disjoint = ((self.plo > qhi[:, self.ps])
+                    | (self.phi < qlo[:, self.ps]))
+        edge_ok = (((D[np.arange(B)[:, None], pa] >> self.ps) & 1) > 0) \
+            | ~disjoint
+        # level-ordered reachability: each node reads its parent once
+        reached = np.zeros((B, P), bool)
+        reached[:, self.root] = True
+        for nl in self.levels[1:]:
+            pl = self.parent[nl]
+            reached[:, nl] = (reached[:, pl] & ~stop[:, pl]
+                              & edge_ok[:, nl])
+        return (stop & reached) @ self.count
 
 
 def required_frontier_cap(di) -> int:
@@ -265,7 +418,8 @@ def required_frontier_cap(di) -> int:
 
 
 def resolve_router(name: str) -> Callable:
-    """Router name -> route(di, qlo, qhi, p) (the Phase-A contract)."""
+    """Router name -> route(di, qlo, qhi, p) -> (entries, card)
+    (the Phase-A contract)."""
     if name == "level":
         return route_level_sync
     if name == "dfs":

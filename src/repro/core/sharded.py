@@ -20,6 +20,14 @@ Every engine-side knob — the wide-frontier ``expand_width``, the scoring
 (level-sync sweep or legacy DFS) — rides in ``SearchParams`` unchanged:
 each shard runs the same two-phase ``_query_one`` program the
 single-device engine runs.
+
+Strategy dispatch (``SearchParams.strategy``, DESIGN.md §10) is a
+host-side concern: ``search_sharded_emulated`` routes non-"graph"
+strategies through an ``engine.Planner`` (which fans the brute scan out
+per shard and merges, and sums the per-shard routing bounds for "auto"),
+while ``make_sharded_search_fn`` — the collective shard_map program —
+lowers the graph path only and rejects other strategies (the dispatch
+decision happens before the collective, in the serving layer).
 """
 
 from __future__ import annotations
@@ -128,6 +136,13 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
     Pass the target ``skhi`` to validate the index-dependent buffer bounds
     (scan_budget/stack_cap) up front — see ``engine.validate_search_params``.
     (Dry-run callers lower against ShapeDtypeStructs and skip it.)"""
+    if params.strategy != "graph":
+        raise ValueError(
+            f"make_sharded_search_fn lowers the collective graph program "
+            f"only; strategy={params.strategy!r} dispatches per query on "
+            f"the host, before the shard_map — use engine.Planner / "
+            f"search_sharded_emulated / KHIService (mesh-less), or force "
+            f"strategy='graph' for the collective form (DESIGN.md §10).")
     if skhi is not None:
         params = validate_search_params(params, skhi.di,
                                         on_undersized=on_undersized)
@@ -161,7 +176,20 @@ def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
                             on_undersized: str = "adjust"):
     """Single-device semantic equivalent of the shard_map program (vmap over
     the shard axis instead of devices) — used by tests on this 1-CPU box.
-    Index-dependent buffer bounds are auto-raised by default."""
+    Index-dependent buffer bounds are auto-raised by default.
+
+    ``params.strategy != "graph"`` delegates to an ``engine.Planner``
+    (DESIGN.md §10); on that path ``hops`` comes back per query (B,) —
+    max over shards for graph lanes, 0 for scan lanes — instead of the
+    graph-only (S, B) per-shard array."""
+    if params.strategy != "graph":
+        from .engine import Planner
+        planner = Planner(skhi, params, dist_fn=dist_fn,
+                          on_undersized=on_undersized)
+        ids, dists, hops, _ = planner.search(np.asarray(queries),
+                                             np.asarray(qlo),
+                                             np.asarray(qhi))
+        return ids, dists, hops
     params = validate_search_params(params, skhi.di,
                                     on_undersized=on_undersized)
     scorer = resolve_scorer(params.backend, dist_fn=dist_fn)

@@ -1,4 +1,5 @@
-"""Fused gather + squared-L2 Pallas kernels (scalar-prefetch DMA gather).
+"""Fused gather + squared-L2 Pallas kernels (scalar-prefetch DMA gather —
+DESIGN.md §5, blocked tiling contract §8).
 
 The KHI engine's expansion step gathers candidate rows ``corpus[idx]`` from
 HBM and immediately reduces them against the query — on TPU the idiomatic

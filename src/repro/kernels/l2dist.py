@@ -1,4 +1,4 @@
-"""Blocked squared-L2 distance Pallas TPU kernels.
+"""Blocked squared-L2 distance Pallas TPU kernels (DESIGN.md §5).
 
 The paper's query hot spot is distance evaluation between query vectors and
 candidate vectors (d = 384..1024 on its datasets). On TPU we phrase both bulk

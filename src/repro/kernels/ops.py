@@ -17,8 +17,9 @@ from . import gather_l2 as _gather
 from . import gather_l2_filter as _gather_filter
 from . import l2dist as _l2
 from . import ref as _ref
+from . import scan_topk as _scan
 
-__all__ = ["l2dist", "gather_l2", "gather_l2_filtered",
+__all__ = ["l2dist", "gather_l2", "gather_l2_filtered", "scan_topk",
            "use_pallas_default"]
 
 
@@ -112,6 +113,26 @@ def gather_l2_filtered(idx: jax.Array, corpus: jax.Array, attrs: jax.Array,
     oracle is ``gather_l2_filter_ref``."""
     return _gather_l2_filtered(idx, corpus, attrs, q, qlo, qhi,
                                _auto_interpret(interpret), c_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "n_blk"))
+def _scan_topk(corpus, attrs, q, qlo, qhi, k: int, interpret: bool,
+               n_blk: int):
+    return _scan.scan_topk_raw(corpus, attrs, q, qlo, qhi, k=k, n_blk=n_blk,
+                               interpret=interpret)
+
+
+def scan_topk(corpus: jax.Array, attrs: jax.Array, q: jax.Array,
+              qlo: jax.Array, qhi: jax.Array, *, k: int,
+              interpret: Optional[bool] = None, n_blk: int = 512):
+    """Predicate-fused brute-scan top-k: corpus (N, d) / attrs (N, m)
+    against q (B, d) with boxes qlo/qhi (B, m) -> (ids (B, k) int32,
+    dists (B, k) f32), exact masked top-k ascending, (-1, +inf) past the
+    in-range count. Ids are bit-identical to the jnp oracle
+    ``scan_topk_ref`` (dists up to f32 reduce order — DESIGN.md §10);
+    this is the planner's ``strategy="scan"`` execution path."""
+    return _scan_topk(corpus, attrs, q, qlo, qhi, k,
+                      _auto_interpret(interpret), n_blk)
 
 
 # re-export oracles for convenience

@@ -2,10 +2,11 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 __all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref",
-           "gather_l2_filter_ref"]
+           "gather_l2_filter_ref", "scan_topk_ref"]
 
 
 def l2dist_qn_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -45,3 +46,31 @@ def gather_l2_filter_ref(idx: jnp.ndarray, corpus: jnp.ndarray,
     a = attrs[safe].astype(jnp.float32)                  # (B, C, m)
     ok = jnp.all((a >= qlo[:, None, :]) & (a <= qhi[:, None, :]), axis=-1)
     return jnp.where(ok & (idx >= 0), dist, jnp.inf)
+
+
+def scan_topk_ref(corpus: jnp.ndarray, attrs: jnp.ndarray, q: jnp.ndarray,
+                  qlo: jnp.ndarray, qhi: jnp.ndarray,
+                  k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact predicate-masked brute-scan top-k — the jnp oracle for
+    ``kernels.scan_topk`` (DESIGN.md §10) and the engine's
+    ``backend="jnp"`` scan strategy.
+
+    corpus (N, d), attrs (N, m) f32, q (B, d), qlo/qhi (B, m) f32 ->
+    (ids (B, k) int32, dists (B, k) f32): per query, the k in-range rows
+    with the smallest squared L2, ascending, distance ties broken by
+    lowest row id (``lax.top_k`` semantics). Rows whose attribute tuple
+    fails ``all(qlo <= a <= qhi)`` — including NaN attrs, the planner's
+    structural-padding mask — never appear; when fewer than k rows are
+    in range the tail lanes are (-1, +inf).
+    """
+    diff = corpus[None, :, :].astype(jnp.float32) - q[:, None, :].astype(
+        jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)                 # (B, N)
+    a = attrs.astype(jnp.float32)
+    ok = jnp.all((a[None] >= qlo[:, None, :]) & (a[None] <= qhi[:, None, :]),
+                 axis=-1)                                # (B, N); NaN -> False
+    masked = jnp.where(ok, dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-masked, k)
+    dists = -neg
+    ids = jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)
+    return ids, dists

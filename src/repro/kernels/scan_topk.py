@@ -1,0 +1,133 @@
+"""Predicate-fused brute-scan + streaming top-k Pallas kernel (DESIGN.md §10).
+
+The planner's ``strategy="scan"`` path answers a query *exactly*: one pass
+over the full corpus (or shard), masked squared L2 against the range
+predicate, smallest-k survivors. Where the graph engine's kernels gather
+*candidate* rows through a scalar-prefetched id stream
+(``kernels.gather_l2_filter``), the scan visits **every** row — so the id
+stream disappears and the corpus streams through VMEM block-sequentially
+(grid ``(B, N/N_BLK)``, corpus/attrs blocks auto-pipelined by the
+BlockSpec index_map), which is the shape HBM bandwidth likes best.
+
+Per grid step the kernel
+
+  1. reduces the ``(N_BLK, d)`` corpus tile against the query row —
+     ``sum((q - row)^2)`` with the same per-row f32 reduction shape as
+     the gather kernels (bitwise-equal distances on the same rows);
+  2. evaluates ``all(qlo <= a <= qhi)`` on the ``(N_BLK, m)`` attrs tile
+     in-kernel, exactly like ``gather_l2_filter`` — out-of-range lanes
+     become +inf (NaN attrs — the caller's structural-padding mask —
+     always fail the predicate);
+  3. folds the tile into a **streaming top-k** carried in the revisited
+     ``(1, k)`` output blocks: k argmin-extraction steps over the
+     concatenated [running top-k | tile] distances. Extraction order is
+     (distance, stream position) — and because blocks arrive in
+     ascending row order and the running buffer keeps its entries
+     (dist, id)-sorted, stream position IS row id order, so ties break
+     to the lowest id: exactly ``lax.top_k`` semantics. Empty lanes are
+     (-1, +inf).
+
+The jnp oracle is ``kernels.ref.scan_topk_ref``; tests pin **bit
+equality of the returned ids** against it — including all-out-of-range
+and k > in-range-count workloads — plus the exact +inf empty-lane
+pattern. Distances agree up to f32 reduce-order association (the
+kernel reduces per ``(n_blk, d)`` tile, the oracle over the full
+tensor; XLA may associate the two row sums differently by 1 ulp).
+``c_blk``-style tiling notes: rows pad to an ``n_blk`` multiple with
+NaN attrs (padded lanes can never win), distances accumulate in f32
+(bf16 corpora supported, attrs stay f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scan_topk_kernel", "scan_topk_raw"]
+
+
+def scan_topk_kernel(corpus_ref, attrs_ref, q_ref, qlo_ref, qhi_ref,
+                     ids_ref, dists_ref):
+    """Grid (B, N/N_BLK): step (i, j) scores corpus rows
+    [j*N_BLK, (j+1)*N_BLK) against query i and merges them into the
+    running (1, k) top-k carried in the revisited output blocks."""
+    j = pl.program_id(1)
+    n_blk = corpus_ref.shape[0]
+    k = ids_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        ids_ref[...] = jnp.full(ids_ref.shape, -1, jnp.int32)
+        dists_ref[...] = jnp.full(dists_ref.shape, jnp.inf, jnp.float32)
+
+    d = q_ref[...].astype(jnp.float32) - corpus_ref[...].astype(jnp.float32)
+    dist = jnp.sum(d * d, axis=-1)                       # (n_blk,)
+    a = attrs_ref[...].astype(jnp.float32)               # (n_blk, m)
+    ok = jnp.all((a >= qlo_ref[...]) & (a <= qhi_ref[...]), axis=-1)
+    rows = j * n_blk + jax.lax.broadcasted_iota(jnp.int32, (1, n_blk), 1)
+
+    cand_d = jnp.concatenate(
+        [dists_ref[...], jnp.where(ok, dist, jnp.inf)[None, :]], axis=1)
+    cand_i = jnp.concatenate([ids_ref[...], rows], axis=1)
+
+    def take(t, carry):
+        cd, ci, od, oi = carry
+        pos = jnp.argmin(cd, axis=1)[0]      # first min: lowest-id tie-break
+        dmin = cd[0, pos]
+        od = od.at[0, t].set(dmin)
+        oi = oi.at[0, t].set(jnp.where(jnp.isinf(dmin), -1, ci[0, pos]))
+        cd = cd.at[0, pos].set(jnp.inf)
+        return cd, ci, od, oi
+
+    _, _, od, oi = jax.lax.fori_loop(
+        0, k, take, (cand_d, cand_i, dists_ref[...], ids_ref[...]))
+    dists_ref[...] = od
+    ids_ref[...] = oi
+
+
+def scan_topk_raw(corpus: jax.Array, attrs: jax.Array, q: jax.Array,
+                  qlo: jax.Array, qhi: jax.Array, *, k: int,
+                  n_blk: int = 512,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """corpus (N, d), attrs (N, m) f32, q (B, d), qlo/qhi (B, m) f32 ->
+    (ids (B, k) int32, dists (B, k) f32), exact masked top-k ascending.
+
+    Tiling contract: rows pad to an ``n_blk`` multiple — corpus with
+    zeros, attrs with NaN, so padded lanes fail the predicate and can
+    never enter the top-k (the module docstring's mask convention; the
+    planner uses the same NaN trick for structurally padded index rows).
+    Output lanes past the in-range count are (-1, +inf)."""
+    B = q.shape[0]
+    N, D = corpus.shape
+    M = attrs.shape[1]
+    if not 1 <= k <= N:
+        raise ValueError(f"k must be in [1, N={N}], got {k}")
+    n_blk = min(n_blk, N)
+    pad = (-N) % n_blk
+    if pad:
+        corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
+        attrs = jnp.pad(attrs, ((0, pad), (0, 0)),
+                        constant_values=jnp.nan)
+    n_blocks = (N + pad) // n_blk
+    ids, dists = pl.pallas_call(
+        scan_topk_kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((n_blk, D), lambda i, j: (j, 0)),   # corpus tile
+            pl.BlockSpec((n_blk, M), lambda i, j: (j, 0)),   # attrs tile
+            pl.BlockSpec((1, D), lambda i, j: (i, 0)),       # query row
+            pl.BlockSpec((1, M), lambda i, j: (i, 0)),       # qlo row
+            pl.BlockSpec((1, M), lambda i, j: (i, 0)),       # qhi row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running ids
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running dists
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(corpus, attrs, q, qlo, qhi)
+    return ids, dists

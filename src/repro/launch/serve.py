@@ -5,7 +5,10 @@
 with a stream of mixed-size request bursts — the serving workload, not just
 a fixed-batch loop. ``--shards S`` serves a sharded corpus, ``--backend``
 picks the scoring backend (``pallas_gather_l2_filter`` = the
-predicate-fused kernel), ``--router`` the Phase-A tree router;
+predicate-fused kernel), ``--router`` the Phase-A tree router,
+``--strategy`` the execution strategy (``auto`` = per-query planner
+dispatch between graph search and the exact brute scan, DESIGN.md §10;
+``--scan-threshold`` overrides the derived dispatch threshold);
 ``--mode generate`` runs prefill+decode on a smoke LM.
 """
 
@@ -39,7 +42,9 @@ def serve_khi(args):
     params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16,
                           backend=args.backend,
                           expand_width=args.expand_width,
-                          router=args.router)
+                          router=args.router,
+                          strategy=args.strategy,
+                          scan_threshold=args.scan_threshold)
     buckets = tuple(sorted({1, 8, args.batch}))
     svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
 
@@ -62,8 +67,8 @@ def serve_khi(args):
           f"({len(results)/dt:.0f} QPS end-to-end; "
           f"device {snap['device_qps'] and round(snap['device_qps'])} QPS)")
     print(f"[serve] backend={args.backend} E={args.expand_width} "
-          f"router={args.router} "
-          f"batches={snap['batches']} "
+          f"router={args.router} strategy={args.strategy} "
+          f"batches={snap['batches']} scan_lanes={snap['scan_lanes']} "
           f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
           f"buckets={snap['traced_buckets']}")
 
@@ -113,6 +118,15 @@ def main(argv=None):
                     help="frontier width E: pool entries expanded per hop")
     ap.add_argument("--router", default="level", choices=list(ROUTERS),
                     help="Phase-A tree router (level = batched sweep)")
+    from repro.core.engine import STRATEGIES
+
+    ap.add_argument("--strategy", default="auto", choices=list(STRATEGIES),
+                    help="execution strategy: graph | scan (exact brute "
+                         "scan) | auto (per-query planner dispatch — the "
+                         "serving default, as in configs/khi_serve.py)")
+    ap.add_argument("--scan-threshold", type=int, default=0,
+                    help="auto-dispatch threshold in in-range objects "
+                         "(0 = derive DEFAULT_SCAN_FRAC of the corpus)")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "khi":

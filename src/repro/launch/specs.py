@@ -273,6 +273,10 @@ def _build_khi_lowering(cell: str, mesh, sizes, rules, variant: str = ""):
         batch=batch,
         vec_dtype=jnp.bfloat16 if variant == "bf16vec" else None)
     hops = 64 if variant == "hops64" else kc.ef
+    # strategy stays "graph" here: the dry-run lowers the collective
+    # shard_map program, and the khi-serve cell's "auto" planner
+    # dispatches per query on the host BEFORE the collective — the graph
+    # program is the cell's worst-case device cost (DESIGN.md §10)
     params = SearchParams(k=kc.k, ef=kc.ef, c_e=kc.c_e, c_n=kc.c_n,
                           max_hops=hops, expand_width=kc.expand_width,
                           router=kc.router, frontier_cap=kc.frontier_cap)

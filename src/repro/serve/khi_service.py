@@ -32,8 +32,20 @@ the Phase-A ``router`` (level-sync sweep by default) and the
 wide-frontier width (``SearchParams.expand_width``, DESIGN.md §8): E > 1
 cuts the lockstep hop count of every micro-batch ~E-fold, which is worth
 the most exactly here, where a bucket pads heterogeneous requests into one
-vmapped program that runs to the slowest lane. Both knobs are part of the
+vmapped program that runs to the slowest lane. All knobs are part of the
 result-cache key (the key hashes ``repr(params)``).
+
+``SearchParams.strategy`` selects the execution strategy (DESIGN.md §10):
+``"auto"`` — the khi-serve production default — routes every micro-batch
+through an ``engine.Planner`` that estimates each lane's in-range
+cardinality from the routing sweep and dispatches it to the graph engine
+or the exact brute-scan kernel; low-selectivity lanes get exact recall,
+high-selectivity lanes keep graph QPS. Bucket pad lanes carry an empty
+range, whose cardinality bound is 0 — the planner sends them to the
+graph program, which exits immediately (a scan lane would pay a full
+corpus pass). ``snapshot()["scan_lanes"]`` counts scan-dispatched lanes.
+The planner is host-side; with a ``mesh=`` (collective shard_map fan-out)
+only ``strategy="graph"`` is supported.
 """
 
 from __future__ import annotations
@@ -49,7 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import (DeviceIndex, SearchParams, _query_one,
+from ..core.engine import (DeviceIndex, Planner, SearchParams, _query_one,
                            device_put_index, resolve_scorer,
                            validate_search_params)
 from ..core.khi import KHIIndex
@@ -119,7 +131,7 @@ class KHIService:
         self.stats = {
             "requests": 0, "cache_hits": 0, "batches": 0, "pad_lanes": 0,
             "device_queries": 0, "traced_buckets": set(),
-            "device_seconds": 0.0, "epoch_swaps": 0,
+            "device_seconds": 0.0, "epoch_swaps": 0, "scan_lanes": 0,
         }
         self._install_index(index)
 
@@ -130,6 +142,13 @@ class KHIService:
             index = device_put_index(index)
         self._sharded = isinstance(index, ShardedKHI)
         di = index.di if self._sharded else index
+        if self._mesh is not None and self._user_params.strategy != "graph":
+            raise ValueError(
+                f"strategy={self._user_params.strategy!r} with mesh=: the "
+                f"planner dispatches per query on the host, before the "
+                f"collective shard_map fan-out — serve without a mesh "
+                f"(vmap fan-out) or force strategy='graph' (DESIGN.md "
+                f"§10).")
         self.params = validate_search_params(
             self._user_params, di, on_undersized=self._on_undersized)
         self._scorer = resolve_scorer(self.params.backend,
@@ -173,6 +192,20 @@ class KHIService:
 
     def _build_search_fn(self):
         p, scorer = self.params, self._scorer
+        if p.strategy != "graph":
+            # planner-backed path (DESIGN.md §10): per-lane dispatch to the
+            # graph engine or the exact brute scan, single or sharded —
+            # params are already validated, the planner re-checks cheaply
+            planner = Planner(self.index, p, dist_fn=self._legacy_dist_fn,
+                              on_undersized=self._on_undersized)
+
+            def run(q, lo, hi):
+                ids, dists, _hops, plan = planner.search(
+                    np.asarray(q), np.asarray(lo), np.asarray(hi))
+                self.stats["scan_lanes"] += int(plan.use_scan.sum())
+                return ids, dists
+
+            return run
         if not self._sharded:
             @jax.jit
             def single(di: DeviceIndex, q, qlo, qhi):

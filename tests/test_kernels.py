@@ -312,3 +312,132 @@ def test_qc_consistent_with_qn():
     cc = jnp.broadcast_to(c[None], (4, 32, 96))
     qc = np.asarray(ops.l2dist(q, cc, interpret=True))
     np.testing.assert_allclose(qn, qc, rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------------------------ scan_topk
+# The brute-scan kernel's contract is BIT equality of the returned ids
+# with the jnp oracle (the planner's strategy="scan" promises exact
+# results, and the selectivity bench gates on id identity — DESIGN.md
+# §10); distances agree up to f32 reduce-order association (the inf
+# pattern — which lanes are empty — is exact).
+
+def _assert_scan_equal(got, want):
+    """ids bit-identical (the exactness contract); dists equal up to f32
+    reduce-order (1-ulp association differences between the kernel's
+    per-block row reduce and the oracle's full-tensor reduce), with the
+    +inf (empty-lane) pattern exact."""
+    gi, gd = (np.asarray(x) for x in got)
+    wi, wd = (np.asarray(x) for x in want)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(np.isinf(gd), np.isinf(wd))
+    fin = np.isfinite(wd)
+    np.testing.assert_allclose(gd[fin], wd[fin], rtol=1e-5, atol=1e-5)
+
+
+def _scan_workload(B, N, D, M, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    corpus = jnp.asarray(rng.standard_normal((N, D)), dtype=dtype)
+    attrs = jnp.asarray(rng.uniform(0, 10, (N, M)), dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), dtype=jnp.float32)
+    qlo = jnp.asarray(rng.uniform(0, 6, (B, M)), dtype=jnp.float32)
+    qhi = qlo + jnp.asarray(rng.uniform(0, 5, (B, M)), dtype=jnp.float32)
+    return corpus, attrs, q, qlo, qhi
+
+
+@pytest.mark.parametrize("B,N,D,M,k,n_blk", [
+    (1, 16, 8, 1, 4, 16),          # single block
+    (4, 300, 24, 3, 10, 64),       # multi-block, ragged tail
+    (3, 129, 17, 4, 10, 128),      # N barely over one block
+    (2, 64, 32, 2, 64, 16),        # k == N: every in-range row returned
+])
+def test_scan_topk_bitwise_vs_oracle(B, N, D, M, k, n_blk):
+    from repro.kernels.ref import scan_topk_ref
+    from repro.kernels.scan_topk import scan_topk_raw
+
+    corpus, attrs, q, qlo, qhi = _scan_workload(B, N, D, M, seed=B + N + k)
+    got = scan_topk_raw(corpus, attrs, q, qlo, qhi, k=k, n_blk=n_blk,
+                        interpret=True)
+    _assert_scan_equal(got, scan_topk_ref(corpus, attrs, q, qlo, qhi, k))
+
+
+def test_scan_topk_all_out_of_range():
+    """A box no attribute tuple satisfies: every lane must be (-1, +inf),
+    bit-identical to the oracle."""
+    from repro.kernels.ref import scan_topk_ref
+    from repro.kernels.scan_topk import scan_topk_raw
+
+    corpus, attrs, q, _, _ = _scan_workload(3, 90, 16, 3, seed=1)
+    qlo = jnp.full((3, 3), 100.0, jnp.float32)
+    qhi = jnp.full((3, 3), 200.0, jnp.float32)
+    ids, dists = scan_topk_raw(corpus, attrs, q, qlo, qhi, k=8, n_blk=32,
+                               interpret=True)
+    _assert_scan_equal((ids, dists), scan_topk_ref(corpus, attrs, q, qlo, qhi, 8))
+    assert (np.asarray(ids) == -1).all()
+    assert np.isinf(np.asarray(dists)).all()
+
+
+def test_scan_topk_k_exceeds_in_range_count():
+    """k larger than the number of in-range rows: the tail is (-1, +inf)
+    and the finite prefix is the full in-range set, ascending."""
+    from repro.kernels.ref import scan_topk_ref
+    from repro.kernels.scan_topk import scan_topk_raw
+
+    corpus, attrs, q, _, _ = _scan_workload(2, 120, 12, 3, seed=2)
+    # pin the box to a handful of rows: row 5's tuple +- epsilon
+    a5 = np.asarray(attrs)[5]
+    qlo = jnp.asarray(np.tile(a5 - 1e-3, (2, 1)), dtype=jnp.float32)
+    qhi = jnp.asarray(np.tile(a5 + 1e-3, (2, 1)), dtype=jnp.float32)
+    k = 10
+    ids, dists = scan_topk_raw(corpus, attrs, q, qlo, qhi, k=k, n_blk=64,
+                               interpret=True)
+    _assert_scan_equal((ids, dists), scan_topk_ref(corpus, attrs, q, qlo, qhi, k))
+    got = np.asarray(ids)
+    n_in = int((got[0] >= 0).sum())
+    assert 1 <= n_in < k                       # edge case actually exercised
+    assert (got[:, n_in:] == -1).all()
+    d0 = np.asarray(dists)[0, :n_in]
+    assert (np.diff(d0) >= 0).all()
+
+
+def test_scan_topk_nan_attrs_never_match():
+    """NaN attribute rows (the planner's structural-padding mask) must be
+    excluded even by fully unconstrained +-inf boxes."""
+    from repro.kernels.ref import scan_topk_ref
+    from repro.kernels.scan_topk import scan_topk_raw
+
+    corpus, attrs, q, _, _ = _scan_workload(2, 70, 8, 2, seed=3)
+    attrs = np.array(attrs)
+    attrs[50:] = np.nan
+    attrs = jnp.asarray(attrs)
+    qlo = jnp.full((2, 2), -np.inf, jnp.float32)
+    qhi = jnp.full((2, 2), np.inf, jnp.float32)
+    ids, dists = scan_topk_raw(corpus, attrs, q, qlo, qhi, k=60, n_blk=32,
+                               interpret=True)
+    _assert_scan_equal((ids, dists), scan_topk_ref(corpus, attrs, q, qlo, qhi, 60))
+    got = np.asarray(ids)
+    assert (got < 50).all()                    # NaN rows never appear
+    assert ((got >= 0).sum(axis=1) == 50).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 4), N=st.integers(2, 120), D=st.integers(1, 48),
+       M=st.integers(1, 4), k=st.integers(1, 16), n_blk=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_scan_topk_property(B, N, D, M, k, n_blk, seed):
+    """Random shapes/blocks, duplicate rows mixed in (distance ties must
+    break to the lowest id, exactly like lax.top_k)."""
+    from repro.kernels.ref import scan_topk_ref
+    from repro.kernels.scan_topk import scan_topk_raw
+
+    k = min(k, N)
+    rng = np.random.default_rng(seed)
+    corpus = rng.standard_normal((N, D)).astype(np.float32)
+    attrs = rng.uniform(0, 4, (N, M)).astype(np.float32)
+    corpus[N // 2] = corpus[0]                 # guaranteed distance tie
+    attrs[N // 2] = attrs[0]
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    qlo = rng.uniform(0, 3, (B, M)).astype(np.float32)
+    qhi = qlo + rng.uniform(0, 3, (B, M)).astype(np.float32)
+    args = tuple(jnp.asarray(x) for x in (corpus, attrs, q, qlo, qhi))
+    _assert_scan_equal(scan_topk_raw(*args, k=k, n_blk=n_blk, interpret=True),
+                       scan_topk_ref(*args, k))

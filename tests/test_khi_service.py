@@ -195,6 +195,9 @@ def test_khi_serve_config_helpers():
         p = cfg.search_params()
         assert (p.k, p.ef, p.c_e, p.c_n) == (cfg.k, cfg.ef, cfg.c_e, cfg.c_n)
         assert p.backend == cfg.backend
+        assert (p.strategy, p.scan_threshold) == (cfg.strategy,
+                                                  cfg.scan_threshold)
+        assert p.strategy == "auto"    # the §10 serving default
         sc = cfg.serve_config()
         assert sc.buckets == cfg.buckets
         assert sc.cache_size == cfg.cache_size

@@ -1,0 +1,357 @@
+"""Selectivity-adaptive planner (DESIGN.md §10): the routing-sweep
+cardinality bound (device vs numpy twin vs exact oracle), the exact scan
+strategy (jnp oracle == Pallas kernel == brute force), per-query "auto"
+dispatch pinned against forced-strategy runs — including a mixed batch
+where the two strategies disagree on route but agree on ids — and the
+validate_search_params strategy rejections (satellite contract)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core import query_ref as qr
+from repro.core.khi import KHIConfig
+from repro.data import make_queries
+
+K, EF, CN = 10, 32, 16
+
+
+def _boxes(preds):
+    return (np.stack([p.lo for p in preds]).astype(np.float32),
+            np.stack([p.hi for p in preds]).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def planner_auto(tiny_index):
+    return eng.Planner(tiny_index,
+                       eng.SearchParams(k=K, ef=EF, c_n=CN, strategy="auto"))
+
+
+# ------------------------------------------------------ cardinality bound
+
+def test_card_bound_device_vs_twin_vs_exact(tiny_index, tiny_queries,
+                                            planner_auto):
+    """The routing bound agrees three ways — device frontier sweep
+    (route_level_card), node-parallel host estimator (what the planner
+    dispatches on), python twin — and upper-bounds the true |O_B| on
+    every tier-1 predicate (it may only overcount on leaves / BL-covered
+    nodes — core/router.py)."""
+    from repro.core.router import route_level_card
+    import jax.numpy as jnp2
+    _, preds = tiny_queries
+    qlo, qhi = _boxes(preds)
+    card_host = planner_auto.plan(qlo, qhi).card
+    di = eng.device_put_index(tiny_index)
+    p = eng.derive_search_params(eng.SearchParams(k=K, ef=EF, c_n=CN), di)
+    for i, pr in enumerate(preds):
+        twin = qr.estimate_cardinality(tiny_index, pr)
+        exact = qr.estimate_cardinality(tiny_index, pr, exact=True)
+        dev = int(route_level_card(di, jnp2.asarray(pr.lo),
+                                   jnp2.asarray(pr.hi), p))
+        assert card_host[i] == twin == dev, (i, card_host[i], twin, dev)
+        assert card_host[i] >= exact, (i, card_host[i], exact)
+
+
+def test_card_bound_plan_cache(tiny_index, tiny_queries, planner_auto):
+    """Repeated boxes hit the plan cache and return identical cards."""
+    _, preds = tiny_queries
+    qlo, qhi = _boxes(preds)
+    first = planner_auto.plan(qlo, qhi).card
+    filled = len(planner_auto._plan_cache)
+    assert filled >= len({q.tobytes() for q in qlo})
+    again = planner_auto.plan(qlo, qhi).card
+    np.testing.assert_array_equal(first, again)
+    assert len(planner_auto._plan_cache) == filled
+
+
+def test_card_bound_zero_on_empty_and_disjoint(tiny_index, planner_auto):
+    """Provably-empty boxes (pad-lane encoding lo > hi, out-of-domain
+    windows) get card 0 — and the planner must NOT scan them."""
+    m = tiny_index.m
+    qlo = np.stack([np.full(m, np.inf, np.float32),
+                    np.full(m, 1e9, np.float32)])
+    qhi = np.stack([np.full(m, -np.inf, np.float32),
+                    np.full(m, 2e9, np.float32)])
+    plan = planner_auto.plan(qlo, qhi)
+    assert (plan.card == 0).all()
+    assert not plan.use_scan.any()
+
+
+def test_card_bound_sharded_sums_shards(tiny_data, tiny_queries):
+    """A sharded index's bound is the per-shard sum — still >= exact, and
+    equal to the sum of per-shard twins."""
+    from repro.core.sharded import build_sharded
+    vecs, attrs = tiny_data
+    skhi = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="device"))
+    planner = eng.Planner(skhi, eng.SearchParams(k=K, ef=EF, c_n=CN,
+                                                 strategy="auto"))
+    _, preds = tiny_queries
+    qlo, qhi = _boxes(preds[:8])
+    card = planner.plan(qlo, qhi).card
+    for i, pr in enumerate(preds[:8]):
+        exact = int(pr.matches(attrs).sum())
+        assert card[i] >= exact
+
+
+# ---------------------------------------------------------- scan strategy
+
+def test_scan_strategy_is_exact(tiny_index, tiny_queries, tiny_data):
+    """strategy="scan" == exact brute force on every query (hops == 0):
+    ids bit-identical to the jnp scan oracle, id sets == brute_force."""
+    vecs, attrs = tiny_data
+    Q, preds = tiny_queries
+    ids, dists, hops = eng.search_batch(
+        tiny_index, Q, preds, eng.SearchParams(k=K, ef=EF, c_n=CN,
+                                               strategy="scan"))
+    assert (hops == 0).all()
+    qlo, qhi = _boxes(preds)
+    from repro.kernels.ref import scan_topk_ref
+    ids_o, _ = scan_topk_ref(jnp.asarray(vecs), jnp.asarray(attrs),
+                             jnp.asarray(Q), jnp.asarray(qlo),
+                             jnp.asarray(qhi), K)
+    np.testing.assert_array_equal(ids, np.asarray(ids_o))
+    for i, pr in enumerate(preds):
+        gt = qr.brute_force(vecs, attrs, Q[i], pr, K)
+        got = [x for x in ids[i].tolist() if x >= 0]
+        assert set(got) == set(gt.tolist()), i
+
+
+def test_scan_kernel_backend_matches_jnp_backend(tiny_index, tiny_queries):
+    """The Pallas scan kernel (backend="pallas_gather_l2_filter") returns
+    the same ids as the jnp mask oracle (backend="jnp") — the scan
+    counterpart of the engine's cross-backend id-equality pins."""
+    Q, preds = tiny_queries
+    Q, preds = Q[:8], preds[:8]        # interpreter scans are slow
+    base = dict(k=K, ef=EF, c_n=CN, strategy="scan")
+    ids_j, d_j, _ = eng.search_batch(tiny_index, Q, preds,
+                                     eng.SearchParams(**base))
+    ids_k, d_k, _ = eng.search_batch(
+        tiny_index, Q, preds,
+        eng.SearchParams(backend="pallas_gather_l2_filter", **base))
+    np.testing.assert_array_equal(ids_k, ids_j)
+    np.testing.assert_array_equal(np.isinf(d_k), np.isinf(d_j))
+    fin = np.isfinite(d_j)
+    np.testing.assert_allclose(d_k[fin], d_j[fin], rtol=1e-5, atol=1e-5)
+
+
+def test_scan_strategy_sharded_is_exact(tiny_data, tiny_queries):
+    """Sharded scan: per-shard kernel + O(S·k) merge still returns the
+    exact global top-k (global ids), with structurally padded shard rows
+    NaN-masked out of the pass."""
+    from repro.core.sharded import build_sharded, search_sharded_emulated
+    vecs, attrs = tiny_data
+    skhi = build_sharded(vecs, attrs, 3, KHIConfig(M=16, builder="device"))
+    Q, preds = tiny_queries
+    Q, preds = Q[:8], preds[:8]
+    qlo, qhi = _boxes(preds)
+    ids, dists, hops = search_sharded_emulated(
+        skhi, Q, qlo, qhi, eng.SearchParams(k=K, ef=EF, c_n=CN,
+                                            strategy="scan"))
+    assert (np.asarray(hops) == 0).all()
+    for i, pr in enumerate(preds):
+        gt = qr.brute_force(vecs, attrs, Q[i], pr, K)
+        got = [x for x in np.asarray(ids)[i].tolist() if x >= 0]
+        assert set(got) == set(gt.tolist()), i
+
+
+# ----------------------------------------------------------- auto dispatch
+
+def test_auto_dispatch_pinned_against_forced(tiny_index, tiny_queries):
+    """A threshold at the card median forces a MIXED batch; every lane of
+    the auto run must be bit-identical to the forced run of the strategy
+    the plan says it dispatched to (scan lanes additionally hops=0)."""
+    Q, preds = tiny_queries
+    qlo, qhi = _boxes(preds)
+    cards = eng.Planner(
+        tiny_index, eng.SearchParams(k=K, ef=EF, c_n=CN, strategy="auto")
+    ).plan(qlo, qhi).card
+    thresh = int(np.median(cards))
+    planner = eng.Planner(tiny_index,
+                          eng.SearchParams(k=K, ef=EF, c_n=CN,
+                                           strategy="auto",
+                                           scan_threshold=thresh))
+    ids_a, d_a, h_a, plan = planner.search(Q, qlo, qhi)
+    assert plan.use_scan.any() and (~plan.use_scan).any(), "not mixed"
+    base = dict(k=K, ef=EF, c_n=CN)
+    ids_g, d_g, h_g = eng.search_batch(tiny_index, Q, preds,
+                                       eng.SearchParams(**base))
+    ids_s, d_s, h_s = eng.search_batch(
+        tiny_index, Q, preds, eng.SearchParams(strategy="scan", **base))
+    for i in range(len(Q)):
+        want_ids, want_d, want_h = (
+            (ids_s, d_s, h_s) if plan.use_scan[i] else (ids_g, d_g, h_g))
+        np.testing.assert_array_equal(ids_a[i], want_ids[i])
+        np.testing.assert_array_equal(d_a[i], want_d[i])
+        assert h_a[i] == want_h[i]
+    assert (h_a[plan.use_scan] == 0).all()
+
+
+def test_mixed_batch_strategies_agree_on_ids(tiny_index, tiny_queries,
+                                             tiny_data):
+    """The dispatch changes the ROUTE, not the answer: on lanes where the
+    graph search is exact (deterministic on this fixed-seed workload),
+    graph and scan return the same id set — and the mixed auto batch
+    contains lanes routed each way among them."""
+    vecs, attrs = tiny_data
+    Q, preds = tiny_queries
+    qlo, qhi = _boxes(preds)
+    base = dict(k=K, ef=128, c_n=CN)         # high ef: graph exact on most
+    ids_g, _, _ = eng.search_batch(tiny_index, Q, preds,
+                                   eng.SearchParams(**base))
+    ids_s, _, _ = eng.search_batch(tiny_index, Q, preds,
+                                   eng.SearchParams(strategy="scan", **base))
+    exact_lanes = []
+    for i, pr in enumerate(preds):
+        gt = set(qr.brute_force(vecs, attrs, Q[i], pr, K).tolist())
+        if set(x for x in ids_g[i].tolist() if x >= 0) == gt:
+            exact_lanes.append(i)
+    assert len(exact_lanes) >= len(Q) // 2   # high-ef graph is near-exact
+    for i in exact_lanes:
+        got_g = set(x for x in ids_g[i].tolist() if x >= 0)
+        got_s = set(x for x in ids_s[i].tolist() if x >= 0)
+        assert got_g == got_s, i
+    cards = eng.Planner(
+        tiny_index, eng.SearchParams(strategy="auto", **base)
+    ).plan(qlo, qhi).card
+    thresh = int(np.median(cards[exact_lanes]))
+    planner = eng.Planner(tiny_index,
+                          eng.SearchParams(strategy="auto",
+                                           scan_threshold=thresh, **base))
+    _, _, _, plan = planner.search(Q, qlo, qhi)
+    routed = plan.use_scan[exact_lanes]
+    assert routed.any() and (~routed).any(), "route disagreement missing"
+
+
+def test_auto_all_graph_and_all_scan_degenerate(tiny_index, tiny_queries):
+    """Thresholds outside the card range make auto collapse to a pure
+    strategy — and the outputs must equal the forced runs exactly."""
+    Q, preds = tiny_queries
+    Q, preds = Q[:6], preds[:6]
+    qlo, qhi = _boxes(preds)
+    base = dict(k=K, ef=EF, c_n=CN)
+    ids_g, _, _ = eng.search_batch(tiny_index, Q, preds,
+                                   eng.SearchParams(**base))
+    ids_s, _, _ = eng.search_batch(tiny_index, Q, preds,
+                                   eng.SearchParams(strategy="scan", **base))
+    lo = eng.Planner(tiny_index, eng.SearchParams(strategy="auto",
+                                                  scan_threshold=1, **base))
+    ids, _, _, plan = lo.search(Q, qlo, qhi)
+    assert not plan.use_scan.any()
+    np.testing.assert_array_equal(ids, ids_g)
+    hi = eng.Planner(tiny_index,
+                     eng.SearchParams(strategy="auto",
+                                      scan_threshold=tiny_index.n, **base))
+    ids, _, _, plan = hi.search(Q, qlo, qhi)
+    assert plan.use_scan.all()
+    np.testing.assert_array_equal(ids, ids_s)
+
+
+def test_query_ref_auto_twin(tiny_index, tiny_queries):
+    """The numpy twin applies the same decision rule: auto == scan result
+    below the threshold, graph result above it."""
+    Q, preds = tiny_queries
+    i = 0
+    card = qr.estimate_cardinality(tiny_index, preds[i])
+    scan_ids = qr.query(tiny_index, Q[i], preds[i], K, ef=EF,
+                        strategy="scan")
+    auto_ids = qr.query(tiny_index, Q[i], preds[i], K, ef=EF,
+                        strategy="auto", scan_threshold=card)
+    np.testing.assert_array_equal(auto_ids, scan_ids)
+    graph_ids = qr.query(tiny_index, Q[i], preds[i], K, ef=EF)
+    auto_ids = qr.query(tiny_index, Q[i], preds[i], K, ef=EF,
+                        strategy="auto", scan_threshold=card - 1)
+    np.testing.assert_array_equal(auto_ids, graph_ids)
+
+
+# ------------------------------------------------------------- serving
+
+def test_service_auto_strategy(tiny_index, tiny_queries, tiny_data):
+    """KHIService with the auto planner: scan-dispatched lanes are exact,
+    scan_lanes is reported, and results equal the planner's."""
+    from repro.serve import KHIService, ServeConfig
+    vecs, attrs = tiny_data
+    Q, preds = tiny_queries
+    Q, preds = Q[:8], preds[:8]
+    qlo, qhi = _boxes(preds)
+    params = eng.SearchParams(k=K, ef=EF, c_n=CN, strategy="auto",
+                              scan_threshold=tiny_index.n)  # all lanes scan
+    svc = KHIService(tiny_index, params,
+                     config=ServeConfig(buckets=(8,), cache_size=0))
+    ids, dists = svc.search(Q, qlo, qhi)
+    assert svc.snapshot()["scan_lanes"] == len(Q)
+    for i, pr in enumerate(preds):
+        gt = qr.brute_force(vecs, attrs, Q[i], pr, K)
+        got = [x for x in ids[i].tolist() if x >= 0]
+        assert set(got) == set(gt.tolist()), i
+
+
+# ------------------------------------------------------------- validation
+
+def test_unknown_strategy_rejected_at_construction():
+    with pytest.raises(ValueError, match="strategy"):
+        eng.SearchParams(strategy="hybrid")
+    with pytest.raises(ValueError, match="scan_threshold"):
+        eng.SearchParams(scan_threshold=-1)
+
+
+@pytest.mark.parametrize("backend", ["pallas_l2", "pallas_gather_l2"])
+@pytest.mark.parametrize("strategy", ["scan", "auto"])
+def test_validate_rejects_scan_with_unfused_backend(tiny_index, backend,
+                                                    strategy):
+    """Satellite: scan with a backend that has no filter kernel must be
+    rejected with an actionable message, by validate_search_params and by
+    every runtime entry point that calls it."""
+    di = eng.device_put_index(tiny_index)
+    p = eng.SearchParams(strategy=strategy, backend=backend)
+    with pytest.raises(ValueError, match="filter"):
+        eng.validate_search_params(p, di)
+    with pytest.raises(ValueError, match="pallas_gather_l2_filter"):
+        eng.validate_search_params(p, di, on_undersized="ignore")
+    with pytest.raises(ValueError, match="filter"):
+        eng.Planner(di, p)
+
+
+def test_validate_rejects_auto_with_dfs_router(tiny_index):
+    """The DFS router early-stops and cannot produce the cardinality
+    bound — auto must name the fix in its error."""
+    di = eng.device_put_index(tiny_index)
+    p = eng.SearchParams(strategy="auto", router="dfs")
+    with pytest.raises(ValueError, match="level"):
+        eng.validate_search_params(p, di)
+    # forced strategies stay router-agnostic
+    ok = eng.SearchParams(strategy="scan", router="dfs")
+    eng.validate_search_params(ok, di, on_undersized="adjust")
+
+
+def test_graph_only_builders_reject_planner_strategies(tiny_index):
+    """make_search_fn / make_sharded_search_fn lower the graph program
+    only; planner strategies must point at the Planner."""
+    with pytest.raises(ValueError, match="Planner"):
+        eng.make_search_fn(eng.SearchParams(strategy="scan"))
+    from jax.sharding import Mesh
+    import jax
+    from repro.core.sharded import make_sharded_search_fn
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("model", "data"))
+    with pytest.raises(ValueError, match="Planner"):
+        make_sharded_search_fn(eng.SearchParams(strategy="auto"), mesh)
+
+
+def test_service_rejects_planner_strategy_with_mesh(tiny_index):
+    from jax.sharding import Mesh
+    import jax
+    from repro.serve import KHIService
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("model", "data"))
+    with pytest.raises(ValueError, match="mesh"):
+        KHIService(tiny_index, eng.SearchParams(strategy="auto"), mesh=mesh)
+
+
+def test_query_ref_rejects_unknown_strategy(tiny_index, tiny_queries):
+    Q, preds = tiny_queries
+    with pytest.raises(ValueError, match="strategy"):
+        qr.query(tiny_index, Q[0], preds[0], K, strategy="bogus")

@@ -29,8 +29,8 @@ def _route_all(index, preds, c_e=10):
         out["host_level"].append(qr.range_filter_level(index, pr, c_e))
         for name, fn in (("dev_dfs", rt.route_dfs),
                          ("dev_level", rt.route_level_sync)):
-            e = np.asarray(fn(di, qlo, qhi, p))
-            out[name].append([int(x) for x in e if x >= 0])
+            e, _card = fn(di, qlo, qhi, p)
+            out[name].append([int(x) for x in np.asarray(e) if x >= 0])
     return out
 
 
