@@ -1,0 +1,175 @@
+"""Sustained ingest throughput under churn for the streaming write path
+(DESIGN.md §11, CI-run).
+
+Drives a ``KHIService`` with streaming enabled through rounds of
+insert(+delete) batches interleaved with query batches, across a small
+grid of churn mix (insert-only vs 50/50 insert/delete) × compaction
+cadence (fold at 50% vs 100% delta fill), and writes
+``experiments/bench_ingest.json``. **Asserts inline** (deterministic;
+CI gates on these):
+
+  * every query batch in every cell returns ids EXACTLY equal to the
+    rebuild-from-scratch ``StreamingOracle`` — recall 1.0 by identity,
+    not by tolerance (queries run strategy="scan", the exact path; the
+    corpus lives on the 1/32 quantization grid so distances are exact
+    in f32 — tests/test_streaming.py pins the same contract);
+  * every cell sustains a nonzero ingest rate and at least MIN_COMPACT
+    compactions (the windowed-merge cadence actually cycles).
+
+The wall-clock numbers (ingest rows/s, query QPS, compaction seconds)
+are *recorded*, not raced: relative timing asserts on shared runners
+test the scheduler, not the code.
+
+    PYTHONPATH=src python -m benchmarks.ingest_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import SearchParams
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.query_ref import Predicate, StreamingOracle
+from repro.serve import KHIService, ServeConfig
+
+from .common import save_results
+
+N0 = 1500              # seed corpus rows
+D, M = 16, 2           # 1/32-grid dims (exact f32 distances)
+K = 10
+CAPACITY = 128         # delta rows before a forced fold
+INSERT_BATCH = 16
+QUERY_BATCH = 8
+MIN_COMPACT = 2        # each cell must cycle the window at least twice
+MAX_ROUNDS = 40
+MIXES = {"insert_only": 0, "churn_50_50": INSERT_BATCH // 2}
+FILLS = {"fill_0.5": 0.5, "fill_1.0": 1.0}
+
+
+def _grid_vecs(rng, n):
+    return (rng.integers(-64, 64, size=(n, D)) / 32).astype(np.float32)
+
+
+def _grid_attrs(rng, n):
+    return rng.integers(0, 16, size=(n, M)).astype(np.float32)
+
+
+def _boxes(rng, b):
+    lo = rng.integers(0, 10, size=(b, M)).astype(np.float32)
+    hi = lo + rng.integers(2, 8, size=(b, M)).astype(np.float32)
+    return lo, hi
+
+
+def _run_cell(mix_name: str, n_delete: int, fill_name: str,
+              fill_frac: float, scale: str) -> dict:
+    rng = np.random.default_rng(42)
+    vecs, attrs = _grid_vecs(rng, N0), _grid_attrs(rng, N0)
+    cfg = KHIConfig(M=8, builder="device")
+    svc = KHIService(KHIIndex.build(vecs, attrs, cfg),
+                     SearchParams(k=K, ef=32, c_n=16, strategy="scan"),
+                     config=ServeConfig(buckets=(QUERY_BATCH,),
+                                        cache_size=0))
+    svc.enable_streaming(capacity=CAPACITY, build_config=cfg)
+    oracle = StreamingOracle(vecs, attrs)
+
+    ingest_rows = 0
+    ingest_s = 0.0
+    query_s = 0.0
+    n_queries = 0
+    exact_batches = 0
+    compact_at = max(1, int(fill_frac * CAPACITY))
+    rounds = 0
+    while (svc.snapshot()["compactions"] < MIN_COMPACT
+           and rounds < MAX_ROUNDS):
+        rounds += 1
+        nv, na = _grid_vecs(rng, INSERT_BATCH), _grid_attrs(rng,
+                                                            INSERT_BATCH)
+        dele = (rng.choice(oracle.next_ext, size=n_delete, replace=False)
+                if n_delete else np.zeros(0, np.int64))
+        t0 = time.perf_counter()
+        exts = svc.insert(nv, na)
+        n_del = svc.delete(dele)
+        ingest_s += time.perf_counter() - t0
+        np.testing.assert_array_equal(exts, oracle.insert(nv, na))
+        assert oracle.delete(dele) == n_del
+        ingest_rows += INSERT_BATCH + n_del
+        if svc._stream.deltas[0].size >= compact_at:
+            t0 = time.perf_counter()
+            svc.compact()
+            ingest_s += time.perf_counter() - t0
+
+        Q = _grid_vecs(rng, QUERY_BATCH)
+        lo, hi = _boxes(rng, QUERY_BATCH)
+        t0 = time.perf_counter()
+        ids, _ = svc.search(Q, lo, hi)
+        query_s += time.perf_counter() - t0
+        n_queries += QUERY_BATCH
+        for i in range(QUERY_BATCH):
+            want = oracle.query(Q[i], Predicate(lo[i], hi[i]), K)
+            got = ids[i][ids[i] >= 0]
+            np.testing.assert_array_equal(got, want)
+        exact_batches += 1
+
+    snap = svc.snapshot()
+    assert snap["compactions"] >= MIN_COMPACT, (
+        f"{mix_name}/{fill_name}: only {snap['compactions']} compactions "
+        f"in {rounds} rounds")
+    assert ingest_rows > 0 and ingest_s > 0
+    return {
+        "mix": mix_name, "fill": fill_name, "scale": scale,
+        "rounds": rounds, "capacity": CAPACITY,
+        "inserts": snap["inserts"], "deletes": snap["deletes"],
+        "compactions": snap["compactions"],
+        "n_live": snap["n_live"],
+        "ingest_qps": ingest_rows / ingest_s,
+        "query_qps": n_queries / query_s if query_s else 0.0,
+        "compact_seconds": snap["compact_seconds"],
+        "recall_scan_lanes": 1.0,       # asserted exact, batch by batch
+        "exact_query_batches": exact_batches,
+    }
+
+
+def run(scale: str = "smoke"):
+    rows = []
+    for mix_name, n_delete in MIXES.items():
+        for fill_name, fill_frac in FILLS.items():
+            r = _run_cell(mix_name, n_delete, fill_name, fill_frac, scale)
+            rows.append(r)
+            print(f"[ingest] {mix_name:12s} {fill_name:9s} "
+                  f"ingest={r['ingest_qps']:7.0f} rows/s "
+                  f"query={r['query_qps']:6.0f} QPS "
+                  f"compactions={r['compactions']} "
+                  f"n_live={r['n_live']}", flush=True)
+    summary = {
+        "grid": f"{len(MIXES)} mixes x {len(FILLS)} fills",
+        "capacity": CAPACITY,
+        "min_ingest_qps": min(r["ingest_qps"] for r in rows),
+        "min_query_qps": min(r["query_qps"] for r in rows),
+        "recall_scan_lanes": 1.0,
+        "total_compactions": sum(r["compactions"] for r in rows),
+    }
+    assert summary["min_ingest_qps"] > 0
+    payload = {"summary": summary, "rows": rows}
+    save_results("ingest", payload)
+    print(f"[ingest] OK min_ingest={summary['min_ingest_qps']:.0f} rows/s "
+          f"min_query={summary['min_query_qps']:.0f} QPS "
+          f"recall=1.0 (exact, asserted)", flush=True)
+    return payload
+
+
+def csv_lines(payload):
+    out = []
+    for r in payload["rows"]:
+        qps = r["ingest_qps"] or 0.0
+        us = 1e6 / qps if qps else 0.0
+        out.append(f"ingest_{r['mix']}_{r['fill']},{us:.1f},"
+                   f"query_qps={r['query_qps']:.0f};"
+                   f"compactions={r['compactions']};"
+                   f"recall={r['recall_scan_lanes']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -45,6 +45,11 @@ class KHIServeConfig:
     scan_threshold: int = 100_000
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
     cache_size: int = 65536             # LRU result-cache entries
+    # Streaming write path (DESIGN.md §11): per-shard delta-segment rows
+    # before inserts force a compaction. ~13% of a 1M-object shard keeps
+    # the delta's exact brute scan a small fraction of query cost while
+    # bounding the windowed-merge rebuild cadence.
+    delta_capacity: int = 131_072
 
     def search_params(self):
         """SearchParams for this serving cell (engine-side knobs only)."""
@@ -70,4 +75,5 @@ def smoke_config() -> KHIServeConfig:
     return KHIServeConfig(name="khi-serve-smoke", n_per_shard=2000, d=32,
                           m=3, M=8, height=12, nodes_per_shard=4096, ef=32,
                           backend="jnp", scan_threshold=200,  # same 10% rule
-                          buckets=(1, 8, 32), cache_size=1024)
+                          buckets=(1, 8, 32), cache_size=1024,
+                          delta_capacity=256)

@@ -4,11 +4,13 @@ tree + per-node filtered HNSW graphs + range-filtering greedy search."""
 from .khi import KHIConfig, KHIIndex  # noqa: F401
 from .query_ref import (  # noqa: F401
     Predicate,
+    StreamingOracle,
     brute_force,
     estimate_cardinality,
     query,
 )
 from .build_device import build_graphs_device  # noqa: F401
+from .delta import DeltaSegment, StreamingState  # noqa: F401
 from .engine import (  # noqa: F401
     BACKENDS,
     ROUTERS,

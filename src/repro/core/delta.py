@@ -1,0 +1,420 @@
+"""Streaming write path: device-resident delta segment + tombstones +
+compaction bookkeeping (DESIGN.md §11).
+
+The KHI index is immutable per epoch (tree object ranges and graph
+adjacency are position-encoded), so writes cannot mutate it in place.
+This module gives the serving layer a mutable facade built from three
+pieces, none of which touches the graph arrays:
+
+  * **DeltaSegment** — a fixed-capacity device append buffer of
+    ``(vecs, attrs)`` rows, served *exactly* by the brute-scan path
+    (``kernels/scan_topk.py`` on the fused-filter backend, its jnp
+    oracle otherwise). Unwritten and deleted slots hold NaN attrs, so
+    they fail every range predicate and can never enter a top-k — the
+    same lane convention the planner uses for structural padding.
+  * **Tombstones** — deleting a base (epoch) row NaNs its attribute row
+    through a functional ``.at[rows].set(nan)`` update. One write
+    threads the delete through every read path: the fused scorer's
+    in-kernel predicate emits +inf for the row, the jnp scorer's
+    ``in_range`` returns False (NaN comparisons), router entry scans
+    skip it, and the planner's scan mask carries the NaN through. The
+    planner's cardinality bound is adjusted host-side via
+    ``router.deleted_per_node`` so deleted rows cannot inflate
+    dispatch estimates either.
+  * **StreamingState** — the host coordinator: stable *external* ids
+    (``ext``) that survive compaction, per-shard deltas (an insert
+    routes to shard ``ext % S``), the base↔ext translation used when
+    merging, and ``live_corpus()`` — the gather that compaction feeds
+    to a fresh epoch build (rows sorted by ext ascending, so internal
+    id order equals ext order and the brute scan's lowest-id tie-break
+    means lowest-ext on every path).
+
+Merge contract: per query, the base engine's top-k and each delta's
+top-k are concatenated on the host and re-ranked by ``(dist, ext)``
+lexicographic — exactly ``lax.top_k``'s lowest-id tie-break under the
+sorted-by-ext invariant above, which is what makes the merged answer
+bit-identical to a rebuilt-from-scratch oracle on exact (scan-served)
+lanes (tests/test_streaming.py pins this).
+
+The ext→row maps are plain host dicts — O(1) per lookup, sized like the
+corpus; a production deployment would back them with a proper key-value
+index, but the translation contract is the same.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import SCAN_BACKENDS
+from .khi import KHIConfig
+from .router import deleted_per_node
+from .sharded import ShardedKHI
+
+__all__ = ["DeltaSegment", "StreamingState"]
+
+_EXT_SENTINEL = np.iinfo(np.int64).max
+
+
+def _pow2(b: int) -> int:
+    return 1 << max(0, (b - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn(k: int, use_kernel: bool, interpret: bool):
+    """Jitted exact scan over one delta buffer (cached per (k, backend))."""
+    if use_kernel:
+        from ..kernels.scan_topk import scan_topk_raw
+
+        def f(vecs, attrs, q, qlo, qhi):
+            return scan_topk_raw(vecs, attrs, q, qlo, qhi, k=k,
+                                 interpret=interpret)
+    else:
+        from ..kernels.ref import scan_topk_ref
+
+        def f(vecs, attrs, q, qlo, qhi):
+            return scan_topk_ref(vecs, attrs, q, qlo, qhi, k)
+    return jax.jit(f)
+
+
+@jax.jit
+def _write_rows(buf, rows, start):
+    return jax.lax.dynamic_update_slice(buf, rows, (start, 0))
+
+
+@jax.jit
+def _nan_rows(attrs, slots):
+    """NaN the given rows; out-of-range sentinel slots drop (pad lanes)."""
+    return attrs.at[slots].set(jnp.nan, mode="drop")
+
+
+@jax.jit
+def _nan_rows_stacked(attrs, shard, local):
+    return attrs.at[shard, local].set(jnp.nan, mode="drop")
+
+
+class DeltaSegment:
+    """Fixed-capacity device append buffer served by the exact brute scan.
+
+    ``vecs`` (capacity, d) f32 and ``attrs`` (capacity, m) f32 live on
+    device; slot metadata (``ext_ids``, ``live``, the append high-water
+    ``size``) lives on the host. Unwritten and deleted slots carry NaN
+    attrs — the scan's mask convention — so the scan always runs over
+    the full fixed-shape buffer (one trace per (k, batch) shape, no
+    per-fill retraces). Appends pad to the next power of two when room
+    allows (bounded trace count), never past ``capacity`` (a clamped
+    ``dynamic_update_slice`` would silently overwrite earlier rows).
+    """
+
+    def __init__(self, capacity: int, d: int, m: int, *,
+                 backend: str = "jnp", interpret: Optional[bool] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if backend not in SCAN_BACKENDS:
+            raise ValueError(
+                f"delta scans need a scan-capable backend {SCAN_BACKENDS}, "
+                f"got {backend!r}")
+        self.capacity = int(capacity)
+        self.d, self.m = int(d), int(m)
+        self._use_kernel = backend == "pallas_gather_l2_filter"
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = bool(interpret)
+        self.clear()
+
+    def clear(self) -> None:
+        self.vecs = jnp.zeros((self.capacity, self.d), jnp.float32)
+        self.attrs = jnp.full((self.capacity, self.m), jnp.nan, jnp.float32)
+        self.ext_ids = np.full(self.capacity, -1, np.int64)
+        self.live = np.zeros(self.capacity, bool)
+        self.size = 0                       # append high-water mark
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    def room(self) -> int:
+        return self.capacity - self.size
+
+    def insert(self, vecs: np.ndarray, attrs: np.ndarray,
+               ext_ids: np.ndarray) -> np.ndarray:
+        """Append rows; returns the slot indices written."""
+        b = vecs.shape[0]
+        if b > self.room():
+            raise ValueError(
+                f"delta segment full: {b} rows > {self.room()} free slots "
+                f"(capacity {self.capacity}); compact first")
+        start = self.size
+        bp = _pow2(b)
+        if start + bp > self.capacity:
+            bp = b                           # exact-size write near the rim
+        v = np.zeros((bp, self.d), np.float32)
+        a = np.full((bp, self.m), np.nan, np.float32)
+        v[:b] = vecs
+        a[:b] = attrs
+        self.vecs = _write_rows(self.vecs, jnp.asarray(v), jnp.int32(start))
+        self.attrs = _write_rows(self.attrs, jnp.asarray(a), jnp.int32(start))
+        slots = np.arange(start, start + b)
+        self.ext_ids[slots] = ext_ids
+        self.live[slots] = True
+        self.size += b
+        return slots
+
+    def delete(self, slots: np.ndarray) -> None:
+        """Tombstone delta slots: NaN their attr rows (live mask host-side)."""
+        slots = np.asarray(slots, np.int64)
+        if not slots.size:
+            return
+        self.live[slots] = False
+        pad = np.full(_pow2(slots.size), self.capacity, np.int32)  # OOB drop
+        pad[: slots.size] = slots
+        self.attrs = _nan_rows(self.attrs, jnp.asarray(pad))
+
+    def scan(self, q: jnp.ndarray, qlo: jnp.ndarray, qhi: jnp.ndarray,
+             k: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Exact top-k over live delta rows: (slots (B, k'), dists (B, k'))
+        with k' = min(k, capacity); None when nothing was ever appended."""
+        if self.size == 0:
+            return None
+        k_eff = min(k, self.capacity)
+        fn = _scan_fn(k_eff, self._use_kernel, self._interpret)
+        ids, dd = fn(self.vecs, self.attrs, jnp.asarray(q),
+                     jnp.asarray(qlo), jnp.asarray(qhi))
+        return np.asarray(ids), np.asarray(dd)
+
+    def live_rows(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host copies of the live rows: (vecs, attrs, ext_ids)."""
+        slots = np.nonzero(self.live)[0]
+        if not slots.size:
+            return (np.zeros((0, self.d), np.float32),
+                    np.zeros((0, self.m), np.float32),
+                    np.zeros((0,), np.int64))
+        hv = np.asarray(jax.device_get(self.vecs), np.float32)
+        ha = np.asarray(jax.device_get(self.attrs), np.float32)
+        return hv[slots], ha[slots], self.ext_ids[slots].copy()
+
+
+class StreamingState:
+    """Host coordinator for one service's streaming writes (DESIGN.md §11).
+
+    Owns the ext-id space, the per-shard delta segments, the base
+    tombstone bitmap, and the merge/translation logic. The device index
+    itself is only ever updated *functionally* (``delete`` returns a new
+    index pytree with NaN'd attr rows); installing it is the caller's
+    job — ``serve.KHIService`` is the intended caller.
+    """
+
+    def __init__(self, index, *, capacity: int,
+                 build_config: Optional[KHIConfig] = None,
+                 backend: str = "jnp", interpret: Optional[bool] = None):
+        self._sharded = isinstance(index, ShardedKHI)
+        di = index.di if self._sharded else index
+        self.S = index.num_shards if self._sharded else 1
+        self.build_config = build_config or KHIConfig(builder="device")
+        d, m = di.vecs.shape[-1], di.attrs.shape[-1]
+        self.deltas: List[DeltaSegment] = [
+            DeltaSegment(capacity, d, m, backend=backend, interpret=interpret)
+            for _ in range(self.S)]
+        self._bind_base(index, ext_of_base=None)
+        self.next_ext = self.n_total
+
+    # ------------------------------------------------------------ base view
+    def _bind_base(self, index, ext_of_base: Optional[np.ndarray]) -> None:
+        di = index.di if self._sharded else index
+        root = np.atleast_1d(np.asarray(jax.device_get(di.root)))
+        count = np.asarray(jax.device_get(di.count))
+        if count.ndim == 1:
+            count = count[None]
+        self.n_shard = count[np.arange(root.shape[0]), root]
+        self.n_total = int(self.n_shard.sum())
+        if ext_of_base is None:
+            ext_of_base = np.arange(self.n_total, dtype=np.int64)
+        if ext_of_base.shape[0] != self.n_total:
+            raise ValueError(
+                f"ext map has {ext_of_base.shape[0]} entries for a corpus "
+                f"of {self.n_total} rows")
+        self.ext_of_base = np.asarray(ext_of_base, np.int64)
+        self.base_slot = {int(e): g for g, e in enumerate(self.ext_of_base)}
+        self.base_deleted = np.zeros(self.n_total, bool)
+        self.delta_loc: dict = {}            # ext -> (shard, slot)
+
+    @property
+    def dirty(self) -> bool:
+        """Pending writes a plain epoch swap would drop."""
+        return bool(self.base_deleted.any()
+                    or any(seg.size for seg in self.deltas))
+
+    @property
+    def n_live(self) -> int:
+        return (self.n_total - int(self.base_deleted.sum())
+                + sum(seg.n_live for seg in self.deltas))
+
+    # -------------------------------------------------------------- inserts
+    def _route(self, exts: np.ndarray) -> np.ndarray:
+        return exts % self.S
+
+    def fits(self, b: int) -> bool:
+        """Would a b-row insert fit the per-shard deltas right now?"""
+        exts = np.arange(self.next_ext, self.next_ext + b, dtype=np.int64)
+        shard = self._route(exts)
+        return all(int((shard == s).sum()) <= self.deltas[s].room()
+                   for s in range(self.S))
+
+    def insert(self, vecs: np.ndarray, attrs: np.ndarray) -> np.ndarray:
+        """Append rows to the per-shard deltas; returns their ext ids."""
+        b = vecs.shape[0]
+        exts = np.arange(self.next_ext, self.next_ext + b, dtype=np.int64)
+        shard = self._route(exts)
+        for s in range(self.S):
+            sel = np.nonzero(shard == s)[0]
+            if not sel.size:
+                continue
+            slots = self.deltas[s].insert(vecs[sel], attrs[sel], exts[sel])
+            for e, slot in zip(exts[sel], slots):
+                self.delta_loc[int(e)] = (s, int(slot))
+        self.next_ext += b
+        return exts
+
+    # -------------------------------------------------------------- deletes
+    def delete(self, ext_ids: np.ndarray, index):
+        """Tombstone rows by ext id. Returns ``(new_index_or_None,
+        n_deleted)``: a functionally-updated index pytree (NaN'd base attr
+        rows) when any base row died, None when only delta rows (or
+        nothing) did. Unknown / already-deleted ids are skipped."""
+        base_rows: List[int] = []
+        per_seg: dict = {}
+        n_del = 0
+        for e in np.asarray(ext_ids, np.int64).ravel():
+            e = int(e)
+            loc = self.delta_loc.get(e)
+            if loc is not None:
+                s, slot = loc
+                if self.deltas[s].live[slot]:
+                    per_seg.setdefault(s, []).append(slot)
+                    n_del += 1
+                continue
+            g = self.base_slot.get(e)
+            if g is not None and not self.base_deleted[g]:
+                self.base_deleted[g] = True
+                base_rows.append(g)
+                n_del += 1
+        for s, slots in per_seg.items():
+            self.deltas[s].delete(np.asarray(slots))
+        if not base_rows:
+            return None, n_del
+        return self._nan_base(index, np.asarray(base_rows)), n_del
+
+    def _nan_base(self, index, rows: np.ndarray):
+        """Functional tombstone write: a new index pytree whose attr rows
+        at ``rows`` (global internal ids) are NaN."""
+        if not self._sharded:
+            pad = np.full(_pow2(rows.size), index.attrs.shape[0], np.int32)
+            pad[: rows.size] = rows
+            return dataclasses.replace(
+                index, attrs=_nan_rows(index.attrs, jnp.asarray(pad)))
+        sh = np.zeros(_pow2(rows.size), np.int32)
+        loc = np.full(_pow2(rows.size), index.di.attrs.shape[1], np.int32)
+        sh[: rows.size] = rows % self.S
+        loc[: rows.size] = rows // self.S
+        di = dataclasses.replace(
+            index.di, attrs=_nan_rows_stacked(index.di.attrs,
+                                              jnp.asarray(sh),
+                                              jnp.asarray(loc)))
+        return ShardedKHI(di=di, offsets=index.offsets)
+
+    def deleted_locals(self) -> List[np.ndarray]:
+        """Per-shard LOCAL row ids of tombstoned base rows — the planner's
+        cardinality adjustment input (``router.deleted_per_node``)."""
+        g = np.nonzero(self.base_deleted)[0]
+        if not self._sharded:
+            return [g]
+        return [g[g % self.S == s] // self.S for s in range(self.S)]
+
+    # ---------------------------------------------------------------- merge
+    def merge(self, ids: np.ndarray, dists: np.ndarray, qs: np.ndarray,
+              qlo: np.ndarray, qhi: np.ndarray, k: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fold the deltas into one batch of base-engine results.
+
+        ``ids`` (B, k) are *internal* base ids; the output is (ext ids
+        (B, k) int64, dists (B, k) f32) re-ranked by (dist, ext) — the
+        lowest-id tie-break of ``lax.top_k`` in ext space (module
+        docstring)."""
+        ids = np.asarray(ids)
+        safe = np.clip(ids, 0, max(self.n_total - 1, 0))
+        base_ext = np.where(ids >= 0, self.ext_of_base[safe], -1)
+        parts_i = [base_ext.astype(np.int64)]
+        parts_d = [np.asarray(dists, np.float32)]
+        for seg in self.deltas:
+            res = seg.scan(qs, qlo, qhi, k)
+            if res is None:
+                continue
+            slots, dd = res
+            ext = np.where(slots >= 0,
+                           seg.ext_ids[np.maximum(slots, 0)], -1)
+            parts_i.append(ext.astype(np.int64))
+            parts_d.append(np.where(slots >= 0, dd, np.inf))
+        cand_i = np.concatenate(parts_i, axis=1)
+        cand_d = np.concatenate(parts_d, axis=1)
+        cand_d = np.where(cand_i >= 0, cand_d, np.inf).astype(np.float32)
+        key_ext = np.where(cand_i >= 0, cand_i, _EXT_SENTINEL)
+        order = np.lexsort((key_ext, cand_d), axis=-1)[:, :k]
+        out_i = np.take_along_axis(cand_i, order, axis=1)
+        out_d = np.take_along_axis(cand_d, order, axis=1)
+        out_i = np.where(np.isfinite(out_d), out_i, -1)
+        out_d = np.where(out_i >= 0, out_d, np.inf).astype(np.float32)
+        return out_i, out_d
+
+    # ----------------------------------------------------------- compaction
+    def live_corpus(self, index) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Gather every live row (base minus tombstones, plus delta) to the
+        host, sorted by ext ascending: (vecs (n', d), attrs (n', m), exts
+        (n',)). This is the corpus a compaction rebuild consumes; the sort
+        keeps internal-id order == ext order in the new epoch."""
+        di = index.di if self._sharded else index
+        hv = np.asarray(jax.device_get(di.vecs), np.float32)
+        ha = np.asarray(jax.device_get(di.attrs), np.float32)
+        if not self._sharded:
+            hv, ha = hv[None], ha[None]
+        alive = np.nonzero(~self.base_deleted)[0]
+        if self._sharded:
+            shard, local = alive % self.S, alive // self.S
+        else:
+            shard, local = np.zeros_like(alive), alive
+        parts_v = [hv[shard, local]]
+        parts_a = [ha[shard, local]]
+        parts_e = [self.ext_of_base[alive]]
+        for seg in self.deltas:
+            v, a, e = seg.live_rows()
+            parts_v.append(v)
+            parts_a.append(a)
+            parts_e.append(e)
+        vecs = np.concatenate(parts_v)
+        attrs = np.concatenate(parts_a)
+        exts = np.concatenate(parts_e)
+        order = np.argsort(exts, kind="stable")
+        return vecs[order], attrs[order], exts[order]
+
+    def reset(self, index, exts: np.ndarray) -> None:
+        """Rebind to a freshly compacted epoch: ``exts`` is the (sorted)
+        ext id of each new internal row. Deltas and tombstones clear; the
+        ext counter keeps monotone (ids are never reused)."""
+        for seg in self.deltas:
+            seg.clear()
+        self._bind_base(index, ext_of_base=exts)
+
+    # ------------------------------------------------------------- planner
+    def adjusted_counts(self, order: np.ndarray, start: np.ndarray,
+                        count: np.ndarray, shard: int) -> np.ndarray:
+        """Tombstone-adjusted per-node counts for one shard's estimator."""
+        rows = self.deleted_locals()[shard]
+        if not rows.size:
+            return count
+        n_s = int(self.n_shard[shard])
+        dead = deleted_per_node(order[:n_s], start, count, rows)
+        return count.astype(np.int64) - dead

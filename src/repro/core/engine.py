@@ -794,20 +794,35 @@ class Planner:
         self.plan_cache_size = 65536
 
     # --------------------------------------------------------- plan pass
-    def _build_estimators(self):
+    def _build_estimators(self, deleted_rows=None):
         """One HostCardEstimator per shard from host copies of the
         flattened tree (small next to the vector plane; fetched once per
-        Planner/epoch)."""
+        Planner/epoch). ``deleted_rows`` — per-shard LOCAL row-id arrays
+        of streaming tombstones (DESIGN.md §11) — subtracts the dead rows
+        from each node's count so the routing bound covers only *live*
+        objects and deletes never inflate dispatch estimates."""
+        from .router import deleted_per_node
+
         di = self.index.di if self._sharded else self.index
         host = {f: np.asarray(jax.device_get(getattr(di, f)))
                 for f in ("left", "right", "dim", "bl", "lo", "hi",
-                          "count", "root")}
+                          "count", "start", "order", "root")}
         if not self._sharded:
             host = {k: v[None] for k, v in host.items()}
-        return [HostCardEstimator(
-            host["left"][s], host["right"][s], host["dim"][s],
-            host["bl"][s], host["lo"][s], host["hi"][s], host["count"][s],
-            int(host["root"][s])) for s in range(host["left"].shape[0])]
+        ests = []
+        for s in range(host["left"].shape[0]):
+            count = host["count"][s].astype(np.int64)
+            if deleted_rows is not None and np.asarray(
+                    deleted_rows[s]).size:
+                n_s = int(self._n_shard[s])
+                count = count - deleted_per_node(
+                    host["order"][s][:n_s], host["start"][s], count,
+                    deleted_rows[s])
+            ests.append(HostCardEstimator(
+                host["left"][s], host["right"][s], host["dim"][s],
+                host["bl"][s], host["lo"][s], host["hi"][s], count,
+                int(host["root"][s])))
+        return ests
 
     def _cards(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
         """Per-query routing bound through the plan cache (repeated boxes
@@ -837,6 +852,37 @@ class Planner:
             while len(self._plan_cache) > self.plan_cache_size:
                 self._plan_cache.popitem(last=False)
         return out
+
+    # -------------------------------------------------- streaming refresh
+    def refresh_index(self, index, *, deleted_rows=None) -> None:
+        """Rebind to a functionally-updated index of IDENTICAL shapes —
+        the streaming tombstone path (DESIGN.md §11), where a delete NaNs
+        attr rows without touching any other array. The jitted programs
+        read ``self.index`` / ``self._scan_attrs`` at call time, so this
+        swaps what they see without a retrace; only the host-side plan
+        state (scan mask, estimators with tombstone-adjusted counts, plan
+        cache) is recomputed. Anything shape-changing must build a fresh
+        Planner instead."""
+        if isinstance(index, KHIIndex):
+            raise TypeError("refresh_index takes an already-device-resident "
+                            "index (same shapes as the installed one)")
+        sharded = hasattr(index, "offsets") and hasattr(index, "di")
+        di_new = index.di if sharded else index
+        di_old = self.index.di if self._sharded else self.index
+        if sharded != self._sharded or di_new.attrs.shape != \
+                di_old.attrs.shape or di_new.vecs.shape != di_old.vecs.shape:
+            raise ValueError("refresh_index requires identical index shapes"
+                             " (use a new Planner for a new epoch)")
+        self.index = index
+        N = di_new.attrs.shape[-2]
+        valid = np.arange(N)[None, :] < self._n_shard[:, None]
+        if not self._sharded:
+            valid = valid[0]
+        self._scan_attrs = jnp.where(jnp.asarray(valid)[..., None],
+                                     di_new.attrs, jnp.nan)
+        if self.params.strategy == "auto":
+            self._estimators = self._build_estimators(deleted_rows)
+        self._plan_cache.clear()
 
     # ------------------------------------------------------ device programs
     def _build_graph_fn(self):

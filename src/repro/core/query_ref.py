@@ -17,7 +17,8 @@ from . import beam
 from .khi import KHIIndex
 
 __all__ = ["Predicate", "range_filter", "range_filter_level", "recons_nbr",
-           "estimate_cardinality", "query", "brute_force"]
+           "estimate_cardinality", "query", "brute_force",
+           "StreamingOracle"]
 
 
 class Predicate:
@@ -500,3 +501,71 @@ def _query_beam(index: KHIIndex, q: np.ndarray, pred: Predicate, k: int,
                          "threshold_trace": threshold_trace,
                          "visited": int(visited.sum())}
     return out_ids
+
+class StreamingOracle:
+    """Rebuild-from-scratch numpy twin of the streaming write path
+    (DESIGN.md §11) — the mutation-oracle tests' ground truth.
+
+    Holds the live corpus as a plain dict keyed by stable *external* id
+    (the same id space ``core.delta.StreamingState`` hands out: the seed
+    corpus gets ``0..n-1``, every insert a fresh monotone id, re-inserts
+    a NEW id — ids are never reused). A query brute-scans the whole live
+    corpus with the scan path's tie-break — ``(distance, ext)``
+    lexicographic, i.e. lowest surviving id on ties — which is what the
+    device side's sorted-by-ext merge contract produces, so the two
+    agree *bit-for-bit* on exact (scan-served) lanes at every step of
+    any insert/delete interleaving (tests/test_streaming.py).
+    """
+
+    def __init__(self, vecs: np.ndarray, attrs: np.ndarray):
+        self._rows = {i: (np.asarray(vecs[i], np.float32),
+                          np.asarray(attrs[i], np.float32))
+                      for i in range(vecs.shape[0])}
+        self.next_ext = vecs.shape[0]
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def insert(self, vecs: np.ndarray, attrs: np.ndarray) -> np.ndarray:
+        """Append rows; returns their freshly-assigned ext ids."""
+        b = vecs.shape[0]
+        exts = np.arange(self.next_ext, self.next_ext + b, dtype=np.int64)
+        for j, e in enumerate(exts):
+            self._rows[int(e)] = (np.asarray(vecs[j], np.float32),
+                                  np.asarray(attrs[j], np.float32))
+        self.next_ext += b
+        return exts
+
+    def delete(self, ext_ids) -> int:
+        """Drop rows by ext id; unknown ids are skipped (idempotent, the
+        streaming side's contract). Returns the number actually removed."""
+        n = 0
+        for e in np.asarray(ext_ids, np.int64).ravel():
+            n += self._rows.pop(int(e), None) is not None
+        return n
+
+    def corpus(self):
+        """(exts (n,) int64 ascending, vecs (n, d), attrs (n, m)) — the
+        ext-sorted live corpus a compaction rebuild would consume."""
+        exts = np.asarray(sorted(self._rows), np.int64)
+        if not exts.size:
+            return (exts, np.zeros((0, 0), np.float32),
+                    np.zeros((0, 0), np.float32))
+        vecs = np.stack([self._rows[int(e)][0] for e in exts])
+        attrs = np.stack([self._rows[int(e)][1] for e in exts])
+        return exts, vecs, attrs
+
+    def query(self, q: np.ndarray, pred: Predicate, k: int) -> np.ndarray:
+        """Exact top-k ext ids over the live corpus, ties to the lowest
+        ext (class docstring); shorter than k when |O_B| is."""
+        exts, vecs, attrs = self.corpus()
+        if not exts.size:
+            return exts
+        mask = pred.matches(attrs)
+        ids = np.nonzero(mask)[0]
+        if not ids.size:
+            return ids.astype(np.int64)
+        diff = vecs[ids] - np.asarray(q, np.float32)
+        d2 = np.einsum("nd,nd->n", diff, diff)
+        order = np.lexsort((exts[ids], d2))[: min(k, ids.size)]
+        return exts[ids[order]]

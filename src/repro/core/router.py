@@ -69,7 +69,7 @@ if TYPE_CHECKING:  # pragma: no cover
     from .engine import DeviceIndex, SearchParams
 
 __all__ = ["ROUTERS", "resolve_router", "route_dfs", "route_level_sync",
-           "route_level_card", "HostCardEstimator",
+           "route_level_card", "HostCardEstimator", "deleted_per_node",
            "required_frontier_cap"]
 
 ROUTERS = ("level", "dfs")
@@ -392,6 +392,36 @@ class HostCardEstimator:
             reached[:, nl] = (reached[:, pl] & ~stop[:, pl]
                               & edge_ok[:, nl])
         return (stop & reached) @ self.count
+
+
+def deleted_per_node(order: np.ndarray, start: np.ndarray,
+                     count: np.ndarray, deleted_rows: np.ndarray
+                     ) -> np.ndarray:
+    """Per-node tombstone counts for the streaming planner (DESIGN.md §11):
+    how many of ``deleted_rows`` (internal object ids) fall inside each
+    node's object range ``order[start : start+count]``.
+
+    Subtracting this from ``count`` keeps the routing cardinality bound
+    an upper bound on *live* in-range objects, so deleted rows cannot
+    inflate the planner's dispatch estimates. O(n + P) — one inverse
+    permutation + one prefix sum over a 0/1 mark array; node ranges are
+    contiguous in ``order`` position space by construction (tree.py).
+
+    ``order`` must be the REAL slice (``order[:n]``): padded slots hold 0
+    and would corrupt the inverse permutation.
+    """
+    n = order.shape[0]
+    deleted_rows = np.asarray(deleted_rows, np.int64)
+    if not deleted_rows.size:
+        return np.zeros(start.shape[0], np.int64)
+    inv = np.empty(n, np.int64)
+    inv[np.asarray(order, np.int64)] = np.arange(n)
+    mark = np.zeros(n + 1, np.int64)
+    mark[inv[deleted_rows] + 1] = 1
+    cum = np.cumsum(mark)
+    s = start.astype(np.int64)
+    e = np.minimum(s + count.astype(np.int64), n)   # padded nodes -> 0
+    return cum[e] - cum[np.minimum(s, n)]
 
 
 def required_frontier_cap(di) -> int:

@@ -25,6 +25,12 @@ Contract extensions over ``gather_l2_blocked_raw``:
 Attribute rows are tiny (m ~ 3-5 floats), so the extra per-row DMA rides
 in the shadow of the (d,)-row vector DMA; distances accumulate in f32
 (bf16 corpora supported, attrs stay f32).
+
+The in-kernel predicate doubles as the **tombstone lane** of the
+streaming write path (DESIGN.md §11): a deleted row's attrs are NaN'd
+in place, NaN fails every ``qlo <= a <= qhi`` comparison, and the lane
+emits +inf — deletes thread through this kernel with zero kernel
+changes and zero retraces (the index shapes are untouched).
 """
 
 from __future__ import annotations

@@ -36,6 +36,12 @@ tensor; XLA may associate the two row sums differently by 1 ulp).
 ``c_blk``-style tiling notes: rows pad to an ``n_blk`` multiple with
 NaN attrs (padded lanes can never win), distances accumulate in f32
 (bf16 corpora supported, attrs stay f32).
+
+The NaN-attrs mask is also the streaming write path's **tombstone and
+delta lane** (DESIGN.md §11): deleted rows — epoch or delta — get NaN
+attrs and drop out of every scan, and ``core.delta.DeltaSegment``
+serves its append buffer through this same kernel (unwritten slots are
+born NaN), so inserts/deletes need no kernel changes and no retraces.
 """
 
 from __future__ import annotations

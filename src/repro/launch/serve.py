@@ -9,6 +9,9 @@ predicate-fused kernel), ``--router`` the Phase-A tree router,
 ``--strategy`` the execution strategy (``auto`` = per-query planner
 dispatch between graph search and the exact brute scan, DESIGN.md §10;
 ``--scan-threshold`` overrides the derived dispatch threshold);
+``--stream-smoke`` additionally exercises the streaming write path
+(insert → delete → compact → re-query, DESIGN.md §11) and asserts that
+post-compaction answers match the pre-compaction delta-merged answers;
 ``--mode generate`` runs prefill+decode on a smoke LM.
 """
 
@@ -71,6 +74,41 @@ def serve_khi(args):
           f"batches={snap['batches']} scan_lanes={snap['scan_lanes']} "
           f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
           f"buckets={snap['traced_buckets']}")
+    if args.stream_smoke:
+        stream_smoke(svc, vecs, attrs, Q, lo, hi, args)
+
+
+def stream_smoke(svc, vecs, attrs, Q, lo, hi, args):
+    """Streaming write-path smoke (DESIGN.md §11): insert perturbed copies,
+    delete a mix of base + fresh rows, query the delta-merged view, then
+    compact and assert the published epoch answers the same queries with
+    the same ids (exactly, on scan-served lanes; the CI step runs
+    --strategy scan so every lane is exact)."""
+    rng = np.random.default_rng(7)
+    svc.enable_streaming(capacity=args.delta_capacity)
+    t0 = time.perf_counter()
+    sel = rng.choice(len(vecs), size=64, replace=False)
+    exts = svc.insert(vecs[sel] + np.float32(1e-3), attrs[sel])
+    dele = np.concatenate([exts[:16], sel[:16]])   # fresh + base rows
+    n_del = svc.delete(dele)
+    ingest_dt = time.perf_counter() - t0
+    B = min(16, len(Q))
+    pre_ids, pre_d = svc.search(Q[:B], lo[:B], hi[:B])
+    svc.compact()
+    post_ids, post_d = svc.search(Q[:B], lo[:B], hi[:B])
+    if args.strategy == "scan":
+        np.testing.assert_array_equal(post_ids, pre_ids)
+        np.testing.assert_allclose(post_d, pre_d, rtol=1e-5)
+        verdict = "bit-identical"
+    else:
+        agree = float((post_ids == pre_ids).mean())
+        assert agree > 0.5, f"pre/post-compaction overlap {agree:.2f}"
+        verdict = f"overlap {agree:.2f} (graph lanes are approximate)"
+    snap = svc.snapshot()
+    print(f"[serve] stream-smoke: +{len(exts)} inserts -{n_del} deletes "
+          f"in {ingest_dt * 1e3:.0f}ms, compactions="
+          f"{snap['compactions']} n_live={snap['n_live']} "
+          f"epoch={snap['epoch']}; pre/post-compaction answers {verdict}")
 
 
 def serve_generate(args):
@@ -127,6 +165,12 @@ def main(argv=None):
     ap.add_argument("--scan-threshold", type=int, default=0,
                     help="auto-dispatch threshold in in-range objects "
                          "(0 = derive DEFAULT_SCAN_FRAC of the corpus)")
+    ap.add_argument("--stream-smoke", action="store_true",
+                    help="exercise the streaming write path: insert -> "
+                         "delete -> compact -> re-query (DESIGN.md §11)")
+    ap.add_argument("--delta-capacity", type=int, default=256,
+                    help="per-shard delta-segment rows before inserts "
+                         "force a compaction")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "khi":

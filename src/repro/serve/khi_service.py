@@ -61,11 +61,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.engine import (DeviceIndex, Planner, SearchParams, _query_one,
-                           device_put_index, resolve_scorer,
+from ..core.delta import StreamingState
+from ..core.engine import (SCAN_BACKENDS, DeviceIndex, Planner, SearchParams,
+                           _query_one, device_put_index, resolve_scorer,
                            validate_search_params)
-from ..core.khi import KHIIndex
-from ..core.sharded import ShardedKHI, _merge_topk, _shard_search
+from ..core.khi import KHIConfig, KHIIndex
+from ..core.sharded import (ShardedKHI, _merge_topk, _shard_search,
+                            build_sharded)
 
 __all__ = ["ServeConfig", "Request", "Result", "KHIService"]
 
@@ -101,6 +103,8 @@ class Result:
     ids: np.ndarray    # (k,) int32 global object ids, -1 padded
     dists: np.ndarray  # (k,) float32 squared L2, inf padded
     cached: bool = False
+    # with streaming enabled, ids are (k,) int64 stable EXTERNAL ids
+    # (DESIGN.md §11) — they survive compaction epochs
 
 
 class KHIService:
@@ -132,7 +136,13 @@ class KHIService:
             "requests": 0, "cache_hits": 0, "batches": 0, "pad_lanes": 0,
             "device_queries": 0, "traced_buckets": set(),
             "device_seconds": 0.0, "epoch_swaps": 0, "scan_lanes": 0,
+            "inserts": 0, "deletes": 0, "compactions": 0,
+            "ingest_seconds": 0.0, "compact_seconds": 0.0,
         }
+        self._stream: Optional[StreamingState] = None
+        self._mutation_seq = 0      # cache-key component (DESIGN.md §11)
+        self._compacting = False
+        self._planner: Optional[Planner] = None
         self._install_index(index)
 
     def _install_index(self, index) -> None:
@@ -169,7 +179,16 @@ class KHIService:
         the epoch is part of every cache key (stale entries are
         unreachable) and the store is cleared eagerly. Returns the drained
         ``{ticket: Result}`` dict (empty when nothing was pending).
+
+        With streaming enabled a bare swap would orphan the delta rows and
+        the ext-id mapping — ``compact()`` is the only sanctioned publisher
+        of new epochs then (DESIGN.md §11).
         """
+        if self._stream is not None and not self._compacting:
+            raise RuntimeError(
+                "swap_index while streaming is enabled would drop the delta "
+                "segment and the ext-id mapping; publish new epochs through "
+                "compact() (DESIGN.md §11)")
         drained = self.flush() if drain else {}
         if params is not None:
             self._user_params = params
@@ -191,13 +210,20 @@ class KHIService:
             else self.index.attrs.shape[-1]
 
     def _build_search_fn(self):
+        # Every branch reads ``self.index`` at CALL time (not build time):
+        # a streaming delete installs a functionally-updated pytree of
+        # identical shapes, which the jitted programs must pick up without
+        # a rebuild. The old-epoch drain in swap_index still runs against
+        # the old index — the flush happens before _install_index rebinds.
         p, scorer = self.params, self._scorer
+        self._planner = None
         if p.strategy != "graph":
             # planner-backed path (DESIGN.md §10): per-lane dispatch to the
             # graph engine or the exact brute scan, single or sharded —
             # params are already validated, the planner re-checks cheaply
             planner = Planner(self.index, p, dist_fn=self._legacy_dist_fn,
                               on_undersized=self._on_undersized)
+            self._planner = planner
 
             def run(q, lo, hi):
                 ids, dists, _hops, plan = planner.search(
@@ -214,16 +240,14 @@ class KHIService:
                     lambda qq, lo, hi: fn(di, qq, lo, hi))(q, qlo, qhi)
                 return ids, dists
 
-            index = self.index  # bind the epoch's index, not the service
-            return lambda q, lo, hi: single(index, q, lo, hi)
+            return lambda q, lo, hi: single(self.index, q, lo, hi)
 
         n_shards = self.index.num_shards
         if self._mesh is not None:
             from ..core.sharded import make_sharded_search_fn
             fn = make_sharded_search_fn(p, self._mesh,
                                         dist_fn=self._legacy_dist_fn)
-            index = self.index  # bind the epoch's index, not the service
-            return lambda q, lo, hi: fn(index, q, lo, hi)
+            return lambda q, lo, hi: fn(self.index, q, lo, hi)
 
         @jax.jit
         def fanout(skhi: ShardedKHI, q, qlo, qhi):
@@ -233,8 +257,7 @@ class KHIService:
             gids, dists, _ = jax.vmap(per_shard)(skhi.di, skhi.offsets)
             return _merge_topk(gids, dists, p.k)
 
-        index = self.index  # bind the epoch's index, not the service
-        return lambda q, lo, hi: fanout(index, q, lo, hi)
+        return lambda q, lo, hi: fanout(self.index, q, lo, hi)
 
     def _bucket(self, b: int) -> int:
         for size in self.config.buckets:
@@ -249,6 +272,10 @@ class KHIService:
         h.update(hi.tobytes())
         h.update(repr(self.params).encode())
         h.update(self.epoch.to_bytes(8, "little"))  # per-epoch invalidation
+        # per-mutation invalidation: every insert/delete/compact bumps the
+        # sequence, so stale pre-mutation results are unreachable even
+        # within one epoch (DESIGN.md §11)
+        h.update(self._mutation_seq.to_bytes(8, "little"))
         return h.digest()
 
     def _cache_get(self, key: bytes):
@@ -285,12 +312,21 @@ class KHIService:
         ids, dists = self._search(jnp.asarray(qs), jnp.asarray(los),
                                   jnp.asarray(his))
         ids, dists = jax.block_until_ready((ids, dists))
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        if self._stream is not None:
+            # windowed merge (DESIGN.md §11): fold the per-shard delta
+            # scans into the epoch results on the bucket-padded batch (the
+            # delta scan traces per bucket shape too; pad lanes carry the
+            # empty box and contribute nothing), then unpad. Ids become
+            # stable int64 ext ids here.
+            ids, dists = self._stream.merge(ids, dists, qs, los, his,
+                                            self.params.k)
         self.stats["device_seconds"] += time.perf_counter() - t0
         self.stats["batches"] += 1
         self.stats["pad_lanes"] += pad
         self.stats["device_queries"] += bucket
         self.stats["traced_buckets"].add(bucket)
-        return np.asarray(ids)[:b], np.asarray(dists)[:b]
+        return ids[:b], dists[:b]
 
     # -------------------------------------------------------------- serving
     def _answer(self, queries: np.ndarray, lo: np.ndarray,
@@ -303,7 +339,8 @@ class KHIService:
         B = queries.shape[0]
         self.stats["requests"] += B
         k = self.params.k
-        out_ids = np.full((B, k), -1, np.int32)
+        id_dtype = np.int64 if self._stream is not None else np.int32
+        out_ids = np.full((B, k), -1, id_dtype)
         out_d = np.full((B, k), np.inf, np.float32)
         hit_mask = np.zeros((B,), bool)
 
@@ -378,6 +415,118 @@ class KHIService:
         if batch:
             yield from drain(batch)
 
+    # ---------------------------------------------------------- streaming
+    def enable_streaming(self, *, capacity: int = 4096,
+                         build_config: Optional[KHIConfig] = None
+                         ) -> StreamingState:
+        """Turn on the streaming write path (DESIGN.md §11): per-shard
+        device delta segments of ``capacity`` rows each, tombstoned
+        deletes, and ``compact()`` epoch publishing. Query results switch
+        to stable int64 EXTERNAL ids (the seed corpus keeps ``0..n-1``).
+        ``build_config`` is what compaction rebuilds with — default the
+        PR-2 device bulk builder; pass the original build config when
+        bit-identical no-op compaction matters (tests/test_streaming.py).
+        """
+        if self._stream is not None:
+            raise RuntimeError("streaming is already enabled")
+        if self._mesh is not None:
+            raise ValueError(
+                "streaming with mesh=: the delta merge runs on the host "
+                "after the collective fan-out returns — serve without a "
+                "mesh (vmap fan-out) to stream (DESIGN.md §11)")
+        backend = (self.params.backend
+                   if self.params.backend in SCAN_BACKENDS else "jnp")
+        self._stream = StreamingState(
+            self.index, capacity=capacity,
+            build_config=build_config or KHIConfig(builder="device"),
+            backend=backend)
+        self._note_mutation()
+        return self._stream
+
+    def _require_stream(self) -> StreamingState:
+        if self._stream is None:
+            raise RuntimeError("call enable_streaming() first")
+        return self._stream
+
+    def _note_mutation(self) -> None:
+        """Every mutation bumps the cache-key sequence; eager clear keeps
+        the store from holding unreachable entries."""
+        self._mutation_seq += 1
+        self._cache.clear()
+
+    def insert(self, vecs: np.ndarray, attrs: np.ndarray) -> np.ndarray:
+        """Append rows to the delta; returns their stable int64 ext ids.
+        Auto-compacts first when the batch would not fit the per-shard
+        deltas (the windowed-merge cadence, DESIGN.md §11)."""
+        st = self._require_stream()
+        vecs = np.ascontiguousarray(np.atleast_2d(vecs), np.float32)
+        attrs = np.ascontiguousarray(np.atleast_2d(attrs), np.float32)
+        b = vecs.shape[0]
+        t0 = time.perf_counter()
+        if not st.fits(b):
+            self.compact()
+            if not st.fits(b):
+                raise ValueError(
+                    f"insert batch of {b} rows cannot fit the per-shard "
+                    f"delta capacity {st.deltas[0].capacity} even after "
+                    f"compaction")
+        exts = st.insert(vecs, attrs)
+        self.stats["inserts"] += b
+        self.stats["ingest_seconds"] += time.perf_counter() - t0
+        self._note_mutation()
+        return exts
+
+    def delete(self, ext_ids) -> int:
+        """Tombstone rows by ext id (unknown / already-dead ids are
+        skipped). Delta rows NaN their buffer slots; base rows NaN their
+        attr row in a functionally-updated index pytree that every search
+        path — both fused kernels included — masks out via the NaN lane
+        convention, and the planner's cardinality estimators are refreshed
+        so dead rows never inflate dispatch (DESIGN.md §11). Returns the
+        number of rows actually deleted."""
+        st = self._require_stream()
+        t0 = time.perf_counter()
+        new_index, n_del = st.delete(np.asarray(ext_ids), self.index)
+        if new_index is not None:
+            self.index = new_index
+            if self._planner is not None:
+                self._planner.refresh_index(
+                    new_index, deleted_rows=st.deleted_locals())
+        self.stats["deletes"] += n_del
+        self.stats["ingest_seconds"] += time.perf_counter() - t0
+        if n_del:
+            self._note_mutation()
+        return n_del
+
+    def compact(self) -> dict:
+        """Fold delta + tombstones into a fresh epoch: gather the live
+        corpus, rebuild with the stored build config (device bulk builder
+        by default), publish through the ``swap_index`` drain protocol —
+        queued requests flush against the OLD delta-merged view first, so
+        compaction never changes an already-submitted request's answer —
+        then rebind the ext mapping. Returns the drained {ticket: Result}
+        dict, like swap_index."""
+        st = self._require_stream()
+        t0 = time.perf_counter()
+        vecs, attrs, exts = st.live_corpus(self.index)
+        if not vecs.shape[0]:
+            raise ValueError("cannot compact an index down to zero live "
+                             "rows (delete less or rebuild explicitly)")
+        if st.S > 1:
+            new_index = build_sharded(vecs, attrs, st.S, st.build_config)
+        else:
+            new_index = KHIIndex.build(vecs, attrs, st.build_config)
+        self._compacting = True
+        try:
+            drained = self.swap_index(new_index)
+        finally:
+            self._compacting = False
+        st.reset(self.index, exts)
+        self.stats["compactions"] += 1
+        self.stats["compact_seconds"] += time.perf_counter() - t0
+        self._note_mutation()
+        return drained
+
     # ------------------------------------------------------------- metrics
     def snapshot(self) -> dict:
         """JSON-able stats snapshot (traced_buckets -> sorted list)."""
@@ -387,4 +536,9 @@ class KHIService:
         s["epoch"] = self.epoch
         dq, ds = s["device_queries"], s["device_seconds"]
         s["device_qps"] = (dq / ds) if ds > 0 else None
+        if self._stream is not None:
+            s["streaming"] = True
+            s["n_live"] = self._stream.n_live
+            s["delta_fill"] = [seg.size for seg in self._stream.deltas]
+            s["tombstones"] = int(self._stream.base_deleted.sum())
         return s

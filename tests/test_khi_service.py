@@ -180,6 +180,54 @@ def test_swap_index_no_drain_runs_on_new_epoch(tiny_data, tiny_index,
     np.testing.assert_array_equal(out[t].ids, np.asarray(mi)[0])
 
 
+def test_swap_index_no_drain_back_to_back(tiny_data, tiny_index, workload):
+    """Two drain=False swaps before a flush: the queued request must run
+    on the FINAL epoch's index (never the intermediate one), both swaps
+    return empty drains, and the epoch/cache bookkeeping advances twice."""
+    vecs, attrs = tiny_data
+    Q, _, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=64))
+    t = svc.submit(Request(Q[0], lo[0], hi[0]))
+    mid = build_sharded(vecs, attrs, 2, KHIConfig(M=16, builder="device"))
+    final = build_sharded(vecs, attrs, 3, KHIConfig(M=16, builder="device"))
+    assert svc.swap_index(mid, drain=False) == {}
+    assert svc.swap_index(final, drain=False) == {}
+    assert svc.epoch == 2 and svc.snapshot()["epoch_swaps"] == 2
+    assert svc.snapshot()["cache_entries"] == 0
+    out = svc.flush()
+    mi, _, _ = search_sharded_emulated(final, Q[:1], lo[:1], hi[:1],
+                                       svc.params)
+    np.testing.assert_array_equal(out[t].ids, np.asarray(mi)[0])
+
+
+def test_cache_keys_invalidate_across_back_to_back_swaps(tiny_data,
+                                                         tiny_index,
+                                                         workload):
+    """Per-epoch cache keys: each swap makes prior entries unreachable
+    (a fresh device batch runs), and re-asking within an epoch hits."""
+    vecs, attrs = tiny_data
+    Q, _, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(8,), cache_size=64))
+    indexes = [tiny_index,
+               build_sharded(vecs, attrs, 2, KHIConfig(M=16,
+                                                       builder="device")),
+               build_sharded(vecs, attrs, 3, KHIConfig(M=16,
+                                                       builder="device"))]
+    for epoch, nxt in enumerate(indexes[1:], start=1):
+        before = svc.snapshot()
+        svc.search(Q[:3], lo[:3], hi[:3])          # miss: fresh epoch
+        svc.search(Q[:3], lo[:3], hi[:3])          # hit: same epoch
+        after = svc.snapshot()
+        assert after["batches"] == before["batches"] + 1
+        assert after["cache_hits"] == before["cache_hits"] + 3
+        assert after["cache_entries"] == 3
+        svc.swap_index(nxt)
+        assert svc.snapshot()["cache_entries"] == 0
+        assert svc.epoch == epoch
+
+
 def test_bad_bucket_config_rejected():
     with pytest.raises(ValueError, match="buckets"):
         ServeConfig(buckets=(32, 8))

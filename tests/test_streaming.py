@@ -1,0 +1,236 @@
+"""Streaming write path (DESIGN.md §11): property-based mutation-oracle
+suite plus targeted pins for compaction invariance, planner tombstone
+exclusion and the epoch-publish guard.
+
+The property tests drive random interleavings of insert / delete /
+re-delete / query / compact through ``KHIService`` and assert EXACT
+id/dist agreement with ``query_ref.StreamingOracle`` — a rebuild-from-
+scratch numpy twin — at every step, delta-merged and post-compaction,
+single-shard and sharded. Exactness is honest, not approximate: the
+corpus lives on a 1/32 quantization grid in [-2, 2) with d=16, so every
+squared distance is a sum of 16 exact multiples of 2^-10 — exactly
+representable in f32 regardless of summation order — and both sides
+break exact ties by (dist, ext) ascending. Queries run strategy="scan"
+(the exact path; the acceptance bar is scan-served lanes)."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.query_ref import Predicate, StreamingOracle
+from repro.core.sharded import build_sharded
+from repro.serve import KHIService, ServeConfig
+
+SCAN = eng.SearchParams(k=8, ef=32, c_n=16, strategy="scan")
+D, M = 16, 2
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "engine_e1.json"
+
+
+# ------------------------------------------------------------ grid corpus
+
+def _grid_vecs(rng, n):
+    return (rng.integers(-64, 64, size=(n, D)) / 32).astype(np.float32)
+
+
+def _grid_attrs(rng, n):
+    return rng.integers(0, 16, size=(n, M)).astype(np.float32)
+
+
+def _boxes(rng, b):
+    """Mixed-selectivity integer boxes: wide / narrow / provably empty."""
+    lo = rng.integers(0, 12, size=(b, M)).astype(np.float32)
+    hi = lo + rng.integers(0, 10, size=(b, M)).astype(np.float32)
+    kind = rng.integers(0, 4, size=b)
+    lo[kind == 0], hi[kind == 0] = 0.0, 15.0           # whole corpus
+    hi[kind == 3] = lo[kind == 3] - 1.0                # empty range
+    return lo, hi
+
+
+def _make_service(vecs, attrs, n_shards, capacity):
+    cfg = KHIConfig(M=8, builder="device")
+    index = (build_sharded(vecs, attrs, n_shards, cfg) if n_shards > 1
+             else KHIIndex.build(vecs, attrs, cfg))
+    svc = KHIService(index, SCAN,
+                     config=ServeConfig(buckets=(4, 8), cache_size=64))
+    svc.enable_streaming(capacity=capacity, build_config=cfg)
+    return svc
+
+
+def _check(svc, oracle, rng, nq=4):
+    """One query batch: service ids must equal the oracle's exactly (ids,
+    order, -1 padding) and every distance must be the bit-exact f32 of
+    the f64 recomputation (the grid guarantees representability)."""
+    Q = _grid_vecs(rng, nq)
+    lo, hi = _boxes(rng, nq)
+    ids, dists = svc.search(Q, lo, hi)
+    assert ids.dtype == np.int64
+    for i in range(nq):
+        want = oracle.query(Q[i], Predicate(lo[i], hi[i]), SCAN.k)
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, want)
+        assert np.all(np.isinf(dists[i][len(want):]))
+        assert np.all(ids[i][len(want):] == -1)
+        for j, e in enumerate(want):
+            v = oracle._rows[int(e)][0].astype(np.float64)
+            d2 = np.float32(((v - Q[i].astype(np.float64)) ** 2).sum())
+            assert dists[i][j] == d2, (i, j, e)
+
+
+# --------------------------------------------- property: mutation oracle
+
+def _run_interleaving(seed, n_shards, n_ops=12, n0=96, capacity=32):
+    rng = np.random.default_rng(seed)
+    vecs, attrs = _grid_vecs(rng, n0), _grid_attrs(rng, n0)
+    svc = _make_service(vecs, attrs, n_shards, capacity)
+    oracle = StreamingOracle(vecs, attrs)
+    _check(svc, oracle, np.random.default_rng(seed ^ 0xA5))
+    for step in range(n_ops):
+        op = ("insert", "insert", "delete", "delete", "query",
+              "compact")[rng.integers(0, 6)]
+        if op == "insert":
+            b = int(rng.integers(1, 9))
+            nv, na = _grid_vecs(rng, b), _grid_attrs(rng, b)
+            if rng.random() < 0.5 and len(oracle):
+                # exact duplicate of a live row: forces a distance tie
+                # that only the (dist, ext) tie-break contract resolves
+                le, lv, la = oracle.corpus()
+                j = int(rng.integers(0, len(le)))
+                nv[0], na[0] = lv[j], la[j]
+            exts = svc.insert(nv, na)
+            np.testing.assert_array_equal(exts, oracle.insert(nv, na))
+        elif op == "delete":
+            # draw from the FULL ext history: dead/unknown ids must be
+            # skipped identically on both sides (idempotent deletes)
+            pick = rng.choice(oracle.next_ext,
+                              size=int(rng.integers(1, 5)), replace=False)
+            assert svc.delete(pick) == oracle.delete(pick)
+            assert len(oracle) > 0
+        elif op == "query":
+            _check(svc, oracle, np.random.default_rng(seed * 1000 + step))
+        else:
+            svc.compact()
+            _check(svc, oracle, np.random.default_rng(seed * 77 + step))
+    svc.compact()                       # final fold must change nothing
+    _check(svc, oracle, np.random.default_rng(seed ^ 0x5A))
+    assert svc.snapshot()["n_live"] == len(oracle)
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_mutation_oracle_single_shard(seed):
+    _run_interleaving(seed, n_shards=1)
+
+
+@settings(max_examples=3)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_mutation_oracle_sharded(seed):
+    _run_interleaving(seed, n_shards=3, n_ops=8)
+
+
+# ------------------------------------------------------- targeted pins
+
+def test_insert_past_capacity_auto_compacts():
+    rng = np.random.default_rng(11)
+    vecs, attrs = _grid_vecs(rng, 64), _grid_attrs(rng, 64)
+    svc = _make_service(vecs, attrs, n_shards=1, capacity=16)
+    oracle = StreamingOracle(vecs, attrs)
+    for _ in range(5):
+        nv, na = _grid_vecs(rng, 8), _grid_attrs(rng, 8)
+        np.testing.assert_array_equal(svc.insert(nv, na),
+                                      oracle.insert(nv, na))
+    snap = svc.snapshot()
+    assert snap["compactions"] >= 2    # 40 rows through a 16-row delta
+    _check(svc, oracle, np.random.default_rng(12))
+    # a single batch larger than the whole delta can never fit
+    with pytest.raises(ValueError, match="capacity"):
+        svc.insert(_grid_vecs(rng, 17), _grid_attrs(rng, 17))
+
+
+def test_swap_index_guarded_while_streaming():
+    rng = np.random.default_rng(3)
+    vecs, attrs = _grid_vecs(rng, 64), _grid_attrs(rng, 64)
+    svc = _make_service(vecs, attrs, n_shards=1, capacity=8)
+    svc.insert(_grid_vecs(rng, 2), _grid_attrs(rng, 2))
+    rebuilt = KHIIndex.build(vecs, attrs, KHIConfig(M=8, builder="device"))
+    with pytest.raises(RuntimeError, match="compact"):
+        svc.swap_index(rebuilt)
+    with pytest.raises(RuntimeError, match="already enabled"):
+        svc.enable_streaming()
+    svc.compact()                      # the sanctioned publisher still works
+    assert svc.epoch == 1
+
+
+def test_planner_cardinality_excludes_tombstones():
+    """strategy="auto": after deleting every row inside a box, the routing
+    bound for that box drops by exactly the dead in-range rows and the
+    served answer is all -1 (dead rows can neither win nor inflate
+    dispatch estimates — DESIGN.md §11)."""
+    rng = np.random.default_rng(5)
+    vecs, attrs = _grid_vecs(rng, 200), _grid_attrs(rng, 200)
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8, builder="device"))
+    p = eng.SearchParams(k=8, ef=32, c_n=16, strategy="auto",
+                         scan_threshold=64)
+    svc = KHIService(idx, p, config=ServeConfig(buckets=(4,), cache_size=0))
+    svc.enable_streaming(capacity=32)
+    lo = np.array([[0.0, 0.0]], np.float32)
+    hi = np.array([[3.0, 3.0]], np.float32)
+    in_box = ((attrs >= lo[0]) & (attrs <= hi[0])).all(axis=1)
+    assert in_box.sum() > 0
+    card0 = svc._planner.plan(lo, hi).card[0]
+    assert card0 >= in_box.sum()
+    assert svc.delete(np.nonzero(in_box)[0]) == int(in_box.sum())
+    card1 = svc._planner.plan(lo, hi).card[0]
+    assert card1 <= card0 - in_box.sum()
+    ids, dists = svc.search(vecs[:1], lo, hi)
+    assert np.all(ids == -1) and np.all(np.isinf(dists))
+
+
+def test_delete_then_reinsert_gets_fresh_ext():
+    """Ext ids are never reused: re-inserting a deleted row's payload
+    yields a NEW id, and the old one stays dead across a compaction."""
+    rng = np.random.default_rng(9)
+    vecs, attrs = _grid_vecs(rng, 64), _grid_attrs(rng, 64)
+    svc = _make_service(vecs, attrs, n_shards=1, capacity=16)
+    assert svc.delete([7]) == 1
+    (new_ext,) = svc.insert(vecs[7:8], attrs[7:8])
+    assert new_ext == 64
+    svc.compact()
+    assert svc.delete([7]) == 0        # still dead after the fold
+    assert svc.delete([new_ext]) == 1  # the reincarnation dies separately
+
+
+# ------------------------------------------------- golden invariance
+
+def test_compact_noop_answers_golden_bit_identically(tiny_index,
+                                                     tiny_queries):
+    """Compacting an empty delta with zero tombstones publishes an epoch
+    that answers the committed golden workload bit-identically — ids,
+    dists AND hops (scripts/gen_golden_e1.py): the fold is a true no-op
+    when there is nothing to merge."""
+    golden = json.loads(GOLDEN.read_text())["backends"]["jnp"]
+    p = eng.SearchParams(k=10, ef=32, c_e=10, c_n=16)
+    svc = KHIService(tiny_index, p,
+                     config=ServeConfig(buckets=(8,), cache_size=0))
+    # compaction must rebuild with the ORIGINAL build config (conftest's
+    # tiny_index), not the streaming default, for the rebuild to be
+    # deterministic-identical
+    svc.enable_streaming(capacity=64,
+                         build_config=KHIConfig(M=16, merge_chunk=32))
+    svc.compact()
+    assert svc.epoch == 1 and svc.snapshot()["tombstones"] == 0
+    Q, preds = tiny_queries
+    ids, dists, hops = eng.search_batch(svc.index, Q[:8], preds[:8], p)
+    np.testing.assert_array_equal(ids, np.asarray(golden["ids"]))
+    np.testing.assert_array_equal(hops, np.asarray(golden["hops"]))
+    np.testing.assert_array_equal(
+        np.asarray(dists, np.float32),
+        np.asarray(golden["dists"], np.float64).astype(np.float32))
