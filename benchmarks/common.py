@@ -159,9 +159,10 @@ def engine_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
 def planner_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
                    backend: str = "jnp", strategy: str = "auto",
                    scan_threshold: int = 0, expand_width: int = 1,
-                   repeats: int = 1):
-    """Stage + run the selectivity-adaptive planner (DESIGN.md §10) over
-    one workload; returns (ids, hops, seconds, Plan) for the best
+                   quant: str = "none", rerank_mult: int = 4,
+                   node_scan_threshold: int = 0, repeats: int = 1):
+    """Stage + run the selectivity-adaptive planner (DESIGN.md §10/§12)
+    over one workload; returns (ids, hops, seconds, Plan) for the best
     wall-clock run. Shares engine_search's staging memo (one device
     transfer per index, one Planner per SearchParams), so planner rows
     and graph rows in a sweep can't drift in how they are measured."""
@@ -169,7 +170,9 @@ def planner_search(index: KHIIndex, Q, preds, k: int, ef: int, *,
 
     params = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=backend,
                           expand_width=expand_width, strategy=strategy,
-                          scan_threshold=scan_threshold)
+                          scan_threshold=scan_threshold, quant=quant,
+                          rerank_mult=rerank_mult,
+                          node_scan_threshold=node_scan_threshold)
     planner = _staged_planner(index, params)
     qlo, qhi = _boxes(preds)
     Q = np.asarray(Q, np.float32)

@@ -1,9 +1,13 @@
 """Kernel + engine microbenchmarks: Pallas (interpret) vs jnp oracle
-correctness-at-scale, and the jitted batched engine's QPS vs the numpy
-reference engine."""
+correctness-at-scale, the jitted batched engine's QPS vs the numpy
+reference engine, and the quantized replica paths (DESIGN.md §12) —
+wall-clock per variant plus the analytic HBM bytes each scored row
+streams, with the byte-ratio and recall@10 gates asserted inline so a
+CI re-run fails loudly if the quantized path ever degrades."""
 
 from __future__ import annotations
 
+import functools
 import time
 
 import numpy as np
@@ -16,9 +20,11 @@ from repro.core.engine import SearchParams, device_put_index, make_search_fn
 from repro.core.khi import KHIConfig, KHIIndex
 from repro.data import make_dataset, make_queries
 from repro.kernels import ops
+from repro.kernels import quant as kquant
 from repro.kernels.ref import l2dist_qn_ref
 
-from .common import SCALES, save_results, scaled_spec
+from .common import SCALES, planner_search, recall_at_k, save_results, \
+    scaled_spec
 
 
 def _time(fn, *args, iters=3):
@@ -29,7 +35,7 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def run(scale: str = "small"):
+def run(scale: str = "smoke"):
     s = SCALES[scale]
     rng = np.random.default_rng(0)
     out = {}
@@ -68,16 +74,126 @@ def run(scale: str = "small"):
                          jit_qps=64 / t_jit, numpy_qps=64 / t_np)
     print(f"[kernels] engine jit {64/t_jit:.0f} QPS vs numpy ref "
           f"{64/t_np:.0f} QPS (CPU)", flush=True)
+
+    # ---- quantized replica paths (DESIGN.md §12) --------------------
+    # Wall-clock on this interpret-mode CPU box mostly tracks python
+    # overhead; the hardware story is the ANALYTIC bytes-per-row column
+    # (what an HBM-bound scan actually streams), so both are recorded
+    # and the byte ratios are asserted, not the microsecond deltas.
+    c = jnp.asarray(vecs)
+    av = jnp.asarray(attrs)
+    d = int(c.shape[1])
+    bytes_row = {q: kquant.quant_bytes_per_row(d, q) for q in kquant.QUANTS}
+    ratios = {q: bytes_row["none"] / bytes_row[q] for q in ("bf16", "int8")}
+    assert ratios["bf16"] >= 2.0 and ratios["int8"] >= 2.0, \
+        f"quant replica must at least halve scored bytes/row: {ratios}"
+
+    bf_c, _ = kquant.quant_replica(c, "bf16")
+    q8_c, q8_s = kquant.quant_replica(c, "int8")
+    Bq = 16
+    qs, ls, hs = qv[:Bq], qlo[:Bq], qhi[:Bq]
+
+    # brute-scan top-k: f32 vs bf16 vs int8+scale, kernel and jnp oracle
+    scan_ref = jax.jit(functools.partial(ops.scan_topk_ref, k=10))
+    scan_q8_ref = jax.jit(functools.partial(ops.scan_topk_q8_ref, k=10))
+    t_scan = {
+        "none_ref": _time(scan_ref, c, av, qs, ls, hs),
+        "bf16_ref": _time(scan_ref, bf_c, av, qs, ls, hs),
+        "int8_ref": _time(scan_q8_ref, q8_c, q8_s, av, qs, ls, hs),
+        "none_kernel": _time(lambda: ops.scan_topk(
+            c, av, qs, ls, hs, k=10, interpret=True), iters=2),
+        "bf16_kernel": _time(lambda: ops.scan_topk(
+            bf_c, av, qs, ls, hs, k=10, interpret=True), iters=2),
+        "int8_kernel": _time(lambda: ops.scan_topk_q8(
+            q8_c, q8_s, av, qs, ls, hs, k=10, interpret=True), iters=2),
+    }
+    out["scan_topk_quant"] = dict(
+        batch=Bq, n=int(c.shape[0]), d=d, bytes_per_row=bytes_row,
+        byte_ratio=ratios, **{f"{k}_us": v * 1e6 for k, v in t_scan.items()})
+    print(f"[kernels] scan_topk bytes/row f32={bytes_row['none']} "
+          f"bf16={bytes_row['none']}/{ratios['bf16']:.2f}x "
+          f"int8={bytes_row['none']}/{ratios['int8']:.2f}x; ref us "
+          f"f32={t_scan['none_ref']*1e6:.0f} "
+          f"bf16={t_scan['bf16_ref']*1e6:.0f} "
+          f"int8={t_scan['int8_ref']*1e6:.0f}", flush=True)
+
+    # gather-filter-L2: the graph walk's per-hop scorer, f32 vs int8
+    C = 64
+    gidx = jnp.asarray(rng.integers(0, c.shape[0], size=(Bq, C)), jnp.int32)
+    g_ref = jax.jit(ops.gather_l2_filter_ref)
+    g_q8_ref = jax.jit(ops.gather_l2_filter_q8_ref)
+    d_f32 = np.asarray(g_ref(gidx, c, av, qs, ls, hs))
+    d_q8 = np.asarray(g_q8_ref(gidx, q8_c, q8_s, av, qs, ls, hs))
+    assert np.array_equal(np.isinf(d_f32), np.isinf(d_q8)), \
+        "quantization must never change which lanes pass the predicate"
+    fin = np.isfinite(d_f32)
+    g_err = float(np.max(np.abs(d_f32[fin] - d_q8[fin]), initial=0.0))
+    t_gather = {
+        "none_ref": _time(g_ref, gidx, c, av, qs, ls, hs),
+        "int8_ref": _time(g_q8_ref, gidx, q8_c, q8_s, av, qs, ls, hs),
+        "none_kernel": _time(lambda: ops.gather_l2_filtered(
+            gidx, c, av, qs, ls, hs, interpret=True), iters=2),
+        "int8_kernel": _time(lambda: ops.gather_l2_filtered_q8(
+            gidx, q8_c, q8_s, av, qs, ls, hs, interpret=True), iters=2),
+    }
+    out["gather_l2_filter_quant"] = dict(
+        batch=Bq, cands=C, d=d, bytes_per_cand=dict(
+            none=bytes_row["none"], int8=bytes_row["int8"]),
+        byte_ratio_int8=ratios["int8"], max_abs_err=g_err,
+        **{f"{k}_us": v * 1e6 for k, v in t_gather.items()})
+    print(f"[kernels] gather_l2_filter int8 {ratios['int8']:.2f}x fewer "
+          f"bytes/candidate, quant err {g_err:.2e}", flush=True)
+
+    # end-to-end gate: quantized scan + exact f32 rerank through the
+    # planner vs the f32 scan oracle — recall@10 >= 0.99 is the CI bar
+    # (ISSUE 7 satellite 5); bit-identity fraction recorded alongside.
+    ids0, _, t0_, _ = planner_search(idx, Q, preds, 10, 64, strategy="scan")
+    gt = [row[row >= 0] for row in ids0]
+    out["quant_recall"] = {}
+    for quant in ("bf16", "int8"):
+        idsq, _, tq, _ = planner_search(idx, Q, preds, 10, 64,
+                                        strategy="scan", quant=quant)
+        rec = recall_at_k(vecs, attrs, Q, preds, idsq, 10, gt=gt)
+        bit = float(np.all(idsq == ids0, axis=1).mean())
+        assert rec >= 0.99, f"quant={quant} recall@10 {rec:.4f} < 0.99"
+        out["quant_recall"][quant] = dict(
+            recall_at_10=rec, bit_identical_frac=bit,
+            qps=len(Q) / tq, f32_qps=len(Q) / t0_)
+        print(f"[kernels] quant={quant} rerank recall@10 {rec:.4f} "
+              f"(bit-identical lanes {bit:.2f})", flush=True)
+
     save_results("kernels", out)
     return out
 
 
 def csv_lines(out):
     k = out["l2dist_qn"]
-    return [
+    lines = [
         f"kernel_l2dist_qn,{k['pallas_interpret_us']:.0f},"
         f"ref_us={k['ref_us']:.0f};max_err={k['max_err']:.1e}",
         f"engine_jit_batch64,{out['engine']['jit_batch_ms'] * 1e3:.0f},"
         f"jit_qps={out['engine']['jit_qps']:.0f}"
         f";numpy_qps={out['engine']['numpy_qps']:.0f}",
     ]
+    s = out["scan_topk_quant"]
+    for q in ("bf16", "int8"):
+        lines.append(
+            f"kernel_scan_topk_{q},{s[f'{q}_ref_us']:.0f},"
+            f"f32_us={s['none_ref_us']:.0f}"
+            f";byte_ratio={s['byte_ratio'][q]:.2f}")
+    g = out["gather_l2_filter_quant"]
+    lines.append(
+        f"kernel_gather_l2_filter_int8,{g['int8_ref_us']:.0f},"
+        f"f32_us={g['none_ref_us']:.0f}"
+        f";byte_ratio={g['byte_ratio_int8']:.2f}"
+        f";max_err={g['max_abs_err']:.1e}")
+    for q, r in out["quant_recall"].items():
+        lines.append(
+            f"quant_rerank_{q},{1e6 / r['qps']:.0f},"
+            f"recall10={r['recall_at_10']:.4f}"
+            f";bit_identical={r['bit_identical_frac']:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -43,6 +43,17 @@ class KHIServeConfig:
     # crossover ships with experiments/bench_selectivity.json
     # (benchmarks/selectivity_bench.py recalibrates it per run).
     scan_threshold: int = 100_000
+    # Quantized score path (DESIGN.md §12): "none" | "bf16" | "int8".
+    # The graph walk and the brute scan stream the compressed replica
+    # (1/2 resp. ~1/4 the HBM gather bytes at d=768) and the engine
+    # reranks the over-fetched top k*rerank_mult exactly in f32 —
+    # "none" keeps the seed-exact single-pass path as the default.
+    quant: str = "none"
+    rerank_mult: int = 4
+    # Per-node hybrid dispatch (DESIGN.md §12, strategy="hybrid"): brute
+    # scan antichain subtrees up to this many rows as contiguous DFS
+    # windows, graph-walk the rest. 0 inherits scan_threshold.
+    node_scan_threshold: int = 0
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
     cache_size: int = 65536             # LRU result-cache entries
     # Streaming write path (DESIGN.md §11): per-shard delta-segment rows
@@ -60,7 +71,10 @@ class KHIServeConfig:
                             router=self.router,
                             frontier_cap=self.frontier_cap,
                             strategy=self.strategy,
-                            scan_threshold=self.scan_threshold)
+                            scan_threshold=self.scan_threshold,
+                            quant=self.quant,
+                            rerank_mult=self.rerank_mult,
+                            node_scan_threshold=self.node_scan_threshold)
 
     def serve_config(self):
         from ..serve.khi_service import ServeConfig

@@ -55,14 +55,52 @@ from .engine import SCAN_BACKENDS
 from .khi import KHIConfig
 from .router import deleted_per_node
 from .sharded import ShardedKHI
+from .util import pow2_at_least
 
 __all__ = ["DeltaSegment", "StreamingState"]
 
 _EXT_SENTINEL = np.iinfo(np.int64).max
 
+_pow2 = pow2_at_least
 
-def _pow2(b: int) -> int:
-    return 1 << max(0, (b - 1).bit_length())
+
+@functools.lru_cache(maxsize=None)
+def _scan_rerank_fn(kq: int, k: int, quant: str, use_kernel: bool,
+                    interpret: bool):
+    """Jitted quantized scan + exact f32 rerank over one delta buffer
+    (DESIGN.md §12): over-fetch ``kq`` on the compressed replica, rescore
+    through the f32 gather, (dist, id)-lexicographic top-``k``. Slot order
+    equals ext order inside a segment, so the lowest-id tie-break stays
+    lowest-ext — the merge contract is unchanged."""
+    from .engine import _lex_topk
+    if use_kernel:
+        from ..kernels.gather_l2_filter import gather_l2_filter_blocked_raw
+        from ..kernels.scan_topk import scan_topk_q8_raw, scan_topk_raw
+
+        def f(vecs, attrs, qvecs, qscale, q, qlo, qhi):
+            if quant == "bf16":
+                cids, _ = scan_topk_raw(qvecs, attrs, q, qlo, qhi, k=kq,
+                                        interpret=interpret)
+            else:
+                cids, _ = scan_topk_q8_raw(qvecs, qscale, attrs, q, qlo,
+                                           qhi, k=kq, interpret=interpret)
+            exact_d = gather_l2_filter_blocked_raw(cids, vecs, attrs, q,
+                                                   qlo, qhi,
+                                                   interpret=interpret)
+            return _lex_topk(cids, exact_d, k)
+    else:
+        from ..kernels.ref import (gather_l2_filter_ref, scan_topk_q8_ref,
+                                   scan_topk_ref)
+
+        def f(vecs, attrs, qvecs, qscale, q, qlo, qhi):
+            if quant == "bf16":
+                cids, _ = scan_topk_ref(qvecs, attrs, q, qlo, qhi, kq)
+            else:
+                cids, _ = scan_topk_q8_ref(qvecs, qscale, attrs, q, qlo,
+                                           qhi, kq)
+            exact_d = gather_l2_filter_ref(cids, vecs, attrs, q, qlo, qhi)
+            return _lex_topk(cids, exact_d, k)
+    return jax.jit(f)
 
 
 @functools.lru_cache(maxsize=None)
@@ -112,15 +150,21 @@ class DeltaSegment:
     """
 
     def __init__(self, capacity: int, d: int, m: int, *,
-                 backend: str = "jnp", interpret: Optional[bool] = None):
+                 backend: str = "jnp", interpret: Optional[bool] = None,
+                 quant: str = "none", rerank_mult: int = 4):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if backend not in SCAN_BACKENDS:
             raise ValueError(
                 f"delta scans need a scan-capable backend {SCAN_BACKENDS}, "
                 f"got {backend!r}")
+        from ..kernels.quant import QUANTS
+        if quant not in QUANTS:
+            raise ValueError(f"quant must be one of {QUANTS}, got {quant!r}")
         self.capacity = int(capacity)
         self.d, self.m = int(d), int(m)
+        self.quant = quant
+        self.rerank_mult = int(rerank_mult)
         self._use_kernel = backend == "pallas_gather_l2_filter"
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -130,6 +174,17 @@ class DeltaSegment:
     def clear(self) -> None:
         self.vecs = jnp.zeros((self.capacity, self.d), jnp.float32)
         self.attrs = jnp.full((self.capacity, self.m), jnp.nan, jnp.float32)
+        # quantized replica of the append buffer (DESIGN.md §12): kept
+        # coherent on every insert; deletes only NaN attrs (the predicate
+        # masks the lane on every path, so stale quant rows are harmless)
+        if self.quant == "bf16":
+            self.qvecs = jnp.zeros((self.capacity, self.d), jnp.bfloat16)
+            self.qscale = None
+        elif self.quant == "int8":
+            self.qvecs = jnp.zeros((self.capacity, self.d), jnp.int8)
+            self.qscale = jnp.ones((self.capacity, 1), jnp.float32)
+        else:
+            self.qvecs = self.qscale = None
         self.ext_ids = np.full(self.capacity, -1, np.int64)
         self.live = np.zeros(self.capacity, bool)
         self.size = 0                       # append high-water mark
@@ -159,6 +214,15 @@ class DeltaSegment:
         a[:b] = attrs
         self.vecs = _write_rows(self.vecs, jnp.asarray(v), jnp.int32(start))
         self.attrs = _write_rows(self.attrs, jnp.asarray(a), jnp.int32(start))
+        if self.quant == "bf16":
+            self.qvecs = _write_rows(
+                self.qvecs, jnp.asarray(v).astype(jnp.bfloat16),
+                jnp.int32(start))
+        elif self.quant == "int8":
+            from ..kernels.quant import quantize_rows_i8
+            qv, qs = quantize_rows_i8(jnp.asarray(v))
+            self.qvecs = _write_rows(self.qvecs, qv, jnp.int32(start))
+            self.qscale = _write_rows(self.qscale, qs, jnp.int32(start))
         slots = np.arange(start, start + b)
         self.ext_ids[slots] = ext_ids
         self.live[slots] = True
@@ -182,9 +246,16 @@ class DeltaSegment:
         if self.size == 0:
             return None
         k_eff = min(k, self.capacity)
-        fn = _scan_fn(k_eff, self._use_kernel, self._interpret)
-        ids, dd = fn(self.vecs, self.attrs, jnp.asarray(q),
-                     jnp.asarray(qlo), jnp.asarray(qhi))
+        if self.quant == "none":
+            fn = _scan_fn(k_eff, self._use_kernel, self._interpret)
+            ids, dd = fn(self.vecs, self.attrs, jnp.asarray(q),
+                         jnp.asarray(qlo), jnp.asarray(qhi))
+        else:
+            kq = min(max(k_eff, k_eff * self.rerank_mult), self.capacity)
+            fn = _scan_rerank_fn(kq, k_eff, self.quant, self._use_kernel,
+                                 self._interpret)
+            ids, dd = fn(self.vecs, self.attrs, self.qvecs, self.qscale,
+                         jnp.asarray(q), jnp.asarray(qlo), jnp.asarray(qhi))
         return np.asarray(ids), np.asarray(dd)
 
     def live_rows(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -211,14 +282,16 @@ class StreamingState:
 
     def __init__(self, index, *, capacity: int,
                  build_config: Optional[KHIConfig] = None,
-                 backend: str = "jnp", interpret: Optional[bool] = None):
+                 backend: str = "jnp", interpret: Optional[bool] = None,
+                 quant: str = "none", rerank_mult: int = 4):
         self._sharded = isinstance(index, ShardedKHI)
         di = index.di if self._sharded else index
         self.S = index.num_shards if self._sharded else 1
         self.build_config = build_config or KHIConfig(builder="device")
         d, m = di.vecs.shape[-1], di.attrs.shape[-1]
         self.deltas: List[DeltaSegment] = [
-            DeltaSegment(capacity, d, m, backend=backend, interpret=interpret)
+            DeltaSegment(capacity, d, m, backend=backend, interpret=interpret,
+                         quant=quant, rerank_mult=rerank_mult)
             for _ in range(self.S)]
         self._bind_base(index, ext_of_base=None)
         self.next_ext = self.n_total

@@ -83,10 +83,11 @@ from . import beam
 from .khi import KHIIndex
 from .router import (HostCardEstimator, ROUTERS, required_frontier_cap,
                      resolve_router)
+from .util import pow2_at_least
 
 __all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS",
-           "STRATEGIES", "SCAN_BACKENDS", "DEFAULT_SCAN_FRAC", "Scorer",
-           "Plan", "Planner",
+           "STRATEGIES", "SCAN_BACKENDS", "DEFAULT_SCAN_FRAC", "QUANTS",
+           "Scorer", "Plan", "Planner", "with_quant_replica",
            "device_put_index", "resolve_dist_ids", "resolve_scorer",
            "search_batch", "make_search_fn", "required_scan_budget",
            "required_stack_cap", "required_frontier_cap",
@@ -94,11 +95,21 @@ __all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS",
 
 BACKENDS = ("jnp", "pallas_l2", "pallas_gather_l2", "pallas_gather_l2_filter")
 
-# Execution strategies (DESIGN.md §10): "graph" is the two-phase tree-routed
-# greedy search, "scan" the exact predicate-fused brute scan
+# Execution strategies (DESIGN.md §10, §12): "graph" is the two-phase
+# tree-routed greedy search, "scan" the exact predicate-fused brute scan
 # (kernels/scan_topk.py), "auto" the per-query planner dispatch on the
-# routing sweep's in-range cardinality bound.
-STRATEGIES = ("graph", "scan", "auto")
+# routing sweep's in-range cardinality bound, "hybrid" the per-NODE
+# dispatch — small antichain subtrees brute-scan as contiguous DFS
+# windows (kernels/scan_topk.py windowed form) while lanes with large
+# nodes graph-walk, the two partial top-k streams merging under the
+# (dist, id) lexicographic contract.
+STRATEGIES = ("graph", "scan", "auto", "hybrid")
+
+# Quantized score-path modes (DESIGN.md §12): the corpus replica the
+# scoring kernels stream ("none" = f32 vecs). Non-"none" modes over-fetch
+# top-(k * rerank_mult) on the compressed replica and rerank through the
+# exact f32 gather path, so final ids/dists stay f32-exact.
+QUANTS = ("none", "bf16", "int8")
 
 # Backends the scan strategy can execute on: the scan is predicate-masked
 # inside the pass, so it needs either the fused filter kernel or the jnp
@@ -134,6 +145,14 @@ class DeviceIndex:
     count: jax.Array   # (P,) int32
     order: jax.Array   # (n,) int32
     root: jax.Array    # () int32
+    # quantized corpus replica (DESIGN.md §12) — None unless
+    # SearchParams.quant != "none". ``qvecs`` is (n, d) bf16 or int8;
+    # ``qscale`` the int8 per-row (n, 1) f32 scale plane (None for bf16).
+    # Trailing optional pytree children: stacking, dataclasses.replace
+    # (the streaming tombstone path) and old construction sites all work
+    # unchanged.
+    qvecs: Optional[jax.Array] = None
+    qscale: Optional[jax.Array] = None
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -155,13 +174,14 @@ class DeviceIndex:
 def device_put_index(index: KHIIndex, *, pad_nodes: Optional[int] = None,
                      pad_n: Optional[int] = None,
                      pad_height: Optional[int] = None,
-                     vec_dtype=None) -> DeviceIndex:
+                     vec_dtype=None, quant: str = "none") -> DeviceIndex:
     """Flatten a host KHIIndex into device arrays (optionally padded so that
     multiple shards can be stacked into one leading-axis array).
 
     ``vec_dtype=jnp.bfloat16`` stores corpus vectors in bf16 (distances still
     accumulate in f32) — halves the dominant HBM term of the search engine
-    (§Perf iteration)."""
+    (§Perf iteration). ``quant`` ("bf16"/"int8") additionally attaches the
+    compressed score replica via ``with_quant_replica`` (DESIGN.md §12)."""
     t = index.tree
     n, H = index.n, index.height
     P = t.num_nodes
@@ -185,7 +205,7 @@ def device_put_index(index: KHIIndex, *, pad_nodes: Optional[int] = None,
     nb[:n, :H] = nbrs
     root = int(np.nonzero(t.parent < 0)[0][0])
     vd = vec_dtype or jnp.float32
-    return DeviceIndex(
+    di = DeviceIndex(
         vecs=jnp.asarray(padn(index.vecs), dtype=vd),
         attrs=jnp.asarray(padn(index.attrs, fill=np.float32(np.inf))),
         nbrs=jnp.asarray(nb),
@@ -200,6 +220,24 @@ def device_put_index(index: KHIIndex, *, pad_nodes: Optional[int] = None,
         order=jnp.asarray(padn(t.order)),
         root=jnp.asarray(root, jnp.int32),
     )
+    if quant != "none":
+        di = with_quant_replica(di, quant)
+    return di
+
+
+def with_quant_replica(di: DeviceIndex, quant: str) -> DeviceIndex:
+    """Functional copy of ``di`` carrying the compressed corpus replica
+    for ``quant`` (DESIGN.md §12). Pure jnp over the last two axes of
+    ``vecs``, so it works on a plain (n, d) index and on the shard-
+    stacked (S, n, d) form alike; ``quant="none"`` drops any replica."""
+    from ..kernels.quant import QUANTS, quant_replica
+
+    if quant == "none":
+        return dataclasses.replace(di, qvecs=None, qscale=None)
+    if quant not in QUANTS:
+        raise ValueError(f"unknown quant {quant!r}; expected one of {QUANTS}")
+    qvecs, qscale = quant_replica(di.vecs, quant)
+    return dataclasses.replace(di, qvecs=qvecs, qscale=qscale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,6 +266,20 @@ class SearchParams:
     # fixed default is safe across index sizes, unlike stack_cap whose
     # height+1 bound is)
     frontier_cap: int = 0
+    # quantized score path (DESIGN.md §12): which compressed replica the
+    # scoring kernels stream, one of QUANTS. Non-"none" over-fetches
+    # top-(k * rerank_mult) candidates on the replica, then reranks them
+    # through the exact f32 gather_l2_filter path — final ids/dists are
+    # f32-exact, bit-identical to the unquantized oracle whenever the
+    # true top-k survives the over-fetch.
+    quant: str = "none"
+    rerank_mult: int = 4
+    # "hybrid" per-node dispatch threshold in absolute object units: an
+    # antichain node brute-scans as a contiguous DFS window iff its
+    # subtree count is <= this. 0 = inherit the resolved scan_threshold
+    # (so by default every lane "auto" would scan becomes a pure
+    # windowed scan that visits only its in-range windows).
+    node_scan_threshold: int = 0
 
     def __post_init__(self):
         if self.expand_width < 1:
@@ -261,6 +313,16 @@ class SearchParams:
         if self.frontier_cap < 0:
             raise ValueError(f"frontier_cap must be >= 0 (0 = derive from "
                              f"the index), got {self.frontier_cap}")
+        if self.quant not in QUANTS:
+            raise ValueError(f"unknown quant {self.quant!r}; expected one "
+                             f"of {QUANTS}")
+        if self.rerank_mult < 1:
+            raise ValueError(f"rerank_mult must be >= 1, "
+                             f"got {self.rerank_mult}")
+        if self.node_scan_threshold < 0:
+            raise ValueError(f"node_scan_threshold must be >= 0 (0 = "
+                             f"inherit scan_threshold), "
+                             f"got {self.node_scan_threshold}")
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
@@ -327,7 +389,8 @@ def _check_strategy_combo(p: SearchParams) -> None:
     """Reject strategy combinations that cannot execute (DESIGN.md §10) —
     checked by every runtime entry point via validate_search_params, with
     actionable messages (satellite contract, tests/test_planner.py)."""
-    if p.strategy in ("scan", "auto") and p.backend not in SCAN_BACKENDS:
+    if p.strategy in ("scan", "auto", "hybrid") \
+            and p.backend not in SCAN_BACKENDS:
         unfused = [b for b in BACKENDS if b not in SCAN_BACKENDS]
         raise ValueError(
             f"strategy={p.strategy!r} is incompatible with backend "
@@ -336,14 +399,24 @@ def _check_strategy_combo(p: SearchParams) -> None:
             f"('pallas_gather_l2_filter') or the jnp mask oracle ('jnp'); "
             f"the unfused pallas backends {unfused} have no filter form. "
             f"Switch backend, or force strategy='graph'.")
-    if p.strategy == "auto" and p.router != "level":
+    if p.strategy in ("auto", "hybrid") and p.router != "level":
         raise ValueError(
-            f"strategy='auto' requires router='level' (got "
+            f"strategy={p.strategy!r} requires router='level' (got "
             f"{p.router!r}): the DFS router early-stops after c_e entries "
             f"and never sweeps the full scannable antichain, so its "
-            f"subtree-count sum is not an in-range cardinality bound "
+            f"subtree-count sum is not an in-range cardinality bound and "
+            f"its visited node set is not the full antichain "
             f"(core/router.py). Use router='level', or pick the strategy "
             f"explicitly.")
+    if p.quant != "none" and p.backend not in SCAN_BACKENDS:
+        unfused = [b for b in BACKENDS if b not in SCAN_BACKENDS]
+        raise ValueError(
+            f"quant={p.quant!r} is incompatible with backend "
+            f"{p.backend!r}: the quantized score path needs the fused "
+            f"filter kernel ('pallas_gather_l2_filter' — which has bf16 "
+            f"and int8 replica forms) or the jnp oracle ('jnp'); the "
+            f"unfused pallas backends {unfused} have no replica form. "
+            f"Switch backend, or set quant='none'.")
 
 
 def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
@@ -523,18 +596,77 @@ def _filter_scorer(interpret: bool) -> Scorer:
                   score=score)
 
 
+def _quant_scorer(backend: str, quant: str, interpret: bool) -> Scorer:
+    """Scorer over the compressed replica (DESIGN.md §12): distances come
+    from ``di.qvecs`` (dequantized in-kernel / in-oracle), the predicate
+    from the exact f32 ``di.attrs`` as always. Quantized distances are
+    approximate — the engine reranks the over-fetched top candidates
+    through the exact f32 path before answering."""
+    if backend == "pallas_gather_l2_filter":
+        if quant == "bf16":
+            from ..kernels.gather_l2_filter import \
+                gather_l2_filter_blocked_raw
+
+            def score(di, q, qlo, qhi, ids):
+                # dtype-generic kernel: the bf16 replica streams directly
+                return gather_l2_filter_blocked_raw(
+                    ids[None], di.qvecs, di.attrs,
+                    q[None].astype(di.qvecs.dtype), qlo[None], qhi[None],
+                    interpret=interpret)[0]
+        else:
+            from ..kernels.gather_l2_filter import \
+                gather_l2_filter_q8_blocked_raw
+
+            def score(di, q, qlo, qhi, ids):
+                return gather_l2_filter_q8_blocked_raw(
+                    ids[None], di.qvecs, di.qscale, di.attrs, q[None],
+                    qlo[None], qhi[None], interpret=interpret)[0]
+    else:                                        # jnp oracle forms
+        if quant == "bf16":
+            from ..kernels.ref import gather_l2_filter_ref
+
+            def score(di, q, qlo, qhi, ids):
+                return gather_l2_filter_ref(ids[None], di.qvecs, di.attrs,
+                                            q[None], qlo[None], qhi[None])[0]
+        else:
+            from ..kernels.ref import gather_l2_filter_q8_ref
+
+            def score(di, q, qlo, qhi, ids):
+                return gather_l2_filter_q8_ref(
+                    ids[None], di.qvecs, di.qscale, di.attrs, q[None],
+                    qlo[None], qhi[None])[0]
+    return Scorer(name=f"{backend}+{quant}", fused_filter=True, score=score)
+
+
 def resolve_scorer(backend: Optional[str] = None, *,
                    dist_fn: Optional[Callable] = None,
-                   interpret: Optional[bool] = None) -> Scorer:
+                   interpret: Optional[bool] = None,
+                   quant: str = "none") -> Scorer:
     """Resolve ``SearchParams.backend`` to a ``Scorer``. A legacy
     ``dist_fn(q, rows)`` override wins if given (wrapped as an unfused
-    scorer); ``interpret=None`` auto-selects by JAX backend."""
+    scorer); ``interpret=None`` auto-selects by JAX backend. With
+    ``quant`` != "none" the scorer streams the compressed replica
+    (``di.qvecs``/``di.qscale`` — DESIGN.md §12) and its distances are
+    approximate; pair it with the exact scorer for the rerank tail (see
+    ``resolve_scorer_pair``)."""
     if dist_fn is not None:
+        if quant != "none":
+            raise ValueError("dist_fn overrides cannot run on the "
+                             "quantized replica; set quant='none'")
         return _unfused_scorer("dist_fn", resolve_dist_ids(dist_fn=dist_fn))
     backend = backend or "jnp"
     if backend not in BACKENDS:
         raise ValueError(f"unknown scoring backend {backend!r}; "
                          f"expected one of {BACKENDS}")
+    if quant not in QUANTS:
+        raise ValueError(f"unknown quant {quant!r}; expected one of {QUANTS}")
+    if quant != "none":
+        if backend not in SCAN_BACKENDS:
+            raise ValueError(f"quant={quant!r} requires a backend in "
+                             f"{SCAN_BACKENDS}, got {backend!r}")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _quant_scorer(backend, quant, interpret)
     if backend == "pallas_gather_l2_filter":
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -543,8 +675,41 @@ def resolve_scorer(backend: Optional[str] = None, *,
         backend, resolve_dist_ids(backend, interpret=interpret))
 
 
+def resolve_scorer_pair(p: "SearchParams", *,
+                        dist_fn: Optional[Callable] = None,
+                        interpret: Optional[bool] = None
+                        ) -> tuple[Scorer, Optional[Scorer]]:
+    """(loop scorer, exact rerank scorer) for ``p`` (DESIGN.md §12).
+
+    quant="none": (exact scorer, None) — no rerank tail. Otherwise the
+    loop scorer streams the compressed replica and the second element is
+    the exact f32 scorer the rerank tail rescores the over-fetched
+    candidates with."""
+    if p.quant == "none":
+        return resolve_scorer(p.backend, dist_fn=dist_fn,
+                              interpret=interpret), None
+    quant_scorer = resolve_scorer(p.backend, dist_fn=dist_fn,
+                                  interpret=interpret, quant=p.quant)
+    exact = resolve_scorer(p.backend, interpret=interpret)
+    return quant_scorer, exact
+
+
+def _lex_topk(ids: jax.Array, dists: jax.Array,
+              k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k of (dists, ids) under the (dist, id) lexicographic contract:
+    ascending distance, ties to the lowest id, -1/+inf pad lanes sort
+    last (ids rewrite to -1 wherever the kept distance is +inf). Works
+    on (..., C) batches; C >= k required."""
+    key_id = jnp.where(ids >= 0, ids, jnp.int32(np.iinfo(np.int32).max))
+    sel = jnp.lexsort((key_id, dists), axis=-1)[..., :k]
+    d = jnp.take_along_axis(dists, sel, axis=-1)
+    i = jnp.take_along_axis(ids, sel, axis=-1)
+    return jnp.where(jnp.isinf(d), -1, i), d
+
+
 def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
-               p: SearchParams, scorer: Scorer
+               p: SearchParams, scorer: Scorer,
+               exact_scorer: Optional[Scorer] = None
                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     n = di.n
     H, M = di.nbrs.shape[1], di.nbrs.shape[2]
@@ -626,7 +791,19 @@ def _query_one(di: DeviceIndex, q: jax.Array, qlo: jax.Array, qhi: jax.Array,
 
     pool, visited, seen, hops = jax.lax.while_loop(
         cond, body, (pool0, visited, seen0, jnp.int32(0)))
-    return pool.ids[: p.k], pool.dists[: p.k], hops
+    if exact_scorer is None:
+        return pool.ids[: p.k], pool.dists[: p.k], hops
+    # quantized rerank tail (DESIGN.md §12): the loop above ranked the
+    # pool on compressed-replica distances, so the quantized order near
+    # the k boundary may invert vs f32. Rescore the top
+    # min(ef, k * rerank_mult) pool entries through the exact f32 path
+    # and take the (dist, id)-lexicographic top-k — a static python
+    # branch, so quant="none" programs are untouched.
+    rr = max(p.k, min(p.ef, p.k * p.rerank_mult))
+    cand = pool.ids[:rr]
+    exact_d = exact_scorer.score(di, q, qlo, qhi, cand)
+    ids_k, dists_k = _lex_topk(cand, exact_d, p.k)
+    return ids_k, dists_k, hops
 
 
 def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False,
@@ -648,11 +825,12 @@ def make_search_fn(p: SearchParams, *, dist_fn=None, donate: bool = False,
             f"build an engine.Planner (or call search_batch, which does).")
     if di is not None:
         p = validate_search_params(p, di, on_undersized=on_undersized)
-    scorer = resolve_scorer(p.backend, dist_fn=dist_fn)
+    scorer, exact = resolve_scorer_pair(p, dist_fn=dist_fn)
 
     @functools.partial(jax.jit, static_argnames=())
     def search(di: DeviceIndex, queries, qlo, qhi):
-        fn = functools.partial(_query_one, p=p, scorer=scorer)
+        fn = functools.partial(_query_one, p=p, scorer=scorer,
+                               exact_scorer=exact)
         return jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(queries, qlo, qhi)
 
     return search
@@ -690,6 +868,73 @@ def search_batch(index_or_di, queries: np.ndarray, preds, params: SearchParams,
 # Selectivity-adaptive query planner (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("k", "w_cap", "use_kernel",
+                                             "interpret"))
+def _windows_one(pos_vecs, pos_attrs, order, q, qlo, qhi, starts, counts,
+                 *, k: int, w_cap: int, use_kernel: bool, interpret: bool):
+    """One shard's windowed scan (DESIGN.md §12): positions from the
+    kernel (or jnp oracle on backend='jnp') map back through the DFS
+    ``order`` permutation to local row ids."""
+    if use_kernel:
+        from ..kernels.scan_topk import scan_topk_windows_raw
+        pos, dd = scan_topk_windows_raw(pos_vecs, pos_attrs, q, qlo, qhi,
+                                        starts, counts, k=k, w_cap=w_cap,
+                                        interpret=interpret)
+    else:
+        from ..kernels.ref import scan_topk_windows_ref
+        pos, dd = scan_topk_windows_ref(pos_vecs, pos_attrs, q, qlo, qhi,
+                                        starts, counts, k)
+    ids = jnp.where(pos >= 0, order[jnp.maximum(pos, 0)], -1)
+    return ids, dd
+
+
+@functools.partial(jax.jit, static_argnames=("k", "w_cap", "use_kernel",
+                                             "interpret"))
+def _windows_sharded(pos_vecs, pos_attrs, order, offsets, q, qlo, qhi,
+                     starts, counts, *, k: int, w_cap: int,
+                     use_kernel: bool, interpret: bool):
+    """Static unroll over shards (starts/counts (S, B, W)), local ids to
+    global, merge-k — the same shard fan-out shape as the scan path."""
+    from .sharded import _local_to_global, _merge_topk
+    S = pos_vecs.shape[0]
+    gi, gd = [], []
+    for s in range(S):
+        ids, dd = _windows_one(pos_vecs[s], pos_attrs[s], order[s], q, qlo,
+                               qhi, starts[s], counts[s], k=k, w_cap=w_cap,
+                               use_kernel=use_kernel, interpret=interpret)
+        gids = _local_to_global(ids, offsets[s], S)
+        gi.append(gids)
+        gd.append(jnp.where(gids >= 0, dd, jnp.inf))
+    return _merge_topk(jnp.stack(gi), jnp.stack(gd), k)
+
+
+def _merge_dedup(ids_a: np.ndarray, d_a: np.ndarray, ids_b: np.ndarray,
+                 d_b: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Merge two partial top-k streams under the (dist, id) lexicographic
+    contract with id-level dedup (DESIGN.md §12): a row found by BOTH the
+    graph walk and a window keeps its best (lowest) distance — the two
+    paths may disagree by f32 reduce-order ulps, and without dedup a
+    twice-found row could crowd a genuinely distinct k-th neighbor out.
+    Two lexsort passes: group by id keeping the best occurrence first,
+    mask the rest to (+inf, -1), then rank by (dist, id) and take k."""
+    ids = np.concatenate([ids_a, ids_b], axis=1).astype(np.int64)
+    d = np.concatenate([d_a, d_b], axis=1).astype(np.float32)
+    sentinel = np.iinfo(np.int64).max
+    key = np.where(ids >= 0, ids, sentinel)
+    o1 = np.lexsort((d, key), axis=-1)            # id-major, best dist first
+    key = np.take_along_axis(key, o1, axis=1)
+    d = np.take_along_axis(d, o1, axis=1)
+    dup = np.zeros_like(key, bool)
+    dup[:, 1:] = (key[:, 1:] == key[:, :-1]) & (key[:, 1:] != sentinel)
+    d = np.where(dup, np.inf, d)
+    key = np.where(dup, sentinel, key)
+    o2 = np.lexsort((key, d), axis=-1)[:, :k]     # (dist, id) rank, take k
+    out_d = np.take_along_axis(d, o2, axis=1).astype(np.float32)
+    out_i = np.take_along_axis(key, o2, axis=1)
+    out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
+    return out_i, out_d
+
+
 @dataclasses.dataclass
 class Plan:
     """Host-side record of one batch's dispatch decisions.
@@ -698,11 +943,24 @@ class Plan:
     per query (-1 when the strategy was forced and no estimate ran);
     ``use_scan`` the per-query dispatch; ``threshold`` the resolved
     absolute dispatch threshold (SearchParams.scan_threshold, or the
-    DEFAULT_SCAN_FRAC derivation when that was 0)."""
+    DEFAULT_SCAN_FRAC derivation when that was 0).
+
+    ``strategy="hybrid"`` (DESIGN.md §12) additionally records the
+    per-NODE decision: ``mode`` is 0 = graph lane, 1 = pure-window lane
+    (every antichain node small — answered exactly by the windowed
+    scan, hops 0; these lanes also set ``use_scan``), 2 = mixed lane
+    (graph walk + windows over the small nodes, streams merged);
+    ``small_nodes`` holds one (B, P) bool mask per shard (antichain ∩
+    count <= node_threshold — the windows' node set) and ``n_windows``
+    the per-lane total across shards."""
 
     card: np.ndarray       # (B,) int64/int32
     use_scan: np.ndarray   # (B,) bool
     threshold: int
+    node_threshold: int = 0
+    mode: Optional[np.ndarray] = None         # (B,) int8, hybrid only
+    n_windows: Optional[np.ndarray] = None    # (B,) int64, hybrid only
+    small_nodes: Optional[list] = None        # per-shard (B, P) bool
 
 
 class Planner:
@@ -756,6 +1014,13 @@ class Planner:
         di = index.di if self._sharded else index
         self.params = p = validate_search_params(params, di,
                                                  on_undersized=on_undersized)
+        # quantized score path (§12): make sure the index carries the
+        # replica the scorers will stream (derive it here if the caller
+        # handed a bare f32 index)
+        if p.quant != "none" and di.qvecs is None:
+            di = with_quant_replica(di, p.quant)
+            index = (dataclasses.replace(index, di=di) if self._sharded
+                     else di)
         self.index = index
         self._dist_fn = dist_fn
         if interpret is None:
@@ -784,14 +1049,40 @@ class Planner:
                                      di.attrs, jnp.nan)
 
         self._graph_fn = (self._build_graph_fn()
-                          if p.strategy in ("graph", "auto") else None)
+                          if p.strategy in ("graph", "auto", "hybrid")
+                          else None)
         self._scan_fn = (self._build_scan_fn()
                          if p.strategy in ("scan", "auto") else None)
         self._estimators = (self._build_estimators()
-                            if p.strategy == "auto" else None)
+                            if p.strategy in ("auto", "hybrid") else None)
+        # hybrid per-node dispatch state (§12): the node threshold, the
+        # host (S, P) start/count planes the window extents come from,
+        # and the position-ordered (DFS) scan replica the windowed
+        # kernel streams contiguously
+        self.node_scan_threshold = (int(p.node_scan_threshold)
+                                    or self.scan_threshold)
+        if p.strategy == "hybrid":
+            start = np.asarray(jax.device_get(di.start))
+            count = np.asarray(jax.device_get(di.count))
+            self._node_start = np.atleast_2d(start)
+            self._node_count = np.atleast_2d(count)
+            self._build_pos_replica()
         self._plan_cache: "collections.OrderedDict[bytes, int]" = \
             collections.OrderedDict()
         self.plan_cache_size = 65536
+
+    def _build_pos_replica(self) -> None:
+        """Position-ordered copies of the scan corpus: row i of
+        ``_pos_vecs`` is the object at DFS rank i (``order[i]``), so an
+        antichain node's objects are the contiguous slice
+        ``[start, start + count)`` — what scan_topk_windows DMAs. The
+        attrs copy starts from ``_scan_attrs`` so structural padding and
+        streaming tombstones stay NaN; recomputed on refresh_index."""
+        di = self.index.di if self._sharded else self.index
+        order = di.order[..., None]
+        self._pos_vecs = jnp.take_along_axis(di.vecs, order, axis=-2)
+        self._pos_attrs = jnp.take_along_axis(self._scan_attrs, order,
+                                              axis=-2)
 
     # --------------------------------------------------------- plan pass
     def _build_estimators(self, deleted_rows=None):
@@ -873,6 +1164,13 @@ class Planner:
                 di_old.attrs.shape or di_new.vecs.shape != di_old.vecs.shape:
             raise ValueError("refresh_index requires identical index shapes"
                              " (use a new Planner for a new epoch)")
+        # quant-replica coherence (§12): tombstone refreshes preserve
+        # qvecs/qscale (deletes touch attrs only), but re-derive if the
+        # caller handed back a bare f32 index
+        if self.params.quant != "none" and di_new.qvecs is None:
+            di_new = with_quant_replica(di_new, self.params.quant)
+            index = (dataclasses.replace(index, di=di_new) if sharded
+                     else di_new)
         self.index = index
         N = di_new.attrs.shape[-2]
         valid = np.arange(N)[None, :] < self._n_shard[:, None]
@@ -880,18 +1178,22 @@ class Planner:
             valid = valid[0]
         self._scan_attrs = jnp.where(jnp.asarray(valid)[..., None],
                                      di_new.attrs, jnp.nan)
-        if self.params.strategy == "auto":
+        if self.params.strategy in ("auto", "hybrid"):
             self._estimators = self._build_estimators(deleted_rows)
+        if self.params.strategy == "hybrid":
+            self._build_pos_replica()
         self._plan_cache.clear()
 
     # ------------------------------------------------------ device programs
     def _build_graph_fn(self):
         p = self.params
-        scorer = resolve_scorer(p.backend, dist_fn=self._dist_fn)
+        scorer, exact = resolve_scorer_pair(p, dist_fn=self._dist_fn,
+                                            interpret=self._interpret)
         if not self._sharded:
             @jax.jit
             def graph(di, q, qlo, qhi):
-                fn = functools.partial(_query_one, p=p, scorer=scorer)
+                fn = functools.partial(_query_one, p=p, scorer=scorer,
+                                       exact_scorer=exact)
                 return jax.vmap(lambda qq, lo, hi: fn(di, qq, lo, hi))(
                     q, qlo, qhi)
             return lambda q, qlo, qhi: graph(self.index, q, qlo, qhi)
@@ -902,7 +1204,8 @@ class Planner:
         @jax.jit
         def graph_sharded(skhi, q, qlo, qhi):
             def per_shard(di, off):
-                return _shard_search(di, off, S, q, qlo, qhi, p, scorer)
+                return _shard_search(di, off, S, q, qlo, qhi, p, scorer,
+                                     exact_scorer=exact)
             gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
             mi, md = _merge_topk(gids, dists, p.k)
             return mi, md, jnp.max(hops, axis=0)
@@ -913,19 +1216,55 @@ class Planner:
         p = self.params
         interpret = self._interpret
         use_kernel = p.backend == "pallas_gather_l2_filter"
+        quant = p.quant
 
-        def scan_one(vecs, attrs_nan, q, qlo, qhi):
+        def scan_exact(vecs, attrs_nan, q, qlo, qhi, k):
             if use_kernel:
                 from ..kernels.scan_topk import scan_topk_raw
-                return scan_topk_raw(vecs, attrs_nan, q, qlo, qhi, k=p.k,
+                return scan_topk_raw(vecs, attrs_nan, q, qlo, qhi, k=k,
                                      interpret=interpret)
             from ..kernels.ref import scan_topk_ref
-            return scan_topk_ref(vecs, attrs_nan, q, qlo, qhi, p.k)
+            return scan_topk_ref(vecs, attrs_nan, q, qlo, qhi, k)
+
+        def scan_one(di, shard, attrs_nan, q, qlo, qhi):
+            vecs = di.vecs if shard is None else di.vecs[shard]
+            if quant == "none":
+                return scan_exact(vecs, attrs_nan, q, qlo, qhi, p.k)
+            # quantized scan + exact rerank (§12): over-fetch the top
+            # k * rerank_mult on the compressed replica, rescore those
+            # candidates on the f32 corpus through the gather path, and
+            # take the (dist, id)-lexicographic top-k — exact whenever
+            # the true top-k survives the over-fetch
+            qvecs = di.qvecs if shard is None else di.qvecs[shard]
+            kq = min(max(p.k, p.k * p.rerank_mult), vecs.shape[0])
+            if quant == "bf16":
+                cids, _ = scan_exact(qvecs, attrs_nan, q, qlo, qhi, kq)
+            elif use_kernel:
+                from ..kernels.scan_topk import scan_topk_q8_raw
+                qscale = di.qscale if shard is None else di.qscale[shard]
+                cids, _ = scan_topk_q8_raw(qvecs, qscale, attrs_nan, q,
+                                           qlo, qhi, k=kq,
+                                           interpret=interpret)
+            else:
+                from ..kernels.ref import scan_topk_q8_ref
+                qscale = di.qscale if shard is None else di.qscale[shard]
+                cids, _ = scan_topk_q8_ref(qvecs, qscale, attrs_nan, q,
+                                           qlo, qhi, kq)
+            if use_kernel:
+                from ..kernels.gather_l2_filter import \
+                    gather_l2_filter_blocked_raw
+                exact_d = gather_l2_filter_blocked_raw(
+                    cids, vecs, attrs_nan, q, qlo, qhi, interpret=interpret)
+            else:
+                from ..kernels.ref import gather_l2_filter_ref
+                exact_d = gather_l2_filter_ref(cids, vecs, attrs_nan, q,
+                                               qlo, qhi)
+            return _lex_topk(cids, exact_d, p.k)
 
         if not self._sharded:
             @jax.jit
             def scan(di, attrs_nan, q, qlo, qhi):
-                return scan_one(di.vecs, attrs_nan, q, qlo, qhi)
+                return scan_one(di, None, attrs_nan, q, qlo, qhi)
             return lambda q, qlo, qhi: scan(self.index, self._scan_attrs,
                                             q, qlo, qhi)
 
@@ -936,7 +1275,7 @@ class Planner:
         def scan_sharded(skhi, attrs_nan, q, qlo, qhi):
             gi, gd = [], []
             for s in range(S):       # static unroll: S identical-shape scans
-                ids, dd = scan_one(skhi.di.vecs[s], attrs_nan[s], q, qlo, qhi)
+                ids, dd = scan_one(skhi.di, s, attrs_nan[s], q, qlo, qhi)
                 gids = _local_to_global(ids, skhi.offsets[s], S)
                 gi.append(gids)
                 gd.append(jnp.where(gids >= 0, dd, jnp.inf))
@@ -944,6 +1283,68 @@ class Planner:
 
         return lambda q, qlo, qhi: scan_sharded(self.index, self._scan_attrs,
                                                 q, qlo, qhi)
+
+    # ------------------------------------------------- hybrid window pass
+    def _build_windows(self, small_nodes: list, idx: np.ndarray, bp: int):
+        """Window arrays for the lanes ``idx``, padded to ``bp`` rows:
+        (starts (S, bp, W) int32, counts (S, bp, W) int32, w_cap). Each
+        lane's windows are its small antichain nodes' raw
+        ``[start, count]`` DFS extents, sorted ascending by start (the
+        windowed kernel's tie-break contract); W and w_cap round up to
+        powers of two to bound the trace count. Pad windows are
+        (-1, 0)."""
+        S = len(small_nodes)
+        lanes_per_shard = []
+        max_w, max_c = 1, 1
+        for s in range(S):
+            sub = small_nodes[s][idx]                 # (B', P)
+            lanes = []
+            for b in range(sub.shape[0]):
+                nodes = np.nonzero(sub[b])[0]
+                st = self._node_start[s][nodes]
+                ct = self._node_count[s][nodes]
+                keep = ct > 0
+                st, ct = st[keep], ct[keep]
+                o = np.argsort(st, kind="stable")
+                st, ct = st[o], ct[o]
+                lanes.append((st, ct))
+                if st.size:
+                    max_w = max(max_w, st.size)
+                    max_c = max(max_c, int(ct.max()))
+            lanes_per_shard.append(lanes)
+        W = pow2_at_least(max_w)
+        w_cap = pow2_at_least(max_c)
+        starts = np.full((S, bp, W), -1, np.int32)
+        counts = np.zeros((S, bp, W), np.int32)
+        for s in range(S):
+            for b, (st, ct) in enumerate(lanes_per_shard[s]):
+                starts[s, b, : st.size] = st
+                counts[s, b, : ct.size] = ct
+        return starts, counts, w_cap
+
+    def _run_windows(self, qs, lo, hi, starts, counts, w_cap: int):
+        """Exact windowed scan over the position-ordered replica
+        (DESIGN.md §12): positions come back from the kernel/oracle,
+        map through ``order`` to ids (then to global ids per shard),
+        and sharded lanes merge like every other top-k stream. Window
+        lanes report hops = 0 (no graph walk)."""
+        p = self.params
+        use_kernel = p.backend == "pallas_gather_l2_filter"
+        q, qlo_, qhi_ = (jnp.asarray(qs), jnp.asarray(lo), jnp.asarray(hi))
+        if not self._sharded:
+            ids, dd = _windows_one(
+                self._pos_vecs, self._pos_attrs, self.index.order,
+                q, qlo_, qhi_, jnp.asarray(starts[0]),
+                jnp.asarray(counts[0]), k=p.k, w_cap=w_cap,
+                use_kernel=use_kernel, interpret=self._interpret)
+        else:
+            ids, dd = _windows_sharded(
+                self._pos_vecs, self._pos_attrs, self.index.di.order,
+                self.index.offsets, q, qlo_, qhi_, jnp.asarray(starts),
+                jnp.asarray(counts), k=p.k, w_cap=w_cap,
+                use_kernel=use_kernel, interpret=self._interpret)
+        return (np.asarray(ids), np.asarray(dd),
+                np.zeros(qs.shape[0], np.int32))
 
     # -------------------------------------------------------- host dispatch
     def plan(self, qlo: np.ndarray, qhi: np.ndarray) -> Plan:
@@ -961,9 +1362,31 @@ class Planner:
                         use_scan=np.ones(B, bool),
                         threshold=self.scan_threshold)
         card = self._cards(qlo, qhi)
-        use_scan = (card > 0) & (card <= self.scan_threshold)
-        return Plan(card=card, use_scan=use_scan,
-                    threshold=self.scan_threshold)
+        if p.strategy != "hybrid":
+            use_scan = (card > 0) & (card <= self.scan_threshold)
+            return Plan(card=card, use_scan=use_scan,
+                        threshold=self.scan_threshold)
+        # hybrid (§12): classify each lane by its antichain's node sizes.
+        # Smallness uses RAW node counts (the cost of scanning the DFS
+        # extent — tombstoned rows still stream through the kernel);
+        # ``card`` stays tombstone-adjusted for the exactness gate.
+        thr = self.node_scan_threshold
+        small_nodes = []
+        n_small = np.zeros(B, np.int64)
+        n_large = np.zeros(B, np.int64)
+        for s, est in enumerate(self._estimators):
+            anti = est.antichain(qlo, qhi)            # (B, P) bool
+            cnt = self._node_count[s]
+            small = anti & ((cnt > 0) & (cnt <= thr))[None, :]
+            small_nodes.append(small)
+            n_small += small.sum(axis=1)
+            n_large += (anti & (cnt > thr)[None, :]).sum(axis=1)
+        mode = np.zeros(B, np.int8)
+        mode[(n_large == 0) & (card > 0)] = 1          # pure-window: exact
+        mode[(n_large > 0) & (n_small > 0)] = 2        # mixed
+        return Plan(card=card, use_scan=(mode == 1),
+                    threshold=self.scan_threshold, node_threshold=thr,
+                    mode=mode, n_windows=n_small, small_nodes=small_nodes)
 
     @staticmethod
     def _pad_pow2(qs, lo, hi):
@@ -971,7 +1394,7 @@ class Planner:
         (lo=+inf > hi=-inf: zero entries and zero in-range rows), bounding
         the jit trace count at O(log B) shapes per strategy."""
         b = qs.shape[0]
-        bp = 1 << max(0, (b - 1).bit_length())
+        bp = pow2_at_least(b)
         pad = bp - b
         if pad:
             qs = np.concatenate([qs, np.zeros((pad,) + qs.shape[1:],
@@ -1002,6 +1425,8 @@ class Planner:
         qhi = np.ascontiguousarray(qhi, np.float32)
         plan = self.plan(qlo, qhi)
         B, k = queries.shape[0], self.params.k
+        if plan.mode is not None:
+            return self._search_hybrid(queries, qlo, qhi, plan)
         scan_idx = np.nonzero(plan.use_scan)[0]
         graph_idx = np.nonzero(~plan.use_scan)[0]
         if not len(graph_idx):
@@ -1017,6 +1442,38 @@ class Planner:
                          (scan_idx, self._run_scan)):
             qs, lo, hi = self._pad_pow2(queries[idx], qlo[idx], qhi[idx])
             ids, dists, hops = run(qs, lo, hi)
+            out_ids[idx] = ids[: len(idx)]
+            out_d[idx] = dists[: len(idx)]
+            out_h[idx] = hops[: len(idx)]
+        return out_ids, out_d, out_h, plan
+
+    def _search_hybrid(self, queries, qlo, qhi, plan: Plan):
+        """Three-way lane split (§12): mode 0 = graph walk, mode 1 =
+        pure-window (every antichain node small — exact by construction,
+        hops = 0), mode 2 = mixed — the UNRESTRICTED graph walk plus the
+        small-node windows, merged host-side with id-level dedup (the
+        graph stream may re-find window rows)."""
+        B, k = queries.shape[0], self.params.k
+        out_ids = np.full((B, k), -1, np.int32)
+        out_d = np.full((B, k), np.inf, np.float32)
+        out_h = np.zeros((B,), np.int32)
+        for m in (0, 1, 2):
+            idx = np.nonzero(plan.mode == m)[0]
+            if not len(idx):
+                continue
+            qs, lo, hi = self._pad_pow2(queries[idx], qlo[idx], qhi[idx])
+            if m == 0:
+                ids, dists, hops = self._run_graph(qs, lo, hi)
+            else:
+                starts, counts, w_cap = self._build_windows(
+                    plan.small_nodes, idx, qs.shape[0])
+                ids, dists, hops = self._run_windows(qs, lo, hi, starts,
+                                                     counts, w_cap)
+                if m == 2:
+                    gids, gd, hops = self._run_graph(qs, lo, hi)
+                    ids, dists = _merge_dedup(
+                        gids[: len(idx)], gd[: len(idx)],
+                        ids[: len(idx)], dists[: len(idx)], k)
             out_ids[idx] = ids[: len(idx)]
             out_d[idx] = dists[: len(idx)]
             out_h[idx] = hops[: len(idx)]

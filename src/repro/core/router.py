@@ -368,7 +368,13 @@ class HostCardEstimator:
         self.plo = lo[np.arange(P), ps]
         self.phi = hi[np.arange(P), ps]
 
-    def cards(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
+    def antichain(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
+        """(B, m) boxes -> (B, P) bool: the per-query scanned antichain —
+        exactly the nodes the level sweep stops at (stop & reached).
+        Every in-range object lies in exactly one antichain node, and
+        the nodes' ``[start, start + count)`` DFS ranges are disjoint —
+        the hybrid planner's per-node dispatch set (DESIGN.md §12);
+        ``cards`` is its count-weighted row sum."""
         B = qlo.shape[0]
         P = self.parent.shape[0]
         pa = np.maximum(self.parent, 0)
@@ -391,7 +397,10 @@ class HostCardEstimator:
             pl = self.parent[nl]
             reached[:, nl] = (reached[:, pl] & ~stop[:, pl]
                               & edge_ok[:, nl])
-        return (stop & reached) @ self.count
+        return stop & reached
+
+    def cards(self, qlo: np.ndarray, qhi: np.ndarray) -> np.ndarray:
+        return self.antichain(qlo, qhi) @ self.count
 
 
 def deleted_per_node(order: np.ndarray, start: np.ndarray,

@@ -42,7 +42,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import (DeviceIndex, SearchParams, _query_one, device_put_index,
-                     resolve_scorer, validate_search_params)
+                     resolve_scorer, resolve_scorer_pair,
+                     validate_search_params, with_quant_replica)
 from .khi import KHIConfig, KHIIndex
 
 __all__ = ["ShardedKHI", "build_sharded", "make_sharded_search_fn",
@@ -106,8 +107,10 @@ def _local_to_global(local_ids: jax.Array, shard: jax.Array,
 
 
 def _shard_search(di: DeviceIndex, shard_id: jax.Array, n_shards: int,
-                  queries, qlo, qhi, p: SearchParams, scorer):
-    fn = functools.partial(_query_one, p=p, scorer=scorer)
+                  queries, qlo, qhi, p: SearchParams, scorer,
+                  exact_scorer=None):
+    fn = functools.partial(_query_one, p=p, scorer=scorer,
+                           exact_scorer=exact_scorer)
     ids, dists, hops = jax.vmap(lambda q, lo, hi: fn(di, q, lo, hi))(
         queries, qlo, qhi)
     gids = _local_to_global(ids, shard_id, n_shards)
@@ -146,7 +149,13 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
     if skhi is not None:
         params = validate_search_params(params, skhi.di,
                                         on_undersized=on_undersized)
-    scorer = resolve_scorer(params.backend, dist_fn=dist_fn)
+        if params.quant != "none" and skhi.di.qvecs is None:
+            raise ValueError(
+                f"quant={params.quant!r} needs the quantized replica on the "
+                f"sharded index the collective fn will be called with — "
+                f"attach it up front: skhi = dataclasses.replace(skhi, "
+                f"di=with_quant_replica(skhi.di, {params.quant!r}))")
+    scorer, exact = resolve_scorer_pair(params, dist_fn=dist_fn)
     n_shards = mesh.shape[model_axis]
     dspec = P(tuple(data_axes))
 
@@ -156,7 +165,8 @@ def make_sharded_search_fn(params: SearchParams, mesh: Mesh, *,
         di = jax.tree.map(lambda x: x[0], di_blk)      # squeeze shard axis
         shard_id = off_blk[0]
         gids, dists, hops = _shard_search(di, shard_id, n_shards,
-                                          queries, qlo, qhi, params, scorer)
+                                          queries, qlo, qhi, params, scorer,
+                                          exact_scorer=exact)
         allg = jax.lax.all_gather(gids, model_axis)    # (S, B, k)
         alld = jax.lax.all_gather(dists, model_axis)
         mi, md = _merge_topk(allg, alld, params.k)
@@ -192,14 +202,17 @@ def search_sharded_emulated(skhi: ShardedKHI, queries, qlo, qhi,
         return ids, dists, hops
     params = validate_search_params(params, skhi.di,
                                     on_undersized=on_undersized)
-    scorer = resolve_scorer(params.backend, dist_fn=dist_fn)
+    if params.quant != "none" and skhi.di.qvecs is None:
+        skhi = dataclasses.replace(
+            skhi, di=with_quant_replica(skhi.di, params.quant))
+    scorer, exact = resolve_scorer_pair(params, dist_fn=dist_fn)
     n_shards = skhi.num_shards
 
     @jax.jit
     def run(skhi, queries, qlo, qhi):
         def per_shard(di, off):
             return _shard_search(di, off, n_shards, queries, qlo, qhi,
-                                 params, scorer)
+                                 params, scorer, exact_scorer=exact)
         gids, dists, hops = jax.vmap(per_shard)(skhi.di, skhi.offsets)
         mi, md = _merge_topk(gids, dists, params.k)
         return mi, md, hops

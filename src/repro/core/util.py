@@ -1,0 +1,26 @@
+"""Small shared utilities for the core package (DESIGN.md §10, §11).
+
+The pow2 padding helper used to live twice — ``core.delta._pow2`` for
+the streaming write path's shape bucketing and an inline expression in
+``engine.Planner._pad_pow2`` for the mixed-batch split — with the same
+contract: round a batch size up to the next power of two so the number
+of distinct jit trace shapes stays O(log B) instead of O(B).
+"""
+
+from __future__ import annotations
+
+__all__ = ["pow2_at_least"]
+
+
+def pow2_at_least(b: int) -> int:
+    """Smallest power of two >= ``b`` (and >= 1).
+
+    ``pow2_at_least(0) == 1`` by convention: an empty batch still pads
+    to a single lane, so downstream fixed-shape programs never see a
+    zero-length axis.
+    """
+    if b < 0:
+        raise ValueError(f"b must be >= 0, got {b}")
+    if b <= 1:
+        return 1
+    return 1 << (int(b) - 1).bit_length()

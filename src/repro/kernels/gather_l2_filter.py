@@ -40,7 +40,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gather_l2_filter_blocked_kernel", "gather_l2_filter_blocked_raw"]
+__all__ = ["gather_l2_filter_blocked_kernel", "gather_l2_filter_blocked_raw",
+           "gather_l2_filter_q8_blocked_kernel",
+           "gather_l2_filter_q8_blocked_raw"]
 
 
 def gather_l2_filter_blocked_kernel(idx_ref, corpus_ref, attrs_ref, q_ref,
@@ -125,4 +127,99 @@ def gather_l2_filter_blocked_raw(idx: jax.Array, corpus: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, n_blk * c_blk), jnp.float32),
         interpret=interpret,
     )(idx, corpus, attrs, q, qlo, qhi)
+    return out[:, :C]
+
+
+def gather_l2_filter_q8_blocked_kernel(idx_ref, corpus_ref, scale_ref,
+                                       attrs_ref, q_ref, qlo_ref, qhi_ref,
+                                       o_ref, rows_ref, srows_ref, arows_ref,
+                                       vsems_ref, ssems_ref, asems_ref):
+    """int8-replica variant of ``gather_l2_filter_blocked_kernel``
+    (DESIGN.md §12): each candidate row DMAs its int8 vector row, its
+    (1,) f32 scale row AND its attrs row; rows dequantize in-kernel
+    (``rows.astype(f32) * scale`` — ``kernels.quant.dequant_rows``) so
+    the HBM stream is d + 4 (+ attrs) bytes per candidate instead of
+    4d (+ attrs)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    c_blk = rows_ref.shape[0]
+
+    def issue(r, carry):
+        row = jnp.maximum(idx_ref[i, j * c_blk + r], 0)
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              vsems_ref.at[r]).start()
+        pltpu.make_async_copy(scale_ref.at[row], srows_ref.at[r],
+                              ssems_ref.at[r]).start()
+        pltpu.make_async_copy(attrs_ref.at[row], arows_ref.at[r],
+                              asems_ref.at[r]).start()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, issue, 0)
+
+    def drain(r, carry):
+        row = jnp.maximum(idx_ref[i, j * c_blk + r], 0)
+        pltpu.make_async_copy(corpus_ref.at[row], rows_ref.at[r],
+                              vsems_ref.at[r]).wait()
+        pltpu.make_async_copy(scale_ref.at[row], srows_ref.at[r],
+                              ssems_ref.at[r]).wait()
+        pltpu.make_async_copy(attrs_ref.at[row], arows_ref.at[r],
+                              asems_ref.at[r]).wait()
+        return carry
+
+    jax.lax.fori_loop(0, c_blk, drain, 0)
+
+    rows = rows_ref[...].astype(jnp.float32) * srows_ref[...]
+    d = q_ref[...].astype(jnp.float32) - rows
+    dist = jnp.sum(d * d, axis=-1)                       # (c_blk,)
+    a = arows_ref[...].astype(jnp.float32)               # (c_blk, m)
+    ok = jnp.all((a >= qlo_ref[...]) & (a <= qhi_ref[...]), axis=-1)
+    valid = idx_ref[i, pl.dslice(j * c_blk, c_blk)] >= 0
+    o_ref[...] = jnp.where(ok & valid, dist, jnp.inf)[None, :]
+
+
+def gather_l2_filter_q8_blocked_raw(idx: jax.Array, qcorpus: jax.Array,
+                                    qscale: jax.Array, attrs: jax.Array,
+                                    q: jax.Array, qlo: jax.Array,
+                                    qhi: jax.Array, *, c_blk: int = 128,
+                                    interpret: bool = False) -> jax.Array:
+    """idx (B, C) int32 (-1 = pad), qcorpus (N, d) int8 with per-row
+    scale qscale (N, 1) f32, attrs (N, m) f32, q (B, d), qlo/qhi (B, m)
+    -> (B, C) f32 quantized distances with +inf on invalid or
+    out-of-range lanes. Same tiling contract as
+    ``gather_l2_filter_blocked_raw``; oracle is
+    ``ref.gather_l2_filter_q8_ref``."""
+    B, C = idx.shape
+    N, D = qcorpus.shape
+    M = attrs.shape[1]
+    c_blk = min(c_blk, C)
+    pad = (-C) % c_blk
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    n_blk = (C + pad) // c_blk
+    out = pl.pallas_call(
+        gather_l2_filter_q8_blocked_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_blk),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),    # int8 rows DMA'd
+                pl.BlockSpec(memory_space=pltpu.ANY),    # scale rows DMA'd
+                pl.BlockSpec(memory_space=pltpu.ANY),    # attrs rows DMA'd
+                pl.BlockSpec((1, D), lambda i, j, idx_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, j, idx_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, j, idx_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, c_blk), lambda i, j, idx_ref: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((c_blk, D), qcorpus.dtype),
+                pltpu.VMEM((c_blk, 1), jnp.float32),
+                pltpu.VMEM((c_blk, M), attrs.dtype),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+                pltpu.SemaphoreType.DMA((c_blk,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, n_blk * c_blk), jnp.float32),
+        interpret=interpret,
+    )(idx, qcorpus, qscale, attrs, q, qlo, qhi)
     return out[:, :C]

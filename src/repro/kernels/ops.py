@@ -20,6 +20,7 @@ from . import ref as _ref
 from . import scan_topk as _scan
 
 __all__ = ["l2dist", "gather_l2", "gather_l2_filtered", "scan_topk",
+           "gather_l2_filtered_q8", "scan_topk_q8", "scan_topk_windows",
            "use_pallas_default"]
 
 
@@ -135,8 +136,73 @@ def scan_topk(corpus: jax.Array, attrs: jax.Array, q: jax.Array,
                       _auto_interpret(interpret), n_blk)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "c_blk"))
+def _gather_l2_filtered_q8(idx, qcorpus, qscale, attrs, q, qlo, qhi,
+                           interpret: bool, c_blk: int):
+    return _gather_filter.gather_l2_filter_q8_blocked_raw(
+        idx, qcorpus, qscale, attrs, q, qlo, qhi, c_blk=c_blk,
+        interpret=interpret)
+
+
+def gather_l2_filtered_q8(idx: jax.Array, qcorpus: jax.Array,
+                          qscale: jax.Array, attrs: jax.Array, q: jax.Array,
+                          qlo: jax.Array, qhi: jax.Array,
+                          *, interpret: Optional[bool] = None,
+                          c_blk: int = 128) -> jax.Array:
+    """int8-replica form of ``gather_l2_filtered`` (DESIGN.md §12):
+    idx (B, C) into qcorpus (N, d) int8 + qscale (N, 1) f32, dequantized
+    in-kernel — d + 4 HBM bytes per candidate row instead of 4d. Oracle:
+    ``gather_l2_filter_q8_ref``."""
+    return _gather_l2_filtered_q8(idx, qcorpus, qscale, attrs, q, qlo, qhi,
+                                  _auto_interpret(interpret), c_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "n_blk"))
+def _scan_topk_q8(qcorpus, qscale, attrs, q, qlo, qhi, k: int,
+                  interpret: bool, n_blk: int):
+    return _scan.scan_topk_q8_raw(qcorpus, qscale, attrs, q, qlo, qhi, k=k,
+                                  n_blk=n_blk, interpret=interpret)
+
+
+def scan_topk_q8(qcorpus: jax.Array, qscale: jax.Array, attrs: jax.Array,
+                 q: jax.Array, qlo: jax.Array, qhi: jax.Array, *, k: int,
+                 interpret: Optional[bool] = None, n_blk: int = 512):
+    """int8-replica form of ``scan_topk`` (DESIGN.md §12): the corpus
+    streams as int8 tiles + (N_BLK, 1) scale planes and dequantizes
+    in-kernel. Ids bit-identical to ``scan_topk_q8_ref``; the engine
+    reranks the over-fetched candidates through the f32 path."""
+    return _scan_topk_q8(qcorpus, qscale, attrs, q, qlo, qhi, k,
+                         _auto_interpret(interpret), n_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "w_cap", "interpret"))
+def _scan_topk_windows(corpus, attrs, q, qlo, qhi, starts, counts, k: int,
+                       w_cap: int, interpret: bool):
+    return _scan.scan_topk_windows_raw(corpus, attrs, q, qlo, qhi, starts,
+                                       counts, k=k, w_cap=w_cap,
+                                       interpret=interpret)
+
+
+def scan_topk_windows(corpus: jax.Array, attrs: jax.Array, q: jax.Array,
+                      qlo: jax.Array, qhi: jax.Array, starts: jax.Array,
+                      counts: jax.Array, *, k: int, w_cap: int,
+                      interpret: Optional[bool] = None):
+    """Windowed brute-scan top-k over a POSITION-ordered corpus
+    (DESIGN.md §12): starts/counts (B, W) int32 give each query's
+    antichain windows (start = -1 pads; counts <= w_cap; sorted
+    ascending per lane for the tie-break contract) -> (positions (B, k)
+    int32, dists (B, k) f32). The hybrid planner's per-node scan path;
+    oracle ``scan_topk_windows_ref``."""
+    return _scan_topk_windows(corpus, attrs, q, qlo, qhi, starts, counts,
+                              k, w_cap, _auto_interpret(interpret))
+
+
 # re-export oracles for convenience
 l2dist_qn_ref = _ref.l2dist_qn_ref
 l2dist_qc_ref = _ref.l2dist_qc_ref
 gather_l2_ref = _ref.gather_l2_ref
 gather_l2_filter_ref = _ref.gather_l2_filter_ref
+gather_l2_filter_q8_ref = _ref.gather_l2_filter_q8_ref
+scan_topk_ref = _ref.scan_topk_ref
+scan_topk_q8_ref = _ref.scan_topk_q8_ref
+scan_topk_windows_ref = _ref.scan_topk_windows_ref

@@ -1,0 +1,79 @@
+"""Corpus quantization helpers for the compressed score path (DESIGN.md §12).
+
+The quantized replica halves (bf16) or quarters (int8) the HBM bytes
+each gather/scan kernel streams per candidate row; exactness is restored
+by an f32 rerank of the over-fetched top-``k*rerank_mult`` through the
+unquantized ``gather_l2_filter`` path (engine ``SearchParams.quant``).
+
+Layout contract:
+
+  * ``bf16``: ``qvecs = vecs.astype(bfloat16)``, no scale plane.
+  * ``int8``: symmetric per-row scaling — ``scale[i] = max(|row_i|)/127``
+    (all-zero rows get scale 1 so dequant stays finite), ``qvecs[i] =
+    clip(round(row_i/scale[i]), -127, 127)`` int8, scale kept as an
+    ``(n, 1)`` f32 plane so kernels can DMA it row-wise next to the
+    vector row.
+
+``dequant_rows`` is THE dequantization everywhere — kernels, jnp
+oracles, and the delta buffer all call the same expression
+(``rows.astype(f32) [* scale]``), which is what makes the kernel-vs-
+oracle id pins bitwise and the replica coherent across the streaming
+write path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QUANTS", "quantize_rows_i8", "quant_replica", "dequant_rows",
+           "quant_bytes_per_row"]
+
+QUANTS = ("none", "bf16", "int8")
+
+
+def quantize_rows_i8(vecs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., n, d) float -> (qvecs (..., n, d) int8, scale (..., n, 1) f32)."""
+    v = vecs.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)       # (..., n, 1)
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quant_replica(vecs: jax.Array,
+                  quant: str) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Build the compressed replica for ``quant`` in ("bf16", "int8").
+
+    Pure jnp on the last two axes, so it works unchanged on a single
+    ``(n, d)`` corpus and on ``build_sharded``'s stacked ``(S, n, d)``.
+    """
+    if quant == "bf16":
+        return vecs.astype(jnp.bfloat16), None
+    if quant == "int8":
+        return quantize_rows_i8(vecs)
+    raise ValueError(f"quant must be 'bf16' or 'int8', got {quant!r}")
+
+
+def dequant_rows(rows: jax.Array,
+                 scale: Optional[jax.Array] = None) -> jax.Array:
+    """Reconstruct f32 rows from a replica slice (+ its scale rows)."""
+    r = rows.astype(jnp.float32)
+    if scale is not None:
+        r = r * scale.astype(jnp.float32)
+    return r
+
+
+def quant_bytes_per_row(d: int, quant: str) -> int:
+    """HBM bytes one corpus row costs a streaming kernel under ``quant``
+    (int8 includes the 4-byte scale) — the analytic bytes-per-query
+    accounting in benchmarks/kernels_bench.py."""
+    if quant == "none":
+        return 4 * d
+    if quant == "bf16":
+        return 2 * d
+    if quant == "int8":
+        return d + 4
+    raise ValueError(f"unknown quant {quant!r}")

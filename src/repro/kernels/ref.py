@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref",
-           "gather_l2_filter_ref", "scan_topk_ref"]
+           "gather_l2_filter_ref", "scan_topk_ref",
+           "gather_l2_filter_q8_ref", "scan_topk_q8_ref",
+           "scan_topk_windows_ref"]
 
 
 def l2dist_qn_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -70,6 +72,72 @@ def scan_topk_ref(corpus: jnp.ndarray, attrs: jnp.ndarray, q: jnp.ndarray,
     ok = jnp.all((a[None] >= qlo[:, None, :]) & (a[None] <= qhi[:, None, :]),
                  axis=-1)                                # (B, N); NaN -> False
     masked = jnp.where(ok, dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-masked, k)
+    dists = -neg
+    ids = jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)
+    return ids, dists
+
+
+def gather_l2_filter_q8_ref(idx: jnp.ndarray, qcorpus: jnp.ndarray,
+                            qscale: jnp.ndarray, attrs: jnp.ndarray,
+                            q: jnp.ndarray, qlo: jnp.ndarray,
+                            qhi: jnp.ndarray) -> jnp.ndarray:
+    """int8 replica oracle for ``gather_l2_filter_q8_blocked_raw``:
+    idx (B, C) int32 (-1 = pad) into qcorpus (N, d) int8 with per-row
+    scale (N, 1) f32 — dequantize the gathered rows then score exactly
+    like ``gather_l2_filter_ref`` (DESIGN.md §12)."""
+    from .quant import dequant_rows
+
+    safe = jnp.maximum(idx, 0)
+    rows = dequant_rows(qcorpus[safe], qscale[safe])     # (B, C, d) f32
+    dist = l2dist_qc_ref(q, rows)
+    a = attrs[safe].astype(jnp.float32)
+    ok = jnp.all((a >= qlo[:, None, :]) & (a <= qhi[:, None, :]), axis=-1)
+    return jnp.where(ok & (idx >= 0), dist, jnp.inf)
+
+
+def scan_topk_q8_ref(qcorpus: jnp.ndarray, qscale: jnp.ndarray,
+                     attrs: jnp.ndarray, q: jnp.ndarray, qlo: jnp.ndarray,
+                     qhi: jnp.ndarray,
+                     k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 replica oracle for ``scan_topk_q8_raw``: dequantize the whole
+    corpus then run the exact masked scan (DESIGN.md §12). Distances are
+    over the *quantized* rows — the engine reranks the returned
+    candidates through the f32 path before answering."""
+    from .quant import dequant_rows
+
+    return scan_topk_ref(dequant_rows(qcorpus, qscale), attrs, q, qlo,
+                         qhi, k)
+
+
+def scan_topk_windows_ref(corpus: jnp.ndarray, attrs: jnp.ndarray,
+                          q: jnp.ndarray, qlo: jnp.ndarray,
+                          qhi: jnp.ndarray, starts: jnp.ndarray,
+                          counts: jnp.ndarray,
+                          k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed-scan oracle for ``scan_topk_windows_raw`` (DESIGN.md §12).
+
+    corpus (N, d) / attrs (N, m) are in **position order** (the planner's
+    DFS ``order`` permutation applied); starts/counts (B, W) int32 give
+    each query's antichain windows — disjoint, ``-1`` start = pad window.
+    A row participates for query i iff it lies inside one of i's windows
+    AND passes the range predicate; output ids are positions (the caller
+    maps back through ``order``), ties break to the lowest position like
+    ``scan_topk_ref``.
+    """
+    N = corpus.shape[0]
+    rows = jnp.arange(N, dtype=jnp.int32)                # (N,)
+    live = starts[:, :, None] >= 0                       # (B, W, 1)
+    inside = ((rows[None, None, :] >= starts[:, :, None]) &
+              (rows[None, None, :] < starts[:, :, None] + counts[:, :, None]))
+    cov = jnp.any(live & inside, axis=1)                 # (B, N)
+    diff = corpus[None, :, :].astype(jnp.float32) - q[:, None, :].astype(
+        jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)
+    a = attrs.astype(jnp.float32)
+    ok = jnp.all((a[None] >= qlo[:, None, :]) & (a[None] <= qhi[:, None, :]),
+                 axis=-1)
+    masked = jnp.where(ok & cov, dist, jnp.inf)
     neg, idx = jax.lax.top_k(-masked, k)
     dists = -neg
     ids = jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)

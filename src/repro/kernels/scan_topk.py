@@ -49,8 +49,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["scan_topk_kernel", "scan_topk_raw"]
+__all__ = ["scan_topk_kernel", "scan_topk_raw",
+           "scan_topk_q8_kernel", "scan_topk_q8_raw",
+           "scan_topk_windows_kernel", "scan_topk_windows_raw"]
 
 
 def scan_topk_kernel(corpus_ref, attrs_ref, q_ref, qlo_ref, qhi_ref,
@@ -136,4 +139,203 @@ def scan_topk_raw(corpus: jax.Array, attrs: jax.Array, q: jax.Array,
         ],
         interpret=interpret,
     )(corpus, attrs, q, qlo, qhi)
+    return ids, dists
+
+
+def _fold_tile_topk(dist, ok, rows, ids_ref, dists_ref):
+    """Fold one scored tile into the running (1, k) top-k carried in the
+    revisited output blocks (the streaming step shared by the quantized
+    and windowed scan kernels; same extraction order as
+    ``scan_topk_kernel`` — (distance, stream position), so with tiles
+    arriving in ascending row order ties break to the lowest id)."""
+    k = ids_ref.shape[1]
+    cand_d = jnp.concatenate(
+        [dists_ref[...], jnp.where(ok, dist, jnp.inf)[None, :]], axis=1)
+    cand_i = jnp.concatenate([ids_ref[...], rows], axis=1)
+
+    def take(t, carry):
+        cd, ci, od, oi = carry
+        pos = jnp.argmin(cd, axis=1)[0]      # first min: lowest-id tie-break
+        dmin = cd[0, pos]
+        od = od.at[0, t].set(dmin)
+        oi = oi.at[0, t].set(jnp.where(jnp.isinf(dmin), -1, ci[0, pos]))
+        cd = cd.at[0, pos].set(jnp.inf)
+        return cd, ci, od, oi
+
+    _, _, od, oi = jax.lax.fori_loop(
+        0, k, take, (cand_d, cand_i, dists_ref[...], ids_ref[...]))
+    dists_ref[...] = od
+    ids_ref[...] = oi
+
+
+def scan_topk_q8_kernel(corpus_ref, scale_ref, attrs_ref, q_ref, qlo_ref,
+                        qhi_ref, ids_ref, dists_ref):
+    """int8-replica variant of ``scan_topk_kernel`` (DESIGN.md §12): the
+    (N_BLK, d) int8 tile streams with its (N_BLK, 1) f32 scale plane and
+    dequantizes in-kernel (``rows.astype(f32) * scale``), quartering the
+    HBM bytes per scanned row."""
+    j = pl.program_id(1)
+    n_blk = corpus_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        ids_ref[...] = jnp.full(ids_ref.shape, -1, jnp.int32)
+        dists_ref[...] = jnp.full(dists_ref.shape, jnp.inf, jnp.float32)
+
+    rows_f = corpus_ref[...].astype(jnp.float32) * scale_ref[...]
+    d = q_ref[...].astype(jnp.float32) - rows_f
+    dist = jnp.sum(d * d, axis=-1)                       # (n_blk,)
+    a = attrs_ref[...].astype(jnp.float32)               # (n_blk, m)
+    ok = jnp.all((a >= qlo_ref[...]) & (a <= qhi_ref[...]), axis=-1)
+    rows = j * n_blk + jax.lax.broadcasted_iota(jnp.int32, (1, n_blk), 1)
+    _fold_tile_topk(dist, ok, rows, ids_ref, dists_ref)
+
+
+def scan_topk_q8_raw(qcorpus: jax.Array, qscale: jax.Array,
+                     attrs: jax.Array, q: jax.Array, qlo: jax.Array,
+                     qhi: jax.Array, *, k: int, n_blk: int = 512,
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """qcorpus (N, d) int8 with per-row scale qscale (N, 1) f32, attrs
+    (N, m) f32, q (B, d), qlo/qhi (B, m) -> (ids (B, k) int32, dists
+    (B, k) f32): exact masked top-k of the *dequantized* distances
+    (oracle ``ref.scan_topk_q8_ref``; the engine reranks through the f32
+    path). Same NaN-attrs padding contract as ``scan_topk_raw``."""
+    B = q.shape[0]
+    N, D = qcorpus.shape
+    M = attrs.shape[1]
+    if not 1 <= k <= N:
+        raise ValueError(f"k must be in [1, N={N}], got {k}")
+    n_blk = min(n_blk, N)
+    pad = (-N) % n_blk
+    if pad:
+        qcorpus = jnp.pad(qcorpus, ((0, pad), (0, 0)))
+        qscale = jnp.pad(qscale, ((0, pad), (0, 0)), constant_values=1.0)
+        attrs = jnp.pad(attrs, ((0, pad), (0, 0)),
+                        constant_values=jnp.nan)
+    n_blocks = (N + pad) // n_blk
+    ids, dists = pl.pallas_call(
+        scan_topk_q8_kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((n_blk, D), lambda i, j: (j, 0)),   # int8 tile
+            pl.BlockSpec((n_blk, 1), lambda i, j: (j, 0)),   # scale plane
+            pl.BlockSpec((n_blk, M), lambda i, j: (j, 0)),   # attrs tile
+            pl.BlockSpec((1, D), lambda i, j: (i, 0)),       # query row
+            pl.BlockSpec((1, M), lambda i, j: (i, 0)),       # qlo row
+            pl.BlockSpec((1, M), lambda i, j: (i, 0)),       # qhi row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running ids
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running dists
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qcorpus, qscale, attrs, q, qlo, qhi)
+    return ids, dists
+
+
+def scan_topk_windows_kernel(starts_ref, counts_ref, corpus_ref, attrs_ref,
+                             q_ref, qlo_ref, qhi_ref, ids_ref, dists_ref,
+                             rows_ref, arows_ref, vsem_ref, asem_ref):
+    """Grid (B, W): step (i, w) brute-scans the contiguous position
+    window [starts[i, w], starts[i, w] + counts[i, w]) of a
+    position-ordered corpus and folds it into query i's running (1, k)
+    top-k (DESIGN.md §12 — the hybrid planner's per-node scan).
+
+    The window slice DMAs as ONE contiguous (w_cap, d) block (plus its
+    attrs block) — the sequential-stream shape HBM likes — with lanes
+    beyond ``counts[i, w]`` masked out; pad windows (start = -1) carry
+    count 0, so every lane masks and the DMA (clamped to row 0) is
+    harmless. Emitted ids are POSITIONS; the caller maps them back
+    through the DFS ``order`` permutation."""
+    i = pl.program_id(0)
+    w = pl.program_id(1)
+    w_cap = rows_ref.shape[0]
+
+    @pl.when(w == 0)
+    def _init():
+        ids_ref[...] = jnp.full(ids_ref.shape, -1, jnp.int32)
+        dists_ref[...] = jnp.full(dists_ref.shape, jnp.inf, jnp.float32)
+
+    s = jnp.maximum(starts_ref[i, w], 0)
+    cnt = counts_ref[i, w]
+    vdma = pltpu.make_async_copy(corpus_ref.at[pl.dslice(s, w_cap)],
+                                 rows_ref, vsem_ref)
+    adma = pltpu.make_async_copy(attrs_ref.at[pl.dslice(s, w_cap)],
+                                 arows_ref, asem_ref)
+    vdma.start()
+    adma.start()
+    vdma.wait()
+    adma.wait()
+
+    d = q_ref[...].astype(jnp.float32) - rows_ref[...].astype(jnp.float32)
+    dist = jnp.sum(d * d, axis=-1)                       # (w_cap,)
+    a = arows_ref[...].astype(jnp.float32)               # (w_cap, m)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (w_cap,), 0)
+    ok = (jnp.all((a >= qlo_ref[...]) & (a <= qhi_ref[...]), axis=-1)
+          & (lane < cnt))
+    pos = (s + jax.lax.broadcasted_iota(jnp.int32, (1, w_cap), 1))
+    _fold_tile_topk(dist, ok, pos, ids_ref, dists_ref)
+
+
+def scan_topk_windows_raw(corpus: jax.Array, attrs: jax.Array,
+                          q: jax.Array, qlo: jax.Array, qhi: jax.Array,
+                          starts: jax.Array, counts: jax.Array, *, k: int,
+                          w_cap: int,
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """corpus (N, d) / attrs (N, m) in POSITION order, q (B, d), qlo/qhi
+    (B, m), starts/counts (B, W) int32 antichain windows (disjoint;
+    start = -1 pads; every count <= w_cap) -> (ids (B, k) int32 positions,
+    dists (B, k) f32), exact masked top-k over the union of each query's
+    windows. Oracle: ``ref.scan_topk_windows_ref``.
+
+    Bit-parity tie-break contract: windows must arrive sorted ascending
+    by start per lane (the planner sorts), so stream position order ==
+    global position order and ties break to the lowest position exactly
+    like ``lax.top_k``. The corpus pads with ``w_cap`` NaN-attr rows so
+    a window starting near N can DMA its full (w_cap, d) slice without
+    running off the buffer."""
+    B = q.shape[0]
+    N, D = corpus.shape
+    M = attrs.shape[1]
+    W = starts.shape[1]
+    if w_cap < 1:
+        raise ValueError(f"w_cap must be >= 1, got {w_cap}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    corpus = jnp.pad(corpus, ((0, w_cap), (0, 0)))
+    attrs = jnp.pad(attrs, ((0, w_cap), (0, 0)), constant_values=jnp.nan)
+    ids, dists = pl.pallas_call(
+        scan_topk_windows_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, W),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),    # corpus (windows DMA)
+                pl.BlockSpec(memory_space=pltpu.ANY),    # attrs  (windows DMA)
+                pl.BlockSpec((1, D), lambda i, w, s_ref, c_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, w, s_ref, c_ref: (i, 0)),
+                pl.BlockSpec((1, M), lambda i, w, s_ref, c_ref: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda i, w, s_ref, c_ref: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, w, s_ref, c_ref: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((w_cap, D), corpus.dtype),
+                pltpu.VMEM((w_cap, M), attrs.dtype),
+                pltpu.SemaphoreType.DMA(()),
+                pltpu.SemaphoreType.DMA(()),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(starts, counts, corpus, attrs, q, qlo, qhi)
     return ids, dists

@@ -47,7 +47,10 @@ def serve_khi(args):
                           expand_width=args.expand_width,
                           router=args.router,
                           strategy=args.strategy,
-                          scan_threshold=args.scan_threshold)
+                          scan_threshold=args.scan_threshold,
+                          quant=args.quant,
+                          rerank_mult=args.rerank_mult,
+                          node_scan_threshold=args.node_scan_threshold)
     buckets = tuple(sorted({1, 8, args.batch}))
     svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
 
@@ -161,10 +164,24 @@ def main(argv=None):
     ap.add_argument("--strategy", default="auto", choices=list(STRATEGIES),
                     help="execution strategy: graph | scan (exact brute "
                          "scan) | auto (per-query planner dispatch — the "
-                         "serving default, as in configs/khi_serve.py)")
+                         "serving default, as in configs/khi_serve.py) | "
+                         "hybrid (per-node windowed scan + graph walk, "
+                         "DESIGN.md §12)")
     ap.add_argument("--scan-threshold", type=int, default=0,
                     help="auto-dispatch threshold in in-range objects "
                          "(0 = derive DEFAULT_SCAN_FRAC of the corpus)")
+    from repro.core.engine import QUANTS
+
+    ap.add_argument("--quant", default="none", choices=list(QUANTS),
+                    help="quantized score path (DESIGN.md §12): stream a "
+                         "bf16/int8 corpus replica and rerank the "
+                         "over-fetched top k*rerank_mult exactly in f32")
+    ap.add_argument("--rerank-mult", type=int, default=4,
+                    help="quantized over-fetch factor before the exact "
+                         "f32 rerank")
+    ap.add_argument("--node-scan-threshold", type=int, default=0,
+                    help="hybrid per-node scan threshold in rows "
+                         "(0 = inherit the resolved scan threshold)")
     ap.add_argument("--stream-smoke", action="store_true",
                     help="exercise the streaming write path: insert -> "
                          "delete -> compact -> re-query (DESIGN.md §11)")

@@ -63,8 +63,8 @@ import numpy as np
 
 from ..core.delta import StreamingState
 from ..core.engine import (SCAN_BACKENDS, DeviceIndex, Planner, SearchParams,
-                           _query_one, device_put_index, resolve_scorer,
-                           validate_search_params)
+                           _query_one, device_put_index, resolve_scorer_pair,
+                           validate_search_params, with_quant_replica)
 from ..core.khi import KHIConfig, KHIIndex
 from ..core.sharded import (ShardedKHI, _merge_topk, _shard_search,
                             build_sharded)
@@ -161,8 +161,15 @@ class KHIService:
                 f"§10).")
         self.params = validate_search_params(
             self._user_params, di, on_undersized=self._on_undersized)
-        self._scorer = resolve_scorer(self.params.backend,
-                                      dist_fn=self._legacy_dist_fn)
+        # quantized score path (DESIGN.md §12): attach the compressed
+        # replica the scorers stream; swap_index/compact re-derive it for
+        # every new epoch through this same path
+        if self.params.quant != "none" and di.qvecs is None:
+            di = with_quant_replica(di, self.params.quant)
+            index = (dataclasses.replace(index, di=di) if self._sharded
+                     else di)
+        self._scorer, self._exact_scorer = resolve_scorer_pair(
+            self.params, dist_fn=self._legacy_dist_fn)
         self.index = index
         self._search = self._build_search_fn()
 
@@ -215,7 +222,7 @@ class KHIService:
         # identical shapes, which the jitted programs must pick up without
         # a rebuild. The old-epoch drain in swap_index still runs against
         # the old index — the flush happens before _install_index rebinds.
-        p, scorer = self.params, self._scorer
+        p, scorer, exact = self.params, self._scorer, self._exact_scorer
         self._planner = None
         if p.strategy != "graph":
             # planner-backed path (DESIGN.md §10): per-lane dispatch to the
@@ -235,7 +242,8 @@ class KHIService:
         if not self._sharded:
             @jax.jit
             def single(di: DeviceIndex, q, qlo, qhi):
-                fn = functools.partial(_query_one, p=p, scorer=scorer)
+                fn = functools.partial(_query_one, p=p, scorer=scorer,
+                                       exact_scorer=exact)
                 ids, dists, _ = jax.vmap(
                     lambda qq, lo, hi: fn(di, qq, lo, hi))(q, qlo, qhi)
                 return ids, dists
@@ -253,7 +261,7 @@ class KHIService:
         def fanout(skhi: ShardedKHI, q, qlo, qhi):
             def per_shard(di, off):
                 return _shard_search(di, off, n_shards, q, qlo, qhi,
-                                     p, scorer)
+                                     p, scorer, exact_scorer=exact)
             gids, dists, _ = jax.vmap(per_shard)(skhi.di, skhi.offsets)
             return _merge_topk(gids, dists, p.k)
 
@@ -439,7 +447,8 @@ class KHIService:
         self._stream = StreamingState(
             self.index, capacity=capacity,
             build_config=build_config or KHIConfig(builder="device"),
-            backend=backend)
+            backend=backend, quant=self.params.quant,
+            rerank_mult=self.params.rerank_mult)
         self._note_mutation()
         return self._stream
 

@@ -1,0 +1,282 @@
+"""Per-node hybrid dispatch (DESIGN.md §12, ``strategy="hybrid"``): the
+planner classifies each query's tree antichain into small nodes (brute-
+scanned as contiguous DFS windows by ``scan_topk_windows``) and large
+nodes (graph-walked), merging the partial top-k streams under the
+(dist, id) lexicographic contract.
+
+The load-bearing exactness claim: a lane whose antichain is ALL small
+(mode 1) is answered by windows alone, which enumerate precisely the
+in-range candidate rows — so mode-1 answers must be bit-identical to the
+full brute-scan oracle, with hops = 0. Mixed lanes (mode 2) are
+approximate like the graph walk, but the merge must never duplicate an
+id or break the (dist, id) order.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.router import HostCardEstimator
+from repro.core.sharded import build_sharded
+from repro.kernels.ref import scan_topk_ref, scan_topk_windows_ref
+
+BACKENDS = ("jnp", "pallas_gather_l2_filter")
+
+
+def _corpus(n=600, d=16, m=2, seed=0):
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 1, (n, m)).astype(np.float32)
+    return vecs, attrs
+
+
+def _queries(B, d, m, seed=1):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    qlo = np.where(rng.uniform(size=(B, m)) < 0.5, 0.0, 0.4).astype(
+        np.float32)
+    qhi = np.where(rng.uniform(size=(B, m)) < 0.5, 1.0, 0.6).astype(
+        np.float32)
+    return q, qlo, qhi
+
+
+def _oracle(vecs, attrs, q, qlo, qhi, k):
+    i, d = scan_topk_ref(jnp.asarray(vecs), jnp.asarray(attrs),
+                         jnp.asarray(q), jnp.asarray(qlo),
+                         jnp.asarray(qhi), k)
+    return np.asarray(i), np.asarray(d)
+
+
+# -------------------------------------------------- windowed-scan kernel
+
+@pytest.mark.parametrize("B,N,D,M,k,W,w_cap", [(2, 128, 8, 2, 4, 4, 16),
+                                               (3, 300, 16, 3, 8, 8, 32)])
+def test_scan_topk_windows_kernel_bitwise_vs_ref(B, N, D, M, k, W, w_cap):
+    from repro.kernels.scan_topk import scan_topk_windows_raw
+    rng = np.random.default_rng(B + N)
+    corpus = rng.standard_normal((N, D)).astype(np.float32)
+    attrs = rng.uniform(0, 10, (N, M)).astype(np.float32)
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    qlo = rng.uniform(0, 6, (B, M)).astype(np.float32)
+    qhi = qlo + rng.uniform(0, 5, (B, M)).astype(np.float32)
+    # disjoint ascending windows per lane, some lanes partially padded
+    starts = np.full((B, W), -1, np.int32)
+    counts = np.zeros((B, W), np.int32)
+    for b in range(B):
+        nw = rng.integers(1, W + 1)
+        pos = np.sort(rng.choice(N // w_cap, size=nw, replace=False))
+        starts[b, :nw] = pos * w_cap
+        counts[b, :nw] = rng.integers(1, w_cap + 1, size=nw)
+    a = [jnp.asarray(x) for x in (corpus, attrs, q, qlo, qhi, starts, counts)]
+    gi, gd = scan_topk_windows_raw(*a, k=k, w_cap=w_cap, interpret=True)
+    wi, wd = scan_topk_windows_ref(*a, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    fin = np.isfinite(np.asarray(wd))
+    np.testing.assert_allclose(np.asarray(gd)[fin], np.asarray(wd)[fin],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scan_topk_windows_empty_lane():
+    from repro.kernels.scan_topk import scan_topk_windows_raw
+    rng = np.random.default_rng(5)
+    corpus = rng.standard_normal((64, 8)).astype(np.float32)
+    attrs = rng.uniform(0, 1, (64, 2)).astype(np.float32)
+    q = rng.standard_normal((2, 8)).astype(np.float32)
+    qlo = np.zeros((2, 2), np.float32)
+    qhi = np.ones((2, 2), np.float32)
+    starts = np.array([[-1, -1], [0, 32]], np.int32)   # lane 0: no windows
+    counts = np.array([[0, 0], [8, 8]], np.int32)
+    gi, gd = scan_topk_windows_raw(
+        jnp.asarray(corpus), jnp.asarray(attrs), jnp.asarray(q),
+        jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(starts),
+        jnp.asarray(counts), k=4, w_cap=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gi)[0], [-1] * 4)
+    assert np.all(np.isinf(np.asarray(gd)[0]))
+    assert np.all(np.asarray(gi)[1] >= 0)
+
+
+def test_windows_cover_exactly_their_rows():
+    """Rows outside every window never appear, even when in range."""
+    rng = np.random.default_rng(6)
+    corpus = rng.standard_normal((64, 8)).astype(np.float32)
+    attrs = rng.uniform(0, 1, (64, 2)).astype(np.float32)
+    q = np.zeros((1, 8), np.float32)
+    qlo = np.zeros((1, 2), np.float32)
+    qhi = np.ones((1, 2), np.float32)
+    gi, _ = scan_topk_windows_ref(
+        jnp.asarray(corpus), jnp.asarray(attrs), jnp.asarray(q),
+        jnp.asarray(qlo), jnp.asarray(qhi),
+        jnp.asarray([[16]], jnp.int32), jnp.asarray([[8]], jnp.int32), 64)
+    got = np.asarray(gi)[0]
+    got = got[got >= 0]
+    assert set(got) == set(range(16, 24))
+
+
+# ----------------------------------------------------- antichain plumbing
+
+def test_antichain_nodes_disjoint_and_sum_to_cards():
+    vecs, attrs = _corpus()
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8))
+    di = eng.device_put_index(idx)
+    import jax
+    host = {f: np.asarray(jax.device_get(getattr(di, f)))
+            for f in ("left", "right", "dim", "bl", "lo", "hi", "count",
+                      "start", "root")}
+    est = HostCardEstimator(host["left"], host["right"], host["dim"],
+                            host["bl"], host["lo"], host["hi"],
+                            host["count"].astype(np.int64),
+                            int(host["root"]))
+    _, qlo, qhi = _queries(8, 16, 2, seed=3)
+    anti = est.antichain(qlo, qhi)
+    cards = est.cards(qlo, qhi)
+    np.testing.assert_array_equal(anti @ host["count"].astype(np.int64),
+                                  cards)
+    # antichain nodes carry disjoint DFS ranges per lane
+    for b in range(anti.shape[0]):
+        nodes = np.nonzero(anti[b])[0]
+        spans = sorted((int(host["start"][p]), int(host["count"][p]))
+                       for p in nodes)
+        for (s0, c0), (s1, _) in zip(spans, spans[1:]):
+            assert s0 + c0 <= s1, "overlapping antichain extents"
+
+
+# ---------------------------------------------------------- planner modes
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hybrid_pure_window_lanes_exact(backend):
+    vecs, attrs = _corpus()
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8))
+    q, qlo, qhi = _queries(13, 16, 2)
+    qlo[0], qhi[0] = 0.45, 0.55                    # narrow -> small nodes
+    oid, od = _oracle(vecs, attrs, q, qlo, qhi, 5)
+    p = eng.SearchParams(k=5, ef=64, backend=backend, router="level",
+                         strategy="hybrid", node_scan_threshold=64)
+    ids, dists, hops, plan = eng.Planner(idx, p).search(q, qlo, qhi)
+    w = plan.mode == 1
+    assert w.any(), "workload produced no pure-window lane"
+    np.testing.assert_array_equal(ids[w], oid[w])
+    assert np.all(hops[w] == 0)
+    np.testing.assert_array_equal(plan.use_scan, w)
+    fin = np.isfinite(od[w])
+    np.testing.assert_allclose(dists[w][fin], od[w][fin], rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_hybrid_mode_pinning():
+    """Whole-corpus boxes hit the root (large -> graph or mixed); narrow
+    boxes with an all-small antichain go pure-window; empty boxes have
+    card 0 and stay on the graph path (exit-at-once lanes)."""
+    vecs, attrs = _corpus()
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8))
+    q, _, _ = _queries(3, 16, 2)
+    qlo = np.zeros((3, 2), np.float32)
+    qhi = np.ones((3, 2), np.float32)
+    qlo[1], qhi[1] = 0.48, 0.52                    # narrow
+    qlo[2], qhi[2] = 1.0, 0.0                      # provably empty
+    p = eng.SearchParams(k=5, ef=64, backend="jnp", router="level",
+                         strategy="hybrid", node_scan_threshold=64)
+    planner = eng.Planner(idx, p)
+    plan = planner.plan(qlo, qhi)
+    assert plan.mode[0] in (0, 2)                  # root is large
+    assert plan.mode[1] == 1 and plan.n_windows[1] > 0
+    assert plan.mode[2] == 0 and plan.card[2] == 0
+    assert plan.node_threshold == 64
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hybrid_mixed_lanes_merge_contract(backend):
+    """Mode-2 lanes: no duplicate ids, (dist, id) ascending, and recall
+    no worse than the graph walk alone on the same lane."""
+    vecs, attrs = _corpus(n=900, seed=7)
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8))
+    q, qlo, qhi = _queries(16, 16, 2, seed=8)
+    k = 6
+    p = eng.SearchParams(k=k, ef=48, backend=backend, router="level",
+                         strategy="hybrid", node_scan_threshold=48)
+    planner = eng.Planner(idx, p)
+    ids, dists, hops, plan = planner.search(q, qlo, qhi)
+    mixed = np.nonzero(plan.mode == 2)[0]
+    assert mixed.size, "workload produced no mixed lane"
+    oid, _ = _oracle(vecs, attrs, q, qlo, qhi, k)
+    pg = dataclasses.replace(p, strategy="graph")
+    gids, _, _, _ = eng.Planner(idx, pg).search(q, qlo, qhi)
+    for b in mixed:
+        live = ids[b][ids[b] >= 0]
+        assert len(set(live)) == len(live), "duplicate id after merge"
+        dd = dists[b][ids[b] >= 0]
+        order = np.lexsort((live, dd))
+        np.testing.assert_array_equal(order, np.arange(len(live)))
+        want = set(oid[b][oid[b] >= 0])
+        r_h = len(set(live) & want) / max(1, len(want))
+        r_g = len(set(gids[b][gids[b] >= 0]) & want) / max(1, len(want))
+        assert r_h >= r_g, (b, r_h, r_g)
+
+
+def test_merge_dedup_keeps_best_distance():
+    ia = np.array([[3, 5, -1]], np.int32)
+    da = np.array([[1.0, 2.0, np.inf]], np.float32)
+    ib = np.array([[5, 2]], np.int32)
+    db = np.array([[1.5, 3.0]], np.float32)       # id 5 found twice
+    oi, od = eng._merge_dedup(ia, da, ib, db, 4)
+    np.testing.assert_array_equal(oi[0], [3, 5, 2, -1])
+    np.testing.assert_array_equal(od[0], [1.0, 1.5, 3.0, np.inf])
+
+
+def test_hybrid_sharded_matches_modes_and_recall():
+    vecs, attrs = _corpus(n=500, seed=9)
+    skhi = build_sharded(vecs, attrs, 3, KHIConfig(M=8, builder="bulk"))
+    q, qlo, qhi = _queries(9, 16, 2, seed=10)
+    qlo[0], qhi[0] = 0.45, 0.55
+    k = 5
+    oid, _ = _oracle(vecs, attrs, q, qlo, qhi, k)
+    p = eng.SearchParams(k=k, ef=64, backend="pallas_gather_l2_filter",
+                         router="level", strategy="hybrid",
+                         node_scan_threshold=48)
+    ids, dists, hops, plan = eng.Planner(skhi, p).search(q, qlo, qhi)
+    w = plan.mode == 1
+    if w.any():                                    # exact on global ids
+        np.testing.assert_array_equal(ids[w], oid[w])
+    for b in range(len(q)):
+        got = set(ids[b][ids[b] >= 0])
+        want = set(oid[b][oid[b] >= 0])
+        assert len(got & want) / max(1, len(want)) >= 0.8, b
+
+
+def test_hybrid_refresh_excludes_tombstones_from_windows():
+    """Tombstoned rows must vanish from pure-window answers after
+    refresh_index rebuilds the position-ordered replica."""
+    vecs, attrs = _corpus()
+    idx = KHIIndex.build(vecs, attrs, KHIConfig(M=8))
+    q, _, _ = _queries(1, 16, 2, seed=11)
+    qlo = np.full((1, 2), 0.45, np.float32)
+    qhi = np.full((1, 2), 0.55, np.float32)
+    p = eng.SearchParams(k=5, ef=64, backend="jnp", router="level",
+                         strategy="hybrid", node_scan_threshold=64)
+    planner = eng.Planner(idx, p)
+    ids0, _, _, plan0 = planner.search(q, qlo, qhi)
+    assert plan0.mode[0] == 1 and ids0[0, 0] >= 0
+    dead = int(ids0[0, 0])
+    di = planner.index
+    tomb = dataclasses.replace(di, attrs=di.attrs.at[dead].set(jnp.nan))
+    planner.refresh_index(tomb, deleted_rows=[np.array([dead])])
+    ids1, _, _, plan1 = planner.search(q, qlo, qhi)
+    assert dead not in ids1[0]
+    masked = attrs.copy()
+    masked[dead] = np.nan
+    oid, _ = _oracle(vecs, masked, q, qlo, qhi, 5)
+    if plan1.mode[0] == 1:
+        np.testing.assert_array_equal(ids1, oid)
+
+
+def test_hybrid_validation_rejections():
+    with pytest.raises(ValueError, match="router"):
+        eng._check_strategy_combo(
+            eng.SearchParams(strategy="hybrid", router="dfs"))
+    with pytest.raises(ValueError, match="strategy"):
+        eng._check_strategy_combo(
+            eng.SearchParams(strategy="hybrid", backend="pallas_l2"))

@@ -293,7 +293,7 @@ def test_service_auto_strategy(tiny_index, tiny_queries, tiny_data):
 
 def test_unknown_strategy_rejected_at_construction():
     with pytest.raises(ValueError, match="strategy"):
-        eng.SearchParams(strategy="hybrid")
+        eng.SearchParams(strategy="bogus")
     with pytest.raises(ValueError, match="scan_threshold"):
         eng.SearchParams(scan_threshold=-1)
 

@@ -55,11 +55,11 @@ def _boxes(rng, b):
     return lo, hi
 
 
-def _make_service(vecs, attrs, n_shards, capacity):
+def _make_service(vecs, attrs, n_shards, capacity, params=SCAN):
     cfg = KHIConfig(M=8, builder="device")
     index = (build_sharded(vecs, attrs, n_shards, cfg) if n_shards > 1
              else KHIIndex.build(vecs, attrs, cfg))
-    svc = KHIService(index, SCAN,
+    svc = KHIService(index, params,
                      config=ServeConfig(buckets=(4, 8), cache_size=64))
     svc.enable_streaming(capacity=capacity, build_config=cfg)
     return svc
@@ -74,7 +74,7 @@ def _check(svc, oracle, rng, nq=4):
     ids, dists = svc.search(Q, lo, hi)
     assert ids.dtype == np.int64
     for i in range(nq):
-        want = oracle.query(Q[i], Predicate(lo[i], hi[i]), SCAN.k)
+        want = oracle.query(Q[i], Predicate(lo[i], hi[i]), svc.params.k)
         got = ids[i][ids[i] >= 0]
         np.testing.assert_array_equal(got, want)
         assert np.all(np.isinf(dists[i][len(want):]))
@@ -87,10 +87,11 @@ def _check(svc, oracle, rng, nq=4):
 
 # --------------------------------------------- property: mutation oracle
 
-def _run_interleaving(seed, n_shards, n_ops=12, n0=96, capacity=32):
+def _run_interleaving(seed, n_shards, n_ops=12, n0=96, capacity=32,
+                      params=SCAN):
     rng = np.random.default_rng(seed)
     vecs, attrs = _grid_vecs(rng, n0), _grid_attrs(rng, n0)
-    svc = _make_service(vecs, attrs, n_shards, capacity)
+    svc = _make_service(vecs, attrs, n_shards, capacity, params)
     oracle = StreamingOracle(vecs, attrs)
     _check(svc, oracle, np.random.default_rng(seed ^ 0xA5))
     for step in range(n_ops):
@@ -134,6 +135,20 @@ def test_mutation_oracle_single_shard(seed):
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
 def test_mutation_oracle_sharded(seed):
     _run_interleaving(seed, n_shards=3, n_ops=8)
+
+
+@pytest.mark.parametrize("quant", ["bf16", "int8"])
+def test_mutation_oracle_quant_replica(quant):
+    """The full interleaving through the quantized scan path (DESIGN.md
+    §12): base + delta quant replicas must stay coherent across appends,
+    NaN tombstones and compaction epochs. ``rerank_mult=64`` makes the
+    exact-f32 rerank's over-fetch cover every candidate at this corpus
+    size, so the bar is the same BIT-EXACT agreement as the f32 runs —
+    any stale or mis-scaled replica row would surface as a wrong id."""
+    import dataclasses
+    p = dataclasses.replace(SCAN, quant=quant, rerank_mult=64)
+    _run_interleaving(1234, n_shards=1, params=p)
+    _run_interleaving(77, n_shards=2, n_ops=8, params=p)
 
 
 # ------------------------------------------------------- targeted pins

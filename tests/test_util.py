@@ -1,0 +1,43 @@
+"""Direct unit tests for core.util (shared pow2 padding helper)."""
+
+import pytest
+
+from repro.core.util import pow2_at_least
+
+
+def test_pow2_exact_powers_are_fixed_points():
+    for e in range(16):
+        assert pow2_at_least(1 << e) == 1 << e
+
+
+def test_pow2_rounds_up():
+    assert pow2_at_least(0) == 1
+    assert pow2_at_least(1) == 1
+    assert pow2_at_least(2) == 2
+    assert pow2_at_least(3) == 4
+    assert pow2_at_least(5) == 8
+    assert pow2_at_least(9) == 16
+    assert pow2_at_least(1023) == 1024
+    assert pow2_at_least(1025) == 2048
+
+
+def test_pow2_properties():
+    for b in range(1, 300):
+        p = pow2_at_least(b)
+        assert p >= b
+        assert p & (p - 1) == 0          # power of two
+        assert p < 2 * b                 # tight: next pow2, not beyond
+
+
+def test_pow2_negative_rejected():
+    with pytest.raises(ValueError, match=">= 0"):
+        pow2_at_least(-1)
+
+
+def test_pow2_is_the_shared_instance():
+    """delta and engine must use this helper, not private twins."""
+    from repro.core import delta
+    from repro.core import engine
+
+    assert delta._pow2 is pow2_at_least
+    assert engine.pow2_at_least is pow2_at_least
