@@ -18,13 +18,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: qps_recall,qps_smoke,convergence,"
                          "vary_k,vary_card,build,build_bench,kernels,serve,"
-                         "selectivity,ingest")
+                         "selectivity,ingest,load")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import build_and_size, build_bench, convergence, ingest_bench
-    from . import kernels_bench, qps_recall, qps_smoke, selectivity_bench
-    from . import serve_bench, vary_card, vary_k
+    from . import kernels_bench, load_bench, qps_recall, qps_smoke
+    from . import selectivity_bench, serve_bench, vary_card, vary_k
 
     lines = ["name,us_per_call,derived"]
     t0 = time.time()
@@ -54,6 +54,8 @@ def main(argv=None) -> None:
         lines += selectivity_bench.csv_lines(selectivity_bench.run(args.scale))
     if want("ingest"):
         lines += ingest_bench.csv_lines(ingest_bench.run(args.scale))
+    if want("load"):
+        lines += load_bench.csv_lines(load_bench.run(args.scale))
 
     print(f"\n# benchmarks done in {time.time()-t0:.0f}s "
           f"(scale={args.scale})")

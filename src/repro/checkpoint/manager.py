@@ -129,7 +129,10 @@ class AsyncCheckpointer:
             try:
                 save_checkpoint(str(self.dir), step, host_tree, meta)
                 self._gc()
-            except BaseException as e:  # noqa: BLE001
+            except Exception as e:
+                # stored for the next wait() to raise on the caller's
+                # thread; KeyboardInterrupt/SystemExit must NOT be
+                # converted into a deferred save error
                 self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)

@@ -975,9 +975,13 @@ class Planner:
         the node-parallel ``router.HostCardEstimator`` (the dispatch
         decision is host-side even in TPU serving; the device sweep
         ``route_level_card`` computes the identical quantity — pinned)
-        behind a per-query **plan cache** keyed on the range-box bytes,
-        so repeated boxes (faceted search, dashboard refreshes, the
-        bench's steady state) re-dispatch without re-estimating.
+        behind a per-query **plan cache** keyed on the range-box bytes
+        (plus a caller-supplied ``plan_salt`` naming the estimator
+        state), so repeated boxes (faceted search, dashboard refreshes,
+        the bench's steady state) re-dispatch without re-estimating.
+        Pass ``plan_cache=`` to share one cache across planners whose
+        estimator state is identical — the serving layer's degradation
+        tiers (DESIGN.md §13) all dispatch off one cache this way.
       * **graph** — the two-phase wide-frontier engine (``_query_one``),
         vmapped; for a sharded index the same fan-out + O(S·k) merge the
         serving layer uses, with per-query hops = max over shards (the
@@ -1006,7 +1010,9 @@ class Planner:
 
     def __init__(self, index, params: SearchParams, *, dist_fn=None,
                  interpret: Optional[bool] = None,
-                 on_undersized: str = "adjust"):
+                 on_undersized: str = "adjust",
+                 plan_cache: Optional["collections.OrderedDict"] = None,
+                 plan_salt: bytes = b""):
         if isinstance(index, KHIIndex):
             index = device_put_index(index)
         # duck-typed ShardedKHI check (sharded.py imports this module)
@@ -1067,8 +1073,19 @@ class Planner:
             self._node_start = np.atleast_2d(start)
             self._node_count = np.atleast_2d(count)
             self._build_pos_replica()
-        self._plan_cache: "collections.OrderedDict[bytes, int]" = \
-            collections.OrderedDict()
+        # Plan cache (§10) — optionally SHARED across planners. The cached
+        # value (the routing cardinality bound) depends only on the range
+        # box and the estimator state (index epoch + tombstones), NOT on
+        # any SearchParams knob: the dispatch threshold is applied at
+        # decision time. The serving layer's degradation ladder (§13)
+        # exploits this — one cache serves every tier, so a box estimated
+        # at full quality re-dispatches for free when the ladder steps the
+        # same box down. ``plan_salt`` tags every key with the caller's
+        # estimator-state identity (tier-INdependent, epoch-dependent) so
+        # a shared cache can never serve a stale epoch's bound.
+        self._plan_cache: "collections.OrderedDict[bytes, int]" = (
+            collections.OrderedDict() if plan_cache is None else plan_cache)
+        self._plan_salt = plan_salt
         self.plan_cache_size = 65536
 
     def _build_pos_replica(self) -> None:
@@ -1123,6 +1140,7 @@ class Planner:
         keys, miss = [], []
         for i in range(B):
             h = hashlib.blake2b(digest_size=16)
+            h.update(self._plan_salt)
             h.update(qlo[i].tobytes())
             h.update(qhi[i].tobytes())
             key = h.digest()

@@ -12,6 +12,10 @@ dispatch between graph search and the exact brute scan, DESIGN.md §10;
 ``--stream-smoke`` additionally exercises the streaming write path
 (insert → delete → compact → re-query, DESIGN.md §11) and asserts that
 post-compaction answers match the pre-compaction delta-merged answers;
+``--load-smoke`` drives the SLO scheduler (DESIGN.md §13) with a bursty
+open-loop replay under ``--inject`` fault injection — ``--slo-ms``,
+``--qdepth`` and ``--degrade-ladder`` set the admission/degradation
+policy — and asserts the no-silent-drop + retry accounting contract;
 ``--mode generate`` runs prefill+decode on a smoke LM.
 """
 
@@ -79,6 +83,8 @@ def serve_khi(args):
           f"buckets={snap['traced_buckets']}")
     if args.stream_smoke:
         stream_smoke(svc, vecs, attrs, Q, lo, hi, args)
+    if args.load_smoke:
+        load_smoke(svc, Q, lo, hi, args)
 
 
 def stream_smoke(svc, vecs, attrs, Q, lo, hi, args):
@@ -112,6 +118,68 @@ def stream_smoke(svc, vecs, attrs, Q, lo, hi, args):
           f"in {ingest_dt * 1e3:.0f}ms, compactions="
           f"{snap['compactions']} n_live={snap['n_live']} "
           f"epoch={snap['epoch']}; pre/post-compaction answers {verdict}")
+
+
+def load_smoke(svc, Q, lo, hi, args):
+    """SLO-scheduler smoke under fault injection (DESIGN.md §13): drive
+    a short bursty open-loop replay through ``SLOScheduler`` with the
+    ``--inject`` faults armed plus one forced deadline breach, then
+    assert the §13 accounting contract — zero silent drops, tier
+    accounting sums to the served total, and the scheduler's injected
+    fault/retry counters reconcile one-for-one with the injector's
+    firing log. This is the CI gate for the recovery layer."""
+    from repro.serve import (FaultInjector, Rejected, Request,
+                             SchedulerConfig, Served, SLOScheduler,
+                             TierSpec, replay_open_loop)
+
+    injector = FaultInjector.parse(args.inject)
+    cfg = SchedulerConfig(
+        qdepth=args.qdepth, slo_ms=args.slo_ms,
+        ladder=TierSpec.parse_ladder(args.degrade_ladder))
+    sched = SLOScheduler(svc, cfg, injector=injector, autostart=True)
+    # warm every tier's bucket shapes outside the replay (compiles would
+    # otherwise dominate the smoke's latencies and trip deadlines)
+    for t in range(svc.n_tiers):
+        for b in svc.config.buckets:
+            svc.search(Q[:b] + np.float32(2e-3), lo[:b], hi[:b], tier=t)
+
+    n = min(48, len(Q))
+    reqs = [Request(Q[i], lo[i], hi[i]) for i in range(n)]
+    # bursty arrivals: a trickle, then half the stream at one instant
+    arrivals = [i * 0.01 for i in range(n // 2)]
+    arrivals += [arrivals[-1]] * (n - n // 2)
+    tickets = replay_open_loop(
+        lambda r: sched.submit(r[1], tenant=f"t{r[0] % 2}"),
+        arrivals, list(enumerate(reqs)))
+    # one forced deadline breach: dead on arrival -> typed "expired"
+    t_doa = sched.submit(reqs[0], deadline_ms=0)
+    snap = sched.shutdown(drain=True)
+    recs = [sched.result(t, timeout=0) for t in tickets]
+
+    fired = injector.counts()
+    n_served = sum(isinstance(r, Served) for r in recs)
+    n_rej = sum(isinstance(r, Rejected) for r in recs)
+    assert isinstance(sched.result(t_doa, timeout=0), Rejected)
+    assert snap["dropped"] == 0, f"silent drop: {snap}"
+    assert n_served + n_rej == n, "missing terminal record"
+    assert sum(snap["tier_served"].values()) == snap["served"], \
+        f"tier accounting != served total: {snap}"
+    assert snap["rejected"].get("expired", 0) >= 1, \
+        "forced deadline breach not recorded"
+    assert snap["injected_faults"] == fired["device_error"], \
+        f"scheduler saw {snap['injected_faults']} injected faults, " \
+        f"injector fired {fired['device_error']}"
+    assert snap["retries"] == snap["batch_failures"], \
+        "every failed batch must get exactly one re-split retry pass"
+    if any(s.kind == "device_error" and s.step is not None
+           for s in injector.specs):
+        assert snap["batch_failures"] >= 1, "induced batch failure missed"
+        assert all(isinstance(r, Served) for r in recs), \
+            "transient device_error must recover every lane via re-split"
+    print(f"[serve] load-smoke: {n + 1} submitted = {snap['served']} served"
+          f" + {sum(snap['rejected'].values())} rejected (0 dropped); "
+          f"tiers={snap['tier_served']} retries={snap['retries']} "
+          f"faults={fired} timeouts={snap['timeouts']} slo={args.slo_ms}ms")
 
 
 def serve_generate(args):
@@ -182,6 +250,25 @@ def main(argv=None):
     ap.add_argument("--node-scan-threshold", type=int, default=0,
                     help="hybrid per-node scan threshold in rows "
                          "(0 = inherit the resolved scan threshold)")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="default per-request deadline for the SLO "
+                         "scheduler (DESIGN.md §13)")
+    ap.add_argument("--qdepth", type=int, default=64,
+                    help="bounded admission-queue depth; over-capacity "
+                         "requests get a typed queue_full rejection")
+    ap.add_argument("--degrade-ladder",
+                    default="ef=16,ef=8+expand_width=1",
+                    help="degradation-tier ladder, comma-separated steps "
+                         "of +-joined SearchParams overrides, e.g. "
+                         "'ef=32,ef=16+expand_width=1' (DESIGN.md §13)")
+    ap.add_argument("--inject", default="",
+                    help="fault-injection spec for --load-smoke, e.g. "
+                         "'device_error@1,latency:30ms@2' "
+                         "(serve/faults.py grammar)")
+    ap.add_argument("--load-smoke", action="store_true",
+                    help="drive the SLO scheduler with a bursty replay "
+                         "under --inject faults and assert the §13 "
+                         "no-drop/retry accounting contract")
     ap.add_argument("--stream-smoke", action="store_true",
                     help="exercise the streaming write path: insert -> "
                          "delete -> compact -> re-query (DESIGN.md §11)")

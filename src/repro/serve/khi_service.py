@@ -46,6 +46,18 @@ graph program, which exits immediately (a scan lane would pay a full
 corpus pass). ``snapshot()["scan_lanes"]`` counts scan-dispatched lanes.
 The planner is host-side; with a ``mesh=`` (collective shard_map fan-out)
 only ``strategy="graph"`` is supported.
+
+**Degradation tiers** (DESIGN.md §13): the service can carry a ladder of
+``SearchParams`` variants (``tiers=`` / ``set_tiers``), and every entry
+point takes ``tier=`` — tier 0 is the full-quality default, higher tiers
+are cheaper (lower ``ef``/``expand_width``, shifted planner thresholds,
+quantized replica). Each tier resolves its own validated params, scorers
+and lazily-built jitted closures against the SAME index arrays, result
+cache keys carry the serving tier (a degraded answer can never be served
+as a full-quality hit), and all tier planners dispatch off ONE shared
+plan cache (the routing bound is tier-invariant). The SLO scheduler
+(``serve/scheduler.py``) is the component that steps requests down the
+ladder under load.
 """
 
 from __future__ import annotations
@@ -80,9 +92,13 @@ class ServeConfig:
     cache_size: int = 4096                      # LRU entries; 0 disables
 
     def __post_init__(self):
-        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
+        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)) \
+                or self.buckets[0] <= 0:
             raise ValueError("buckets must be a sorted tuple of distinct "
-                             f"sizes, got {self.buckets!r}")
+                             f"positive sizes, got {self.buckets!r}")
+        if self.cache_size < 0:
+            raise ValueError(f"cache_size must be >= 0 (0 disables), got "
+                             f"{self.cache_size}")
 
     @property
     def max_batch(self) -> int:
@@ -121,8 +137,15 @@ class KHIService:
 
     def __init__(self, index, params: Optional[SearchParams] = None, *,
                  config: Optional[ServeConfig] = None, mesh=None,
-                 dist_fn=None, on_undersized: str = "adjust"):
-        self._user_params = params or SearchParams()
+                 dist_fn=None, on_undersized: str = "adjust",
+                 tiers: Sequence[SearchParams] = ()):
+        if on_undersized not in ("raise", "adjust", "ignore"):
+            # fail at construction, not on the first undersized search
+            raise ValueError(f"on_undersized must be raise|adjust|ignore, "
+                             f"got {on_undersized!r}")
+        self._tier_user: Tuple[SearchParams, ...] = (
+            params or SearchParams(),) + tuple(tiers)
+        self._check_tiers(self._tier_user)
         self._on_undersized = on_undersized
         self.config = config or ServeConfig()
         self._legacy_dist_fn = dist_fn
@@ -138,40 +161,88 @@ class KHIService:
             "device_seconds": 0.0, "epoch_swaps": 0, "scan_lanes": 0,
             "inserts": 0, "deletes": 0, "compactions": 0,
             "ingest_seconds": 0.0, "compact_seconds": 0.0,
+            "tier_lanes": collections.Counter(),
         }
         self._stream: Optional[StreamingState] = None
         self._mutation_seq = 0      # cache-key component (DESIGN.md §11)
         self._compacting = False
-        self._planner: Optional[Planner] = None
         self._install_index(index)
 
+    @staticmethod
+    def _check_tiers(tier_user: Tuple[SearchParams, ...]) -> None:
+        """Ladder-coherence rules (DESIGN.md §13): a degraded tier may
+        trade recall for speed but must keep the result CONTRACT of tier
+        0 — same k (Result shapes, cache entries and the streaming merge
+        are all k-shaped) and one replica dtype across quantized tiers
+        (the index carries a single compressed replica)."""
+        base = tier_user[0]
+        for t, p in enumerate(tier_user[1:], start=1):
+            if p.k != base.k:
+                raise ValueError(
+                    f"degradation tier {t} changes k ({p.k} != {base.k}): "
+                    f"tiers degrade recall, never the result shape")
+        quants = {p.quant for p in tier_user if p.quant != "none"}
+        if len(quants) > 1:
+            raise ValueError(
+                f"degradation tiers mix quantized replicas {sorted(quants)}; "
+                f"the index carries one compressed replica — use a single "
+                f"quant across the ladder")
+
+    def set_tiers(self, tiers: Sequence[SearchParams]) -> None:
+        """(Re)install the degradation ladder (DESIGN.md §13): tier 0
+        stays the construction-time params, ``tiers[i]`` becomes ladder
+        step ``i+1``. Rebuilds the per-tier closures against the live
+        index; the result cache stays valid (keys carry the serving
+        tier's params)."""
+        new = (self._tier_user[0],) + tuple(tiers)
+        self._check_tiers(new)
+        self._tier_user = new
+        self._install_index(self.index)
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self._tier_user)
+
     def _install_index(self, index) -> None:
-        """Bind an index: resolve params against it and rebuild the jitted
-        search closure. Shared by __init__ and swap_index."""
+        """Bind an index: resolve every tier's params against it and reset
+        the per-tier closure/planner caches (closures JIT lazily per tier
+        — an unused ladder step costs nothing). Shared by __init__,
+        set_tiers and swap_index."""
         if isinstance(index, KHIIndex):
             index = device_put_index(index)
         self._sharded = isinstance(index, ShardedKHI)
         di = index.di if self._sharded else index
-        if self._mesh is not None and self._user_params.strategy != "graph":
-            raise ValueError(
-                f"strategy={self._user_params.strategy!r} with mesh=: the "
-                f"planner dispatches per query on the host, before the "
-                f"collective shard_map fan-out — serve without a mesh "
-                f"(vmap fan-out) or force strategy='graph' (DESIGN.md "
-                f"§10).")
-        self.params = validate_search_params(
-            self._user_params, di, on_undersized=self._on_undersized)
+        tier_params = []
+        for t, up in enumerate(self._tier_user):
+            if self._mesh is not None and up.strategy != "graph":
+                raise ValueError(
+                    f"strategy={up.strategy!r} (tier {t}) with mesh=: the "
+                    f"planner dispatches per query on the host, before the "
+                    f"collective shard_map fan-out — serve without a mesh "
+                    f"(vmap fan-out) or force strategy='graph' (DESIGN.md "
+                    f"§10).")
+            tier_params.append(validate_search_params(
+                up, di, on_undersized=self._on_undersized))
         # quantized score path (DESIGN.md §12): attach the compressed
-        # replica the scorers stream; swap_index/compact re-derive it for
-        # every new epoch through this same path
-        if self.params.quant != "none" and di.qvecs is None:
-            di = with_quant_replica(di, self.params.quant)
+        # replica the scorers stream (any tier that wants it — ladder
+        # coherence pins a single quant); swap_index/compact re-derive it
+        # for every new epoch through this same path
+        quants = {p.quant for p in tier_params if p.quant != "none"}
+        if quants and di.qvecs is None:
+            di = with_quant_replica(di, next(iter(quants)))
             index = (dataclasses.replace(index, di=di) if self._sharded
                      else di)
-        self._scorer, self._exact_scorer = resolve_scorer_pair(
-            self.params, dist_fn=self._legacy_dist_fn)
+        self._tier_params: Tuple[SearchParams, ...] = tuple(tier_params)
+        self.params = tier_params[0]
         self.index = index
-        self._search = self._build_search_fn()
+        # one plan cache across every tier's planner (DESIGN.md §13): the
+        # cached routing bound is tier-invariant, so a box estimated at
+        # full quality re-dispatches for free at every degraded tier
+        self._plan_cache: "collections.OrderedDict[bytes, int]" = (
+            collections.OrderedDict())
+        self._planners: dict = {}
+        self._search_fns: dict = {}
+        self._search = self._get_search_fn(0)   # prebuild the hot tier
 
     def swap_index(self, index, *, params: Optional[SearchParams] = None,
                    drain: bool = True) -> dict:
@@ -198,7 +269,9 @@ class KHIService:
                 "compact() (DESIGN.md §11)")
         drained = self.flush() if drain else {}
         if params is not None:
-            self._user_params = params
+            new = (params,) + self._tier_user[1:]
+            self._check_tiers(new)
+            self._tier_user = new
         self._install_index(index)
         self.epoch += 1
         self._cache.clear()
@@ -206,6 +279,11 @@ class KHIService:
         return drained
 
     # ------------------------------------------------------------- plumbing
+    @property
+    def _planner(self) -> Optional[Planner]:
+        """Tier-0 planner (None on strategy='graph' or before first use)."""
+        return self._planners.get(0)
+
     @property
     def d(self) -> int:
         return self.index.di.vecs.shape[-1] if self._sharded \
@@ -216,21 +294,38 @@ class KHIService:
         return self.index.di.attrs.shape[-1] if self._sharded \
             else self.index.attrs.shape[-1]
 
-    def _build_search_fn(self):
+    def _get_search_fn(self, tier: int):
+        """Per-tier search closure, built lazily (DESIGN.md §13): an
+        unused ladder step never traces."""
+        fn = self._search_fns.get(tier)
+        if fn is None:
+            fn = self._search_fns[tier] = self._build_search_fn(tier)
+        return fn
+
+    def _build_search_fn(self, tier: int = 0):
         # Every branch reads ``self.index`` at CALL time (not build time):
         # a streaming delete installs a functionally-updated pytree of
         # identical shapes, which the jitted programs must pick up without
         # a rebuild. The old-epoch drain in swap_index still runs against
         # the old index — the flush happens before _install_index rebinds.
-        p, scorer, exact = self.params, self._scorer, self._exact_scorer
-        self._planner = None
+        p = self._tier_params[tier]
+        scorer, exact = resolve_scorer_pair(p, dist_fn=self._legacy_dist_fn)
         if p.strategy != "graph":
             # planner-backed path (DESIGN.md §10): per-lane dispatch to the
             # graph engine or the exact brute scan, single or sharded —
-            # params are already validated, the planner re-checks cheaply
+            # params are already validated, the planner re-checks cheaply.
+            # Every tier's planner shares ONE plan cache (§13): the cached
+            # routing bound is box-keyed and tier-invariant.
             planner = Planner(self.index, p, dist_fn=self._legacy_dist_fn,
-                              on_undersized=self._on_undersized)
-            self._planner = planner
+                              on_undersized=self._on_undersized,
+                              plan_cache=self._plan_cache,
+                              plan_salt=self.epoch.to_bytes(8, "little"))
+            if self._stream is not None:
+                # a tier first used after streaming deletes must see the
+                # tombstone-adjusted cardinalities (DESIGN.md §11)
+                planner.refresh_index(
+                    self.index, deleted_rows=self._stream.deleted_locals())
+            self._planners[tier] = planner
 
             def run(q, lo, hi):
                 ids, dists, _hops, plan = planner.search(
@@ -273,12 +368,18 @@ class KHIService:
                 return size
         return self.config.max_batch
 
-    def _key(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> bytes:
+    def _key(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+             tier: int = 0) -> bytes:
         h = hashlib.blake2b(digest_size=16)
         h.update(q.tobytes())
         h.update(lo.tobytes())
         h.update(hi.tobytes())
-        h.update(repr(self.params).encode())
+        # the serving TIER is part of the key (index + params — two tiers
+        # with identical params still key apart): an answer degraded under
+        # load must never be served later as a full-quality hit, and vice
+        # versa (DESIGN.md §13)
+        h.update(tier.to_bytes(2, "little"))
+        h.update(repr(self._tier_params[tier]).encode())
         h.update(self.epoch.to_bytes(8, "little"))  # per-epoch invalidation
         # per-mutation invalidation: every insert/delete/compact bumps the
         # sequence, so stale pre-mutation results are unreachable even
@@ -304,8 +405,9 @@ class KHIService:
 
     # ----------------------------------------------------------- device run
     def _run_device(self, qs: np.ndarray, los: np.ndarray,
-                    his: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Pad one micro-batch to its bucket, search, unpad."""
+                    his: np.ndarray, tier: int = 0
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pad one micro-batch to its bucket, search at ``tier``, unpad."""
         b = qs.shape[0]
         bucket = self._bucket(b)
         pad = bucket - b
@@ -317,8 +419,9 @@ class KHIService:
             his = np.concatenate(
                 [his, np.full((pad, self.m), -np.inf, np.float32)])
         t0 = time.perf_counter()
-        ids, dists = self._search(jnp.asarray(qs), jnp.asarray(los),
-                                  jnp.asarray(his))
+        search = self._search if tier == 0 else self._get_search_fn(tier)
+        ids, dists = search(jnp.asarray(qs), jnp.asarray(los),
+                            jnp.asarray(his))
         ids, dists = jax.block_until_ready((ids, dists))
         ids, dists = np.asarray(ids), np.asarray(dists)
         if self._stream is not None:
@@ -334,13 +437,16 @@ class KHIService:
         self.stats["pad_lanes"] += pad
         self.stats["device_queries"] += bucket
         self.stats["traced_buckets"].add(bucket)
+        self.stats["tier_lanes"][tier] += b
         return ids[:b], dists[:b]
 
     # -------------------------------------------------------------- serving
     def _answer(self, queries: np.ndarray, lo: np.ndarray,
-                hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                hi: np.ndarray, tier: int = 0
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Cache-aware core: -> (ids (B, k), dists (B, k), hit (B,) bool).
-        Batches larger than the top bucket are chunked."""
+        Batches larger than the top bucket are chunked. ``tier`` selects
+        the degradation-ladder params (DESIGN.md §13; 0 = full quality)."""
         queries = np.ascontiguousarray(queries, np.float32)
         lo = np.ascontiguousarray(lo, np.float32)
         hi = np.ascontiguousarray(hi, np.float32)
@@ -355,7 +461,7 @@ class KHIService:
         # skip per-request hashing entirely when the cache is disabled —
         # blake2b over d=768 query bytes is measurable on the hot path
         caching = self.config.cache_size > 0
-        keys = [self._key(queries[i], lo[i], hi[i]) if caching else None
+        keys = [self._key(queries[i], lo[i], hi[i], tier) if caching else None
                 for i in range(B)]
         miss: List[int] = []
         for i, key in enumerate(keys):
@@ -370,7 +476,7 @@ class KHIService:
         for c0 in range(0, len(miss), self.config.max_batch):
             chunk = miss[c0:c0 + self.config.max_batch]
             ids, dists = self._run_device(queries[chunk], lo[chunk],
-                                          hi[chunk])
+                                          hi[chunk], tier)
             for j, i in enumerate(chunk):
                 out_ids[i], out_d[i] = ids[j], dists[j]
                 if caching:
@@ -378,9 +484,17 @@ class KHIService:
         return out_ids, out_d, hit_mask
 
     def search(self, queries: np.ndarray, lo: np.ndarray,
-               hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Batch front door: (B, d) x (B, m) x (B, m) -> ids/dists (B, k)."""
-        ids, dists, _ = self._answer(queries, lo, hi)
+               hi: np.ndarray, *, tier: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch front door: (B, d) x (B, m) x (B, m) -> ids/dists (B, k).
+        ``tier`` serves the batch at that degradation-ladder step
+        (DESIGN.md §13) — the SLO scheduler's knob; direct callers keep
+        the default full-quality tier 0."""
+        if not 0 <= tier < len(self._tier_params):
+            raise ValueError(f"tier must be in [0, {len(self._tier_params)})"
+                             f", got {tier} (install ladders via tiers= / "
+                             f"set_tiers)")
+        ids, dists, _ = self._answer(queries, lo, hi, tier)
         return ids, dists
 
     def submit(self, req: Request) -> int:
@@ -498,8 +612,8 @@ class KHIService:
         new_index, n_del = st.delete(np.asarray(ext_ids), self.index)
         if new_index is not None:
             self.index = new_index
-            if self._planner is not None:
-                self._planner.refresh_index(
+            for planner in self._planners.values():
+                planner.refresh_index(
                     new_index, deleted_rows=st.deleted_locals())
         self.stats["deletes"] += n_del
         self.stats["ingest_seconds"] += time.perf_counter() - t0
@@ -541,6 +655,8 @@ class KHIService:
         """JSON-able stats snapshot (traced_buckets -> sorted list)."""
         s = dict(self.stats)
         s["traced_buckets"] = sorted(s["traced_buckets"])
+        s["tier_lanes"] = {str(t): int(n)
+                           for t, n in sorted(s["tier_lanes"].items())}
         s["cache_entries"] = len(self._cache)
         s["epoch"] = self.epoch
         dq, ds = s["device_queries"], s["device_seconds"]

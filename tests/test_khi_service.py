@@ -84,6 +84,58 @@ def test_stream_chunks_and_preserves_order(service, workload):
     assert fresh.snapshot()["batches"] >= 2    # 16 + 5
 
 
+def test_stream_empty_iterator(service):
+    """An empty request stream yields nothing and touches no device."""
+    before = service.snapshot()["batches"]
+    assert list(service.serve_stream(iter([]))) == []
+    assert service.snapshot()["batches"] == before
+
+
+def test_stream_interleaved_hits_across_bucket_boundary(tiny_index,
+                                                        workload):
+    """A stream alternating cache hits and misses, chunked across the
+    bucket boundary, yields exactly one correctly-flagged result per
+    request in submission order."""
+    Q, preds, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(4, 8), cache_size=64))
+    svc.search(Q[0:10:2], lo[0:10:2], hi[0:10:2])   # prime evens
+    res = list(svc.serve_stream(
+        Request(Q[i], lo[i], hi[i]) for i in range(10)))  # 8 + 2 chunks
+    assert len(res) == 10
+    assert [r.cached for r in res] == [i % 2 == 0 for i in range(10)]
+    want, _ = svc.search(Q[:10], lo[:10], hi[:10])  # all cached now
+    np.testing.assert_array_equal(np.stack([r.ids for r in res]), want)
+
+
+def test_stream_mid_stream_swap_index(tiny_index, workload):
+    """swap_index mid-stream: every submitted request still yields
+    exactly one in-order result; requests buffered at swap time are
+    answered on the new epoch/params."""
+    import dataclasses
+
+    Q, preds, lo, hi = workload
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(4,), cache_size=16))
+    p2 = dataclasses.replace(PARAMS, ef=16)
+
+    def gen():
+        for i in range(6):
+            yield Request(Q[i], lo[i], hi[i])
+        svc.swap_index(tiny_index, params=p2)       # reqs 4,5 buffered
+        for i in range(6, 12):
+            yield Request(Q[i], lo[i], hi[i])
+
+    res = list(svc.serve_stream(gen()))
+    assert len(res) == 12
+    got = np.stack([r.ids for r in res])
+    want_old, _, _ = search_batch(tiny_index, Q[:4], preds[:4], PARAMS)
+    want_new, _, _ = search_batch(tiny_index, Q[4:12], preds[4:12], p2)
+    np.testing.assert_array_equal(got[:4], want_old)
+    np.testing.assert_array_equal(got[4:], want_new)
+    assert svc.snapshot()["epoch"] == 1
+
+
 def test_submit_flush_tickets_and_cached_flag(service, workload):
     Q, _, lo, hi = workload
     q_fresh = (Q[20] + 0.25).astype(np.float32)   # never seen by the cache
@@ -233,6 +285,21 @@ def test_bad_bucket_config_rejected():
         ServeConfig(buckets=(32, 8))
     with pytest.raises(ValueError, match="buckets"):
         ServeConfig(buckets=())
+    # non-positive sizes: a 0/negative bucket would trace a degenerate
+    # batch shape (and max_batch could go <= 0)
+    with pytest.raises(ValueError, match="positive"):
+        ServeConfig(buckets=(0, 8))
+    with pytest.raises(ValueError, match="positive"):
+        ServeConfig(buckets=(-4, 8))
+    with pytest.raises(ValueError, match="cache_size"):
+        ServeConfig(buckets=(8,), cache_size=-1)
+
+
+def test_bad_on_undersized_rejected_at_construction(tiny_index):
+    """An invalid on_undersized must fail when the service is built, not
+    at the first undersized-params validation deep in a request."""
+    with pytest.raises(ValueError, match="on_undersized"):
+        KHIService(tiny_index, PARAMS, on_undersized="explode")
 
 
 def test_khi_serve_config_helpers():

@@ -1,0 +1,400 @@
+"""SLO scheduler contracts (DESIGN.md §13): admission control, tenant-fair
+deadline-ordered batch formation, degradation-tier policy, fault
+injection + retry-with-resplit recovery, and drain-on-shutdown
+completeness — every submitted ticket must end in exactly one terminal
+record."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchParams
+from repro.data import make_queries
+from repro.serve import (FaultInjector, InjectedFault, KHIService, Rejected,
+                         Request, SchedulerConfig, Served, ServeConfig,
+                         SLOScheduler, TierSpec, replay_open_loop)
+
+PARAMS = SearchParams(k=10, ef=48, c_n=16)
+LADDER = (TierSpec(ef=24), TierSpec(ef=12, expand_width=1))
+
+
+@pytest.fixture(scope="module")
+def workload(tiny_data):
+    vecs, attrs = tiny_data
+    Q, preds = make_queries(vecs, attrs, n_queries=32, sigma=1 / 16, seed=5)
+    lo = np.stack([p.lo for p in preds]).astype(np.float32)
+    hi = np.stack([p.hi for p in preds]).astype(np.float32)
+    return [Request(Q[i], lo[i], hi[i]) for i in range(len(Q))]
+
+
+def make_sched(tiny_index, *, ladder=LADDER, cache=0, **cfg_kw):
+    cfg_kw.setdefault("qdepth", 64)
+    cfg_kw.setdefault("slo_ms", 10_000.0)   # effectively no deadline unless
+    svc = KHIService(tiny_index, PARAMS,    # a test overrides per-request
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=cache))
+    sched = SLOScheduler(svc, SchedulerConfig(ladder=ladder, **cfg_kw),
+                         autostart=False)
+    return svc, sched
+
+
+def drain(sched):
+    while sched.pump():
+        pass
+
+
+# ------------------------------------------------------------- admission
+def test_queue_full_rejects_typed(tiny_index, workload):
+    _, sched = make_sched(tiny_index, qdepth=3)
+    tickets = [sched.submit(workload[i]) for i in range(5)]
+    recs = [sched.result(t, timeout=0) if i >= 3 else None
+            for i, t in enumerate(tickets)]
+    for rec in recs[3:]:
+        assert isinstance(rec, Rejected) and rec.reason == "queue_full"
+    drain(sched)
+    snap = sched.shutdown()
+    assert snap["submitted"] == 5
+    assert snap["served"] == 3
+    assert snap["rejected"] == {"queue_full": 2}
+    assert snap["dropped"] == 0
+
+
+def test_dead_on_arrival_rejected(tiny_index, workload):
+    _, sched = make_sched(tiny_index)
+    t = sched.submit(workload[0], deadline_ms=0)
+    rec = sched.result(t, timeout=0)
+    assert isinstance(rec, Rejected) and rec.reason == "expired"
+    assert sched.shutdown()["dropped"] == 0
+
+
+def test_expired_in_queue_shed_at_formation(tiny_index, workload):
+    """A request whose deadline passes while queued is rejected at batch
+    formation instead of wasting a device lane."""
+    _, sched = make_sched(tiny_index)
+    t_live = sched.submit(workload[0], deadline_ms=60_000)
+    t_dead = sched.submit(workload[1], deadline_ms=0.001)
+    time.sleep(0.01)
+    drain(sched)
+    assert isinstance(sched.result(t_live), Served)
+    rec = sched.result(t_dead)
+    assert isinstance(rec, Rejected) and rec.reason == "expired"
+    assert sched.snapshot()["expired_in_queue"] == 1
+
+
+def test_submit_after_shutdown_rejected(tiny_index, workload):
+    _, sched = make_sched(tiny_index)
+    sched.shutdown()
+    t = sched.submit(workload[0])
+    rec = sched.result(t, timeout=0)
+    assert isinstance(rec, Rejected) and rec.reason == "shutdown"
+
+
+# ------------------------------------------------------ batch formation
+def test_tenant_round_robin_and_deadline_order(tiny_index, workload):
+    """One batch interleaves tenants fairly; within a tenant the tightest
+    deadline goes first."""
+    svc, sched = make_sched(tiny_index)
+    # tenant a: 3 requests with descending deadlines; tenant b: 1
+    ta = [sched.submit(workload[i], deadline_ms=1000 * (3 - i), tenant="a")
+          for i in range(3)]
+    tb = sched.submit(workload[3], tenant="b")
+    with sched._cond:
+        batch, _ = sched._form_batch(now=sched._clock())
+    order = [it.ticket for it in batch]
+    # fair: b's single request is in the first two picks, not last
+    assert tb in order[:2]
+    # deadline order within tenant a: submitted later = tighter deadline
+    a_order = [t for t in order if t in ta]
+    assert a_order == sorted(ta, key=lambda t: -t)
+
+
+def test_batch_respects_max_batch(tiny_index, workload):
+    svc, sched = make_sched(tiny_index)
+    for r in workload[:12]:
+        sched.submit(r)
+    n = sched.pump()
+    assert n == svc.config.max_batch == 8
+    assert sched.snapshot()["queued"] == 4
+
+
+# --------------------------------------------------------- degradation
+def test_backlog_degrades_tier_and_records_it(tiny_index, workload):
+    """Queue depth past the thresholds steps batches down the ladder;
+    Served records carry the tier that answered."""
+    _, sched = make_sched(tiny_index, qdepth=32,
+                          tier_thresholds=(8, 16))
+    tickets = [sched.submit(r) for r in workload[:28]]
+    drain(sched)
+    recs = [sched.result(t) for t in tickets]
+    tiers = {rec.tier for rec in recs}
+    assert tiers == {0, 1, 2}, f"expected all 3 tiers under backlog: {tiers}"
+    snap = sched.snapshot()
+    assert sum(snap["tier_served"].values()) == snap["served"] == 28
+    assert snap["tier_served"]["2"] > 0
+    # every tier still returns k results (the ladder keeps k constant)
+    for rec in recs:
+        assert rec.result.ids.shape == (PARAMS.k,)
+
+
+def test_tier0_when_idle(tiny_index, workload):
+    _, sched = make_sched(tiny_index)
+    t = sched.submit(workload[0])
+    sched.pump()
+    assert sched.result(t).tier == 0
+
+
+def test_deadline_slack_escalates_tier(tiny_index, workload):
+    """A batch whose tightest slack can't fit tier 0's observed latency
+    is stepped down the ladder even with an empty queue."""
+    _, sched = make_sched(tiny_index)
+    t0 = sched.submit(workload[0])          # warm tier-0 EMA
+    sched.pump()
+    assert sched.result(t0).tier == 0
+    sched._ema_ms[0] = 5_000.0              # pretend tier 0 is very slow
+    t1 = sched.submit(workload[1], deadline_ms=50)
+    sched.pump()
+    assert sched.result(t1).tier >= 1
+
+
+def test_timeout_pressure_escalates_next_batch(tiny_index, workload):
+    inj = FaultInjector.parse("stall:30ms@0")
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=0))
+    sched = SLOScheduler(
+        svc, SchedulerConfig(ladder=LADDER, slo_ms=10_000.0,
+                             batch_timeout_ms=5.0),
+        autostart=False, injector=inj)
+    t0 = sched.submit(workload[0])
+    sched.pump()                            # stalled -> over timeout budget
+    assert sched.result(t0).tier == 0       # post-hoc: answer still arrives
+    snap = sched.snapshot()
+    assert snap["timeouts"] == 1
+    t1 = sched.submit(workload[1])
+    sched.pump()                            # pressure escalates this batch
+    assert sched.result(t1).tier >= 1
+    assert inj.counts()["stall"] == 1
+
+
+# ------------------------------------------------------- fault recovery
+def test_ordinal_fault_recovers_all_lanes(tiny_index, workload):
+    """A transient device error fails the batch once; the re-split retry
+    answers every lane (the ordinal spec has disarmed)."""
+    inj = FaultInjector.parse("device_error@0")
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=0))
+    sched = SLOScheduler(svc, SchedulerConfig(slo_ms=10_000.0),
+                         autostart=False, injector=inj)
+    tickets = [sched.submit(r) for r in workload[:4]]
+    drain(sched)
+    recs = [sched.result(t) for t in tickets]
+    assert all(isinstance(r, Served) and r.retries == 1 for r in recs)
+    snap = sched.snapshot()
+    assert snap["batch_failures"] == 1
+    assert snap["retries"] == 1
+    assert snap["lane_failures"] == 0
+    assert snap["injected_faults"] == inj.counts()["device_error"] == 1
+    assert snap["dropped"] == 0
+
+
+def test_poison_lane_fails_alone_after_resplit(tiny_index, workload):
+    """The §13 headline contract: an injected device-step failure fails
+    ONLY the offending lanes after one retry — healthy lanes in the same
+    batch are still answered."""
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=0))
+    sched = SLOScheduler(svc, SchedulerConfig(slo_ms=10_000.0),
+                         autostart=False)
+    tickets = [sched.submit(r) for r in workload[:4]]
+    poisoned = tickets[2]
+    sched._injector = FaultInjector.parse(f"device_error%{poisoned}")
+    drain(sched)
+    for t in tickets:
+        rec = sched.result(t)
+        if t == poisoned:
+            assert isinstance(rec, Rejected) and rec.reason == "fault"
+            assert "poisoned" in rec.detail
+        else:
+            assert isinstance(rec, Served) and rec.retries == 1
+    snap = sched.snapshot()
+    assert snap["batch_failures"] == 1 and snap["retries"] == 1
+    assert snap["lane_failures"] == 1
+    assert snap["served"] == 3 and snap["rejected"] == {"fault": 1}
+    assert snap["dropped"] == 0
+
+
+def test_real_exception_counted_separately(tiny_index, workload):
+    """A non-injected device failure takes the same recovery path but is
+    counted as device_errors, not injected_faults."""
+    svc, sched = make_sched(tiny_index, ladder=())
+    boom = {"n": 0}
+    orig = sched._run
+
+    def flaky(batch, tier):
+        if boom["n"] == 0:
+            boom["n"] += 1
+            raise ValueError("transient device loss")
+        return orig(batch, tier)
+
+    sched._run = flaky
+    t = sched.submit(workload[0])
+    drain(sched)
+    assert isinstance(sched.result(t), Served)
+    snap = sched.snapshot()
+    assert snap["device_errors"] == 1 and snap["injected_faults"] == 0
+
+
+def test_max_retries_zero_fails_batch_typed(tiny_index, workload):
+    inj = FaultInjector.parse("device_error@0")
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=0))
+    sched = SLOScheduler(svc, SchedulerConfig(slo_ms=10_000.0,
+                                              max_retries=0),
+                         autostart=False, injector=inj)
+    tickets = [sched.submit(r) for r in workload[:3]]
+    drain(sched)
+    for t in tickets:
+        rec = sched.result(t)
+        assert isinstance(rec, Rejected) and rec.reason == "fault"
+    assert sched.snapshot()["dropped"] == 0
+
+
+# ------------------------------------------------------------- shutdown
+def test_drain_shutdown_serves_everything(tiny_index, workload):
+    _, sched = make_sched(tiny_index)
+    tickets = [sched.submit(r) for r in workload[:11]]
+    snap = sched.shutdown(drain=True)
+    assert snap["served"] == 11 and snap["dropped"] == 0
+    assert all(isinstance(sched.result(t), Served) for t in tickets)
+
+
+def test_no_drain_shutdown_rejects_queue_typed(tiny_index, workload):
+    _, sched = make_sched(tiny_index)
+    tickets = [sched.submit(r) for r in workload[:5]]
+    snap = sched.shutdown(drain=False)
+    assert snap["rejected"] == {"shutdown": 5} and snap["dropped"] == 0
+    for t in tickets:
+        assert sched.result(t).reason == "shutdown"
+
+
+def test_worker_thread_end_to_end(tiny_index, workload):
+    """Async mode: background worker serves submissions from another
+    thread; drain shutdown leaves zero in flight."""
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=0))
+    sched = SLOScheduler(svc, SchedulerConfig(slo_ms=60_000.0, qdepth=64,
+                                              ladder=LADDER),
+                         autostart=True)
+    with pytest.raises(RuntimeError, match="autostart=False"):
+        sched.pump()
+    tickets = []
+    lock = threading.Lock()
+
+    def feed(lo, hi, tenant):
+        for i in range(lo, hi):
+            t = sched.submit(workload[i], tenant=tenant)
+            with lock:
+                tickets.append(t)
+
+    threads = [threading.Thread(target=feed, args=(0, 16, "a")),
+               threading.Thread(target=feed, args=(16, 32, "b"))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    sched.wait_all(timeout=120)
+    snap = sched.shutdown(drain=True)
+    assert snap["submitted"] == 32
+    assert snap["served"] + sum(snap["rejected"].values()) == 32
+    assert snap["dropped"] == 0
+    assert all(isinstance(sched.result(t, timeout=0), Served)
+               for t in tickets)
+
+
+# --------------------------------------------- tier-keyed result cache
+def test_result_cache_separates_tiers(tiny_index, workload):
+    """A degraded answer must never be served from cache as a tier-0
+    answer (and vice versa): the cache key carries the tier."""
+    svc = KHIService(tiny_index, PARAMS,
+                     config=ServeConfig(buckets=(1, 4, 8), cache_size=64),
+                     tiers=[TierSpec(ef=12, expand_width=1).apply(PARAMS)])
+    req = workload[0]
+    q = req.query[None]
+    svc.search(q, req.lo[None], req.hi[None], tier=0)
+    before = svc.snapshot()["cache_hits"]
+    svc.search(q, req.lo[None], req.hi[None], tier=1)   # distinct key
+    assert svc.snapshot()["cache_hits"] == before
+    svc.search(q, req.lo[None], req.hi[None], tier=1)   # same-tier repeat
+    assert svc.snapshot()["cache_hits"] == before + 1
+
+
+# --------------------------------------------------------- config/specs
+def test_tierspec_parse_and_apply():
+    ladder = TierSpec.parse_ladder("ef=24,ef=12+expand_width=1+quant=int8")
+    assert ladder[0] == TierSpec(ef=24)
+    assert ladder[1].quant == "int8"
+    p = ladder[1].apply(PARAMS)
+    assert (p.ef, p.expand_width, p.quant) == (12, 1, "int8")
+    assert p.k == PARAMS.k
+    assert p.c_e <= p.ef, "dependent caps re-clamped"
+    with pytest.raises(ValueError, match="unknown ladder field"):
+        TierSpec.parse("bogus=3")
+    with pytest.raises(ValueError, match="empty ladder step"):
+        TierSpec.parse("  ")
+    assert TierSpec.parse_ladder("") == ()
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError, match="qdepth"):
+        SchedulerConfig(qdepth=0)
+    with pytest.raises(ValueError, match="slo_ms"):
+        SchedulerConfig(slo_ms=0)
+    with pytest.raises(ValueError, match="one depth per ladder step"):
+        SchedulerConfig(ladder=LADDER, tier_thresholds=(4,))
+    with pytest.raises(ValueError, match="ascending"):
+        SchedulerConfig(ladder=LADDER, tier_thresholds=(16, 4))
+    # derived thresholds: even split of qdepth, one per ladder step
+    cfg = SchedulerConfig(qdepth=90, ladder=LADDER)
+    assert cfg.resolved_thresholds() == (30, 60)
+    assert SchedulerConfig(qdepth=64).resolved_thresholds() == ()
+
+
+def test_fault_injector_grammar_and_counts():
+    inj = FaultInjector.parse(
+        "device_error@1,latency:5ms@0,device_error%7+9", sleep=lambda s: None)
+    inj.before_batch(0, [1, 2])             # latency fires
+    with pytest.raises(InjectedFault):
+        inj.before_batch(1, [3])            # ordinal device_error fires
+    inj.before_batch(1, [3])                # ...and has disarmed
+    with pytest.raises(InjectedFault, match="poisoned"):
+        inj.before_batch(2, [7])            # poison fires
+    with pytest.raises(InjectedFault):
+        inj.before_batch(3, [9])            # ...and re-fires
+    assert inj.counts() == {"device_error": 3, "latency": 1, "stall": 0}
+    with pytest.raises(ValueError, match="needs a target"):
+        FaultInjector.parse("device_error")
+    with pytest.raises(ValueError, match="end in 'ms'"):
+        FaultInjector.parse("latency:5s@0")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultInjector.parse("oom@0")
+
+
+def test_replay_open_loop_paces_submissions():
+    """The generator fires at arrival offsets on the fake clock and never
+    waits for completions (open loop)."""
+    now = [0.0]
+    slept = []
+
+    def clock():
+        return now[0]
+
+    def sleep(s):
+        slept.append(s)
+        now[0] += s
+
+    seen = []
+    out = replay_open_loop(lambda x: seen.append(x) or x,
+                           [0.0, 0.1, 0.15], ["a", "b", "c"],
+                           clock=clock, sleep=sleep)
+    assert out == seen == ["a", "b", "c"]
+    assert slept == pytest.approx([0.1, 0.05])

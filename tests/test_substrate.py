@@ -95,6 +95,60 @@ def test_checkpoint_latest_and_gc(tmp_path):
     assert steps == [2, 3]
 
 
+def test_async_save_error_surfaces_on_wait(tmp_path, monkeypatch):
+    """A failed background save must raise on the caller's thread at the
+    next wait(), not vanish into the worker."""
+    from repro.checkpoint import manager
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(manager, "save_checkpoint", boom)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save(1, _tree())
+    with pytest.raises(OSError, match="disk full"):
+        ck.wait()
+    ck.wait()                      # error raises once, then clears
+
+
+def test_async_save_does_not_capture_base_exceptions(tmp_path, monkeypatch):
+    """SystemExit/KeyboardInterrupt in the worker must not be converted
+    into a deferred 'save error' (they are interpreter shutdown, not
+    checkpoint failures) — pins the except-Exception narrowing."""
+    from repro.checkpoint import manager
+
+    def bail(*a, **kw):
+        raise SystemExit(3)
+
+    monkeypatch.setattr(manager, "save_checkpoint", bail)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save(1, _tree())
+    ck.wait()                      # no deferred error raised
+    assert ck._error is None
+
+
+def test_constrain_noop_without_mesh_and_propagates_real_errors(monkeypatch):
+    """constrain() swallows only the expected no-mesh RuntimeError; any
+    other failure from with_sharding_constraint is a real bug and must
+    surface — pins the bare-except narrowing."""
+    from repro.models.sharding import axis_rules, constrain
+
+    x = jnp.arange(8.0)
+    assert constrain(x, "batch") is x          # no rules installed
+    with axis_rules({"batch": "data"}):
+        # rules active but no mesh entered: the expected RuntimeError
+        # ("requires a non-empty mesh") is swallowed, x passes through
+        np.testing.assert_array_equal(np.asarray(constrain(x, "batch")),
+                                      np.asarray(x))
+
+        def bad_spec(*a, **kw):
+            raise TypeError("malformed spec")
+
+        monkeypatch.setattr(jax.lax, "with_sharding_constraint", bad_spec)
+        with pytest.raises(TypeError, match="malformed spec"):
+            constrain(x, "batch")
+
+
 def test_checkpoint_restores_training(tmp_path):
     """Resume must continue bit-identically (same loss trajectory)."""
     cfg = get_smoke_config("mamba2-780m")
