@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: qps_recall,qps_smoke,convergence,"
                          "vary_k,vary_card,build,build_bench,kernels,serve,"
-                         "selectivity,ingest,load")
+                         "selectivity,ingest,load,scale")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -56,6 +56,9 @@ def main(argv=None) -> None:
         lines += ingest_bench.csv_lines(ingest_bench.run(args.scale))
     if want("load"):
         lines += load_bench.csv_lines(load_bench.run(args.scale))
+    if want("scale"):
+        from . import bench_scale
+        lines += bench_scale.csv_lines(bench_scale.run(args.scale))
 
     print(f"\n# benchmarks done in {time.time()-t0:.0f}s "
           f"(scale={args.scale})")

@@ -908,6 +908,64 @@ def _windows_sharded(pos_vecs, pos_attrs, order, offsets, q, qlo, qhi,
     return _merge_topk(jnp.stack(gi), jnp.stack(gd), k)
 
 
+def _scan_exact(vecs, attrs_nan, q, qlo, qhi, k: int, *,
+                use_kernel: bool, interpret: bool):
+    """One shard's exact predicate-fused brute scan (DESIGN.md §10):
+    the Pallas kernel or the jnp oracle, shared by the host Planner and
+    the collective shard_map program (§14)."""
+    if use_kernel:
+        from ..kernels.scan_topk import scan_topk_raw
+        return scan_topk_raw(vecs, attrs_nan, q, qlo, qhi, k=k,
+                             interpret=interpret)
+    from ..kernels.ref import scan_topk_ref
+    return scan_topk_ref(vecs, attrs_nan, q, qlo, qhi, k)
+
+
+def _scan_shard_topk(di: "DeviceIndex", shard, attrs_nan, q, qlo, qhi,
+                     p: "SearchParams", *, use_kernel: bool,
+                     interpret: bool):
+    """One shard's scan-path top-k under every quant tier (DESIGN.md
+    §10/§12) — the device half of the Planner's scan program, extracted
+    so the in-collective pipeline (§14) runs the bit-identical per-shard
+    scan inside shard_map. ``shard`` indexes a stacked (S, ...) index;
+    pass None for an already-squeezed single-shard DeviceIndex."""
+    quant = p.quant
+    vecs = di.vecs if shard is None else di.vecs[shard]
+    if quant == "none":
+        return _scan_exact(vecs, attrs_nan, q, qlo, qhi, p.k,
+                           use_kernel=use_kernel, interpret=interpret)
+    # quantized scan + exact rerank (§12): over-fetch the top
+    # k * rerank_mult on the compressed replica, rescore those
+    # candidates on the f32 corpus through the gather path, and
+    # take the (dist, id)-lexicographic top-k — exact whenever
+    # the true top-k survives the over-fetch
+    qvecs = di.qvecs if shard is None else di.qvecs[shard]
+    kq = min(max(p.k, p.k * p.rerank_mult), vecs.shape[0])
+    if quant == "bf16":
+        cids, _ = _scan_exact(qvecs, attrs_nan, q, qlo, qhi, kq,
+                              use_kernel=use_kernel, interpret=interpret)
+    elif use_kernel:
+        from ..kernels.scan_topk import scan_topk_q8_raw
+        qscale = di.qscale if shard is None else di.qscale[shard]
+        cids, _ = scan_topk_q8_raw(qvecs, qscale, attrs_nan, q,
+                                   qlo, qhi, k=kq, interpret=interpret)
+    else:
+        from ..kernels.ref import scan_topk_q8_ref
+        qscale = di.qscale if shard is None else di.qscale[shard]
+        cids, _ = scan_topk_q8_ref(qvecs, qscale, attrs_nan, q,
+                                   qlo, qhi, kq)
+    if use_kernel:
+        from ..kernels.gather_l2_filter import \
+            gather_l2_filter_blocked_raw
+        exact_d = gather_l2_filter_blocked_raw(
+            cids, vecs, attrs_nan, q, qlo, qhi, interpret=interpret)
+    else:
+        from ..kernels.ref import gather_l2_filter_ref
+        exact_d = gather_l2_filter_ref(cids, vecs, attrs_nan, q,
+                                       qlo, qhi)
+    return _lex_topk(cids, exact_d, p.k)
+
+
 def _merge_dedup(ids_a: np.ndarray, d_a: np.ndarray, ids_b: np.ndarray,
                  d_b: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
     """Merge two partial top-k streams under the (dist, id) lexicographic
@@ -933,6 +991,30 @@ def _merge_dedup(ids_a: np.ndarray, d_a: np.ndarray, ids_b: np.ndarray,
     out_i = np.take_along_axis(key, o2, axis=1)
     out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
     return out_i, out_d
+
+
+def _merge_dedup_jnp(ids_a, d_a, ids_b, d_b, k: int):
+    """Device twin of ``_merge_dedup`` for the in-collective hybrid path
+    (DESIGN.md §14): the same two stable lexsort passes on device arrays
+    — pinned bit-identical against the numpy form by tests. Global ids
+    fit int32, so the sentinel is i32max (the numpy form's i64 widening
+    changes no comparison)."""
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1).astype(jnp.float32)
+    sentinel = jnp.int32(np.iinfo(np.int32).max)
+    key = jnp.where(ids >= 0, ids, sentinel)
+    o1 = jnp.lexsort((d, key), axis=-1)           # id-major, best dist first
+    key = jnp.take_along_axis(key, o1, axis=1)
+    d = jnp.take_along_axis(d, o1, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(key[:, :1], bool),
+         (key[:, 1:] == key[:, :-1]) & (key[:, 1:] != sentinel)], axis=1)
+    d = jnp.where(dup, jnp.inf, d)
+    key = jnp.where(dup, sentinel, key)
+    o2 = jnp.lexsort((key, d), axis=-1)[:, :k]    # (dist, id) rank, take k
+    out_d = jnp.take_along_axis(d, o2, axis=1)
+    out_i = jnp.take_along_axis(key, o2, axis=1)
+    return jnp.where(jnp.isinf(out_d), -1, out_i).astype(jnp.int32), out_d
 
 
 @dataclasses.dataclass
@@ -1234,50 +1316,11 @@ class Planner:
         p = self.params
         interpret = self._interpret
         use_kernel = p.backend == "pallas_gather_l2_filter"
-        quant = p.quant
-
-        def scan_exact(vecs, attrs_nan, q, qlo, qhi, k):
-            if use_kernel:
-                from ..kernels.scan_topk import scan_topk_raw
-                return scan_topk_raw(vecs, attrs_nan, q, qlo, qhi, k=k,
-                                     interpret=interpret)
-            from ..kernels.ref import scan_topk_ref
-            return scan_topk_ref(vecs, attrs_nan, q, qlo, qhi, k)
 
         def scan_one(di, shard, attrs_nan, q, qlo, qhi):
-            vecs = di.vecs if shard is None else di.vecs[shard]
-            if quant == "none":
-                return scan_exact(vecs, attrs_nan, q, qlo, qhi, p.k)
-            # quantized scan + exact rerank (§12): over-fetch the top
-            # k * rerank_mult on the compressed replica, rescore those
-            # candidates on the f32 corpus through the gather path, and
-            # take the (dist, id)-lexicographic top-k — exact whenever
-            # the true top-k survives the over-fetch
-            qvecs = di.qvecs if shard is None else di.qvecs[shard]
-            kq = min(max(p.k, p.k * p.rerank_mult), vecs.shape[0])
-            if quant == "bf16":
-                cids, _ = scan_exact(qvecs, attrs_nan, q, qlo, qhi, kq)
-            elif use_kernel:
-                from ..kernels.scan_topk import scan_topk_q8_raw
-                qscale = di.qscale if shard is None else di.qscale[shard]
-                cids, _ = scan_topk_q8_raw(qvecs, qscale, attrs_nan, q,
-                                           qlo, qhi, k=kq,
-                                           interpret=interpret)
-            else:
-                from ..kernels.ref import scan_topk_q8_ref
-                qscale = di.qscale if shard is None else di.qscale[shard]
-                cids, _ = scan_topk_q8_ref(qvecs, qscale, attrs_nan, q,
-                                           qlo, qhi, kq)
-            if use_kernel:
-                from ..kernels.gather_l2_filter import \
-                    gather_l2_filter_blocked_raw
-                exact_d = gather_l2_filter_blocked_raw(
-                    cids, vecs, attrs_nan, q, qlo, qhi, interpret=interpret)
-            else:
-                from ..kernels.ref import gather_l2_filter_ref
-                exact_d = gather_l2_filter_ref(cids, vecs, attrs_nan, q,
-                                               qlo, qhi)
-            return _lex_topk(cids, exact_d, p.k)
+            return _scan_shard_topk(di, shard, attrs_nan, q, qlo, qhi, p,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
 
         if not self._sharded:
             @jax.jit

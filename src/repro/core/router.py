@@ -69,8 +69,8 @@ if TYPE_CHECKING:  # pragma: no cover
     from .engine import DeviceIndex, SearchParams
 
 __all__ = ["ROUTERS", "resolve_router", "route_dfs", "route_level_sync",
-           "route_level_card", "HostCardEstimator", "deleted_per_node",
-           "required_frontier_cap"]
+           "route_level_card", "route_level_windows", "HostCardEstimator",
+           "deleted_per_node", "required_frontier_cap"]
 
 ROUTERS = ("level", "dfs")
 
@@ -307,6 +307,60 @@ def route_level_card(di, qlo: jax.Array, qhi: jax.Array, p) -> jax.Array:
 
     st = jax.lax.fori_loop(0, H, level, (fnode0, fD0, jnp.int32(0)))
     return st[2]
+
+
+def route_level_windows(di, qlo: jax.Array, qhi: jax.Array, p, *,
+                        node_thr: int, W: int):
+    """Estimate sweep + per-node hybrid classification, device-side
+    (DESIGN.md §14): the ``route_level_card`` traversal, additionally
+    splitting the scanned antichain by RAW node count into small
+    (0 < count <= node_thr) and large nodes, and collecting the small
+    nodes' DFS extents into a fixed-width window buffer.
+
+    Returns (card () int32, n_small () int32, n_large () int32,
+    starts (W,) int32, counts (W,) int32) — windows sorted ascending by
+    start (the windowed kernel's contract, engine._build_windows), pad
+    slots (-1, 0). ``W`` must bound the per-query small-antichain size;
+    the collective caller derives it from static index counts (every
+    window has count >= 1 and windows are DFS-disjoint), so the
+    overflow clamp below is unreachable there."""
+    F = p.frontier_cap
+    _require_frontier(F)
+    m = di.attrs.shape[1]
+    full = (1 << m) - 1
+    H = di.nbrs.shape[1]
+
+    fnode0 = jnp.full((F,), -1, jnp.int32).at[0].set(di.root)
+    fD0 = jnp.zeros((F,), jnp.int32).at[0].set(_root_D0(di, qlo, qhi, m))
+    wstart0 = jnp.full((W,), _I32_MAX, jnp.int32)   # i32max pads sort last
+    wcount0 = jnp.zeros((W,), jnp.int32)
+
+    def level(_lvl, st):
+        fnode, fD, card, n_small, n_large, wstart, wcount, fill = st
+        node, do_scan, fnode, fD = _frontier_step(di, qlo, qhi, F, full,
+                                                  fnode, fD)
+        cnt = di.count[node]
+        card = card + jnp.sum(jnp.where(do_scan, cnt, 0))
+        small = do_scan & (cnt > 0) & (cnt <= node_thr)
+        large = do_scan & (cnt > node_thr)
+        pos = fill + jnp.cumsum(small) - small          # exclusive
+        slot = jnp.where(small, jnp.minimum(pos, W), W)  # W: drop (clamp)
+        wstart = wstart.at[slot].set(di.start[node], mode="drop")
+        wcount = wcount.at[slot].set(cnt, mode="drop")
+        return (fnode, fD, card,
+                n_small + jnp.sum(small), n_large + jnp.sum(large),
+                wstart, wcount, jnp.minimum(fill + jnp.sum(small), W))
+
+    st = jax.lax.fori_loop(
+        0, H, level, (fnode0, fD0, jnp.int32(0), jnp.int32(0),
+                      jnp.int32(0), wstart0, wcount0, jnp.int32(0)))
+    _, _, card, n_small, n_large, wstart, wcount, _ = st
+    # antichain extents are disjoint -> starts unique among real windows;
+    # stable ascending sort puts the i32max pads last
+    o = jnp.argsort(wstart, stable=True)
+    wstart, wcount = wstart[o], wcount[o]
+    wstart = jnp.where(wcount > 0, wstart, -1)
+    return card, n_small, n_large, wstart, wcount
 
 
 class HostCardEstimator:

@@ -7,7 +7,25 @@ import numpy as np
 
 import jax
 
-__all__ = ["make_production_mesh", "mesh_axis_sizes", "sharding_rules"]
+__all__ = ["make_production_mesh", "make_query_mesh", "mesh_axis_sizes",
+           "sharding_rules"]
+
+
+def make_query_mesh(n_model: int, n_data: int = 1):
+    """Small (`data`, `model`) mesh for the collective KHI query pipeline
+    (DESIGN.md §14): `model` holds the S index shards, `data` splits the
+    query batch. Sized to whatever devices exist — the emulated-mesh CI
+    and bench path (XLA_FLAGS=--xla_force_host_platform_device_count=N)
+    and real accelerators go through the same constructor."""
+    need = n_model * n_data
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"query mesh ({n_data}, {n_model}) needs {need} devices, have "
+            f"{len(devs)} — set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={need} before importing jax to emulate")
+    dev_array = np.asarray(devs[:need]).reshape(n_data, n_model)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

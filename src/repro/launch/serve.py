@@ -9,6 +9,8 @@ predicate-fused kernel), ``--router`` the Phase-A tree router,
 ``--strategy`` the execution strategy (``auto`` = per-query planner
 dispatch between graph search and the exact brute scan, DESIGN.md §10;
 ``--scan-threshold`` overrides the derived dispatch threshold);
+``--mesh`` serves the sharded corpus through the collective shard_map
+pipeline on a ``(data, model)`` query mesh (DESIGN.md §14);
 ``--stream-smoke`` additionally exercises the streaming write path
 (insert → delete → compact → re-query, DESIGN.md §11) and asserts that
 post-compaction answers match the pre-compaction delta-merged answers;
@@ -42,10 +44,17 @@ def serve_khi(args):
     cfg = KHIConfig(M=16, builder="device")  # jitted on-device build (DESIGN.md §7)
     print(f"[serve] building KHI over n={args.n} d={args.d} "
           f"shards={args.shards}")
-    if args.shards > 1:
-        index = build_sharded(vecs, attrs, args.shards, cfg)
+    if args.shards > 1 or args.mesh:
+        index = build_sharded(vecs, attrs, max(args.shards, 1), cfg)
     else:
         index = KHIIndex.build(vecs, attrs, cfg)
+    mesh = None
+    if args.mesh:
+        # collective serving (DESIGN.md §14): one shard per `model` device;
+        # needs len(jax.devices()) >= shards (emulate with XLA_FLAGS)
+        from repro.launch.mesh import make_query_mesh
+        mesh = make_query_mesh(max(args.shards, 1), 1)
+        print(f"[serve] collective mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     params = SearchParams(k=10, ef=args.ef, c_e=10, c_n=16,
                           backend=args.backend,
                           expand_width=args.expand_width,
@@ -56,7 +65,8 @@ def serve_khi(args):
                           rerank_mult=args.rerank_mult,
                           node_scan_threshold=args.node_scan_threshold)
     buckets = tuple(sorted({1, 8, args.batch}))
-    svc = KHIService(index, params, config=ServeConfig(buckets=buckets))
+    svc = KHIService(index, params, config=ServeConfig(buckets=buckets),
+                     mesh=mesh)
 
     Q, preds = make_queries(vecs, attrs, n_queries=args.batch * args.iters,
                             sigma=1 / 16, seed=1)
@@ -222,6 +232,12 @@ def main(argv=None):
     from repro.core.engine import BACKENDS, ROUTERS
 
     ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve through the collective shard_map pipeline "
+                         "on a (1, shards) (data, model) query mesh "
+                         "(DESIGN.md §14) — needs at least --shards "
+                         "devices; emulate on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--backend", default="jnp", choices=list(BACKENDS))
     ap.add_argument("--expand-width", type=int, default=1,
                     help="frontier width E: pool entries expanded per hop")

@@ -44,8 +44,11 @@ high-selectivity lanes keep graph QPS. Bucket pad lanes carry an empty
 range, whose cardinality bound is 0 — the planner sends them to the
 graph program, which exits immediately (a scan lane would pay a full
 corpus pass). ``snapshot()["scan_lanes"]`` counts scan-dispatched lanes.
-The planner is host-side; with a ``mesh=`` (collective shard_map fan-out)
-only ``strategy="graph"`` is supported.
+The Planner is host-side on the mesh-less path; with a ``mesh=`` every
+strategy and quant tier lowers through the one collective shard_map
+program of ``make_sharded_search_fn`` — the dispatch runs in-collective
+off psum'ed routing bounds (DESIGN.md §14), so ``scan_lanes`` is not
+tracked there (the decision never surfaces to the host).
 
 **Degradation tiers** (DESIGN.md §13): the service can carry a ladder of
 ``SearchParams`` variants (``tiers=`` / ``set_tiers``), and every entry
@@ -212,15 +215,13 @@ class KHIService:
             index = device_put_index(index)
         self._sharded = isinstance(index, ShardedKHI)
         di = index.di if self._sharded else index
+        if self._mesh is not None and not self._sharded:
+            raise ValueError(
+                "mesh= serving needs a ShardedKHI (the collective shard_map "
+                "program shards the stacked index over the model axis — "
+                "DESIGN.md §14)")
         tier_params = []
         for t, up in enumerate(self._tier_user):
-            if self._mesh is not None and up.strategy != "graph":
-                raise ValueError(
-                    f"strategy={up.strategy!r} (tier {t}) with mesh=: the "
-                    f"planner dispatches per query on the host, before the "
-                    f"collective shard_map fan-out — serve without a mesh "
-                    f"(vmap fan-out) or force strategy='graph' (DESIGN.md "
-                    f"§10).")
             tier_params.append(validate_search_params(
                 up, di, on_undersized=self._on_undersized))
         # quantized score path (DESIGN.md §12): attach the compressed
@@ -310,6 +311,17 @@ class KHIService:
         # the old index — the flush happens before _install_index rebinds.
         p = self._tier_params[tier]
         scorer, exact = resolve_scorer_pair(p, dist_fn=self._legacy_dist_fn)
+        if self._mesh is not None:
+            # collective pipeline (DESIGN.md §14): every strategy and
+            # quant tier lowers through one shard_map program — planner
+            # dispatch runs in-collective (psum'ed routing bounds), so
+            # there is no host Plan and no per-lane scan_lanes stat here
+            from ..core.sharded import make_sharded_search_fn
+            fn = make_sharded_search_fn(p, self._mesh,
+                                        dist_fn=self._legacy_dist_fn,
+                                        skhi=self.index,
+                                        on_undersized=self._on_undersized)
+            return lambda q, lo, hi: fn(self.index, q, lo, hi)
         if p.strategy != "graph":
             # planner-backed path (DESIGN.md §10): per-lane dispatch to the
             # graph engine or the exact brute scan, single or sharded —
@@ -346,11 +358,6 @@ class KHIService:
             return lambda q, lo, hi: single(self.index, q, lo, hi)
 
         n_shards = self.index.num_shards
-        if self._mesh is not None:
-            from ..core.sharded import make_sharded_search_fn
-            fn = make_sharded_search_fn(p, self._mesh,
-                                        dist_fn=self._legacy_dist_fn)
-            return lambda q, lo, hi: fn(self.index, q, lo, hi)
 
         @jax.jit
         def fanout(skhi: ShardedKHI, q, qlo, qhi):

@@ -327,27 +327,38 @@ def test_validate_rejects_auto_with_dfs_router(tiny_index):
     eng.validate_search_params(ok, di, on_undersized="adjust")
 
 
-def test_graph_only_builders_reject_planner_strategies(tiny_index):
-    """make_search_fn / make_sharded_search_fn lower the graph program
-    only; planner strategies must point at the Planner."""
+def test_graph_only_builder_rejects_planner_strategies(tiny_index):
+    """make_search_fn lowers the graph program only; planner strategies
+    must point at the Planner. (make_sharded_search_fn now lowers every
+    strategy in-collective — its contract is pinned in
+    test_mesh_collective.py.)"""
     with pytest.raises(ValueError, match="Planner"):
         eng.make_search_fn(eng.SearchParams(strategy="scan"))
+
+
+def test_collective_dispatch_needs_corpus_counts(tiny_index):
+    """Under the collective, auto/hybrid dispatch thresholds derive from
+    per-shard corpus counts: without skhi (and without an explicit
+    scan_threshold for auto) construction must fail with the fix named."""
     from jax.sharding import Mesh
     import jax
     from repro.core.sharded import make_sharded_search_fn
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("model", "data"))
-    with pytest.raises(ValueError, match="Planner"):
-        make_sharded_search_fn(eng.SearchParams(strategy="auto"), mesh)
+    with pytest.raises(ValueError, match="skhi"):
+        make_sharded_search_fn(eng.SearchParams(strategy="auto"), mesh,
+                               model_axis="model", data_axes=("data",))
 
 
-def test_service_rejects_planner_strategy_with_mesh(tiny_index):
+def test_service_rejects_mesh_with_unsharded_index(tiny_index):
+    """mesh= serving runs the collective program, which needs the
+    shard-stacked index; a host KHIIndex must be rejected at install."""
     from jax.sharding import Mesh
     import jax
     from repro.serve import KHIService
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("model", "data"))
-    with pytest.raises(ValueError, match="mesh"):
+    with pytest.raises(ValueError, match="ShardedKHI"):
         KHIService(tiny_index, eng.SearchParams(strategy="auto"), mesh=mesh)
 
 
