@@ -25,6 +25,16 @@ the planner graph-dispatches large-cardinality lanes — and a
 ``strategy="scan"``/``quant="int8"`` run (int8 replica scan + exact f32
 rerank) with its recall@k floor asserted.
 
+Phase 4 — compiled boolean predicates (DESIGN.md §15): multi-box unions,
+IN-lists and a past-budget bitmask fallback run through the predicate
+compiler's ``Planner.search_expr`` and measured against the
+hand-decomposed per-box loop (same planner, same plan cache, explicit
+``_merge_dedup``) — the compiled path must return **identical ids** at
+every point, so the per-disjunct orchestration is pure plumbing with no
+result drift. The bitmask fallback is additionally pinned bit-identical
+to a budget-raised box decomposition under forced ``strategy="scan"``
+(both sides exact f32, same kernels, disjoint cover).
+
 Writes ``experiments/bench_selectivity.json`` (the committed trajectory)
 and **asserts inline** (deterministic; CI gates on these):
 
@@ -40,7 +50,10 @@ and **asserts inline** (deterministic; CI gates on these):
     grid-wide by construction);
   * every hybrid pure-window lane is bit-identical to the forced scan,
     recall(hybrid) >= recall(graph-only) at every point, and the int8
-    scan+rerank recall@k >= 0.99 at every point.
+    scan+rerank recall@k >= 0.99 at every point;
+  * ``search_expr`` ids == hand-decomposed per-box loop ids at every
+    phase-4 expression (boxes mode), and the bitmask fallback ==
+    budget-raised boxes under forced scan (both exact).
 
 Wall-clock claims (fused >= unfused; auto >= 0.95x the better of
 graph/scan per point) are *recorded* per point and summarized; they are
@@ -53,14 +66,18 @@ race the scheduler, not test the code.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core.query_ref import Predicate
+from repro.core.predicate import (And, Eq, In, Not, Or, Range, compile_expr,
+                                  eval_expr)
+from repro.core.query_ref import Predicate, brute_force_expr
 from repro.data import make_dataset, make_queries
 
-from .common import (SCALES, build_methods, engine_search, ground_truth,
-                     planner_plan, planner_search, recall_at_k, save_results,
-                     scaled_spec)
+from .common import (SCALES, _staged_planner, build_methods, engine_search,
+                     ground_truth, planner_plan, planner_search, recall_at_k,
+                     save_results, scaled_spec)
 
 DATASET = "laion"
 SELECTIVITIES = (0.01, 0.1, 0.5, 1.0)
@@ -73,6 +90,25 @@ REPEATS = 5            # keep the better wall-clock of N runs per point
 # best-of-5; they are cheap (no hop loop), so take a deep best-of that
 # converges both sides of the auto-vs-best ratio to their floor
 PLANNER_REPEATS = 50
+EXPR_REPEATS = 5       # phase 4: compiled path includes per-box graph lanes
+
+# Phase-4 expressions over laion's attrs (a0/a1 zipf-distributed integers
+# with heavy mass on 1..3, a2 uniform [0, 1)): a multi-box union whose
+# disjuncts OVERLAP (the compiler must emit a disjoint cover), an IN-list
+# over zipf values, a negation that lowers to complement boxes, and a
+# 10-disjunct union past box_budget=8 that falls back to the bitmask
+# plane. (name, expr, #attrs touched).
+PHASE4_EXPRS = [
+    ("union_boxes", Or((
+        And((Range(0, 1.0, 3.0), Range(2, 0.0, 0.5))),
+        And((Range(0, 2.0, 6.0), Range(2, 0.3, 1.0))),
+    )), 2),
+    ("in_list", In(0, (1.0, 3.0, 5.0, 7.0)), 1),
+    ("nested_not", And((Range(2, 0.2, None), Not(In(1, (1.0, 2.0))))), 2),
+    ("bitmask_fallback", Or(tuple(
+        And((Eq(0, float(v + 1)), Range(2, 0.06 * v, 0.06 * v + 0.45)))
+        for v in range(10))), 2),
+]
 
 
 def _full_range_preds(attrs, n_queries, card, seed):
@@ -353,6 +389,96 @@ def run(scale: str = "smoke", k: int = 10, strict_qps: bool = False):
               f"{hybrid_qps / auto_qps2:.2f} "
               f"int8_recall={rec_q:.3f}", flush=True)
 
+    # ---- phase 4: compiled boolean predicates (§15)
+    # Compiled search_expr vs the hand-decomposed per-box loop through the
+    # SAME planner (shared plan cache -> identical per-box dispatch), the
+    # loop merging with the same _merge_dedup the compiler uses: the two
+    # sides do identical device work in identical order, so id equality is
+    # a deterministic gate on the orchestration, not a recall statement.
+    # The bitmask fallback has no boxes to hand-decompose; its differential
+    # raises the budget until the same expression lowers to a disjoint box
+    # cover and forces strategy="scan" on both sides (both exact f32 over
+    # the same kernels), pinning dense-plane vs box-cover bit-identity.
+    from repro.core.engine import SearchParams, _merge_dedup
+    Qp, _ = make_queries(vecs, attrs, n_queries=n_q, sigma=0.5,
+                         cardinality=1, seed=73)
+    Qp = np.asarray(Qp, np.float32)
+    p_auto = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=FUSED,
+                          strategy="auto", scan_threshold=threshold)
+    p_scan = SearchParams(k=k, ef=ef, c_n=index.config.M, backend=FUSED,
+                          strategy="scan")
+    pl_auto = _staged_planner(index, p_auto)
+    pl_scan = _staged_planner(index, p_scan)
+    expr_ratios = []
+    for name, expr, n_attrs in PHASE4_EXPRS:
+        sel_meas = float(eval_expr(expr, attrs).mean())
+        gt_e = [brute_force_expr(vecs, attrs, q, expr, k) for q in Qp]
+        prog = compile_expr(expr, m, box_budget=p_auto.box_budget)
+        planner = pl_scan if prog.mode == "bitmask" else pl_auto
+        planner.search_expr(Qp, expr)                  # warm every lane
+        best = None
+        for _ in range(EXPR_REPEATS):
+            t0 = time.perf_counter()
+            ids_c, _, hops_c, pplan = planner.search_expr(Qp, expr)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[-1]:
+                best = (ids_c, hops_c, pplan, dt)
+        ids_c, hops_c, pplan, dt_c = best
+        hand_prog = prog if prog.mode == "boxes" else compile_expr(
+            expr, m, box_budget=4 * prog.n_conjuncts)
+        assert hand_prog.mode == "boxes", \
+            f"{name}: budget-raised compile still bitmask"
+
+        def _perbox(hand_prog=hand_prog, planner=planner):
+            out = None
+            for b in range(hand_prog.n_boxes):
+                lo = np.ascontiguousarray(
+                    np.broadcast_to(hand_prog.lo[b], (len(Qp), m)),
+                    np.float32)
+                hi = np.ascontiguousarray(
+                    np.broadcast_to(hand_prog.hi[b], (len(Qp), m)),
+                    np.float32)
+                ids, dd, _, _ = planner.search(Qp, lo, hi)
+                out = (ids, dd) if out is None else _merge_dedup(
+                    out[0], out[1], ids, dd, k)
+            return out
+
+        _perbox()                                      # warm
+        best_h = None
+        for _ in range(EXPR_REPEATS):
+            t0 = time.perf_counter()
+            ids_h, _ = _perbox()
+            dt = time.perf_counter() - t0
+            if best_h is None or dt < best_h[-1]:
+                best_h = (ids_h, dt)
+        ids_h, dt_h = best_h
+        np.testing.assert_array_equal(
+            ids_c, ids_h,
+            err_msg=f"search_expr ids != per-box loop ids for {name!r} "
+                    f"(mode={pplan.mode}, boxes={hand_prog.n_boxes})")
+        rec_e = recall_at_k(vecs, attrs, Qp, None, ids_c, k, gt=gt_e)
+        qps_c, qps_h = n_q / dt_c, n_q / dt_h
+        expr_ratios.append(qps_c / qps_h)
+        base = {
+            "selectivity": round(sel_meas, 4), "cardinality": n_attrs,
+            "dataset": DATASET, "scale": scale, "ef": ef, "k": k,
+            "expr": name, "mode": pplan.mode, "n_boxes": hand_prog.n_boxes,
+            "recall": rec_e,
+        }
+        rows.append({**base, "method": "engine[predicate:compiled]",
+                     "backend": FUSED, "strategy": "expr",
+                     "qps": qps_c, "hops": float(np.asarray(hops_c).mean()),
+                     "lanes": dict(pplan.lanes),
+                     "compiled_vs_perbox": qps_c / qps_h})
+        rows.append({**base, "method": "engine[predicate:perbox]",
+                     "backend": FUSED, "strategy": "expr_perbox",
+                     "qps": qps_h, "hops": float(np.asarray(hops_c).mean())})
+        print(f"[selectivity] expr {name:<16} mode={pplan.mode:<7} "
+              f"boxes={hand_prog.n_boxes} sel~{sel_meas:.3f} "
+              f"recall={rec_e:.3f} qps={qps_c:7.1f} "
+              f"vs_perbox={qps_c / qps_h:.2f} lanes={dict(pplan.lanes)}",
+              flush=True)
+
     min_ratio = float(np.min(ratios))
     min_auto = float(np.min(auto_ratios))
     mean_hybrid = float(np.mean(hybrid_ratios))
@@ -407,6 +533,16 @@ def run(scale: str = "smoke", k: int = 10, strict_qps: bool = False):
             "min_recall_at_k": float(np.min(quant_recalls)),
             "recall_floor": 0.99,
         },
+        "predicate": {
+            "n_exprs": len(PHASE4_EXPRS),
+            "box_budget": p_auto.box_budget,
+            "id_equality": "asserted inline (search_expr ids == hand "
+                           "per-box loop at every expression; bitmask "
+                           "fallback == budget-raised box cover under "
+                           "forced scan)",
+            "min_compiled_vs_perbox": float(np.min(expr_ratios)),
+            "mean_compiled_vs_perbox": float(np.mean(expr_ratios)),
+        },
     }
     payload = {"summary": summary, "rows": rows}
     save_results("selectivity", payload)
@@ -416,7 +552,10 @@ def run(scale: str = "smoke", k: int = 10, strict_qps: bool = False):
           f"{threshold}, auto_vs_best min={min_auto:.2f} "
           f"mean={summary['planner']['mean_auto_vs_best']:.2f}; hybrid "
           f"vs_auto mean={mean_hybrid:.2f}; int8 recall min="
-          f"{summary['quant']['min_recall_at_k']:.4f}", flush=True)
+          f"{summary['quant']['min_recall_at_k']:.4f}; predicate "
+          f"vs_perbox mean="
+          f"{summary['predicate']['mean_compiled_vs_perbox']:.2f}",
+          flush=True)
     return payload
 
 

@@ -1,0 +1,103 @@
+"""Regenerate the predicate-plan golden snapshot
+(tests/golden/predicate_plans.json, DESIGN.md §15).
+
+For a fixed corpus of boolean filter expressions over the tiny dataset
+(the conftest fixture's exact spec + build config), the snapshot pins:
+
+  * the NORMALIZED IR (negation-free canonical form) and its canonical
+    key — normalization must stay idempotent and byte-stable;
+  * the compiled program (``PredicateProgram.to_json_dict()``): mode,
+    disjoint box cover (strict-JSON ``"inf"``/``"-inf"`` bounds),
+    conjunct count, budget;
+  * for box-mode programs, the per-disjunct routing cardinality bound
+    and scan/graph dispatch decision on the tiny index at the recorded
+    ``scan_threshold`` (10% of the corpus, the khi-serve rule).
+
+``tests/test_predicate.py::test_golden_predicate_plans`` replays it.
+Only regenerate when normalization/lowering semantics are INTENTIONALLY
+changed, and say so in the PR.
+
+    PYTHONPATH=src python scripts/gen_golden_predicates.py
+"""
+
+import json
+import os
+import pathlib
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.engine import Planner, SearchParams
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.predicate import (And, Eq, In, Not, Or, Range, boxes_disjoint,
+                                  canonical_key, compile_expr, expr_to_dict,
+                                  normalize, parse_expr)
+from repro.data import DatasetSpec, make_dataset
+
+# Mirrors tests/conftest.py's tiny fixture exactly.
+SPEC = DatasetSpec("tiny", n=1200, d=24, m=3, seed=0,
+                   attr_kinds=("year", "lognormal", "uniform"),
+                   attr_corr=0.6, n_clusters=16)
+M = 3
+BOX_BUDGET = 8
+SCAN_THRESHOLD = 120                 # 10% of n, the khi-serve dispatch rule
+
+# Attr layout: a0 = skewed discrete years 2005..2024, a1 = lognormal,
+# a2 = uniform [0, 1). One expression per §15 lowering shape.
+EXPRS = [
+    ("plain_box", And((Range(0, 2015, 2020), Range(2, 0.25, 0.75)))),
+    ("one_sided", Range(1, None, 2.0)),
+    ("point", Eq(0, 2024)),
+    ("in_list", In(0, (2010.0, 2015.0, 2020.0))),
+    ("union_overlap", Or((Range(0, 2005, 2012), Range(0, 2010, 2018)))),
+    ("negation", Not(Range(2, 0.2, 0.8))),
+    ("nested", And((Range(0, 2016, None),
+                    Or((Range(1, None, 1.0), Range(2, 0.9, None)))))),
+    ("unsatisfiable", And((Range(2, 0.8, 0.2),))),
+    ("parsed", parse_expr(
+        "a0 >= 2018 and (a1 in [0.5, 1.5] or not a2 <= 0.5)", M)),
+    ("bitmask_fallback", Or(tuple(
+        And((Eq(0, float(2005 + 2 * i)), Range(2, 0.1 * i, 0.1 * i + 0.05)))
+        for i in range(10)))),
+]
+
+
+def main() -> None:
+    vecs, attrs = make_dataset(SPEC)
+    index = KHIIndex.build(vecs, attrs, KHIConfig(M=16, merge_chunk=32))
+    planner = Planner(index, SearchParams(
+        k=10, ef=64, c_e=10, c_n=32, backend="jnp", strategy="auto",
+        scan_threshold=SCAN_THRESHOLD))
+    entries = []
+    for name, expr in EXPRS:
+        norm = normalize(expr, M)
+        assert normalize(norm) == norm, f"{name}: normalize not idempotent"
+        prog = compile_expr(expr, M, box_budget=BOX_BUDGET)
+        entry = {
+            "name": name,
+            "expr": expr_to_dict(expr),
+            "normalized": expr_to_dict(norm),
+            "canonical_key": canonical_key(expr).hex(),
+            "program": prog.to_json_dict(),
+            "dispatch": [],
+        }
+        if prog.mode == "boxes":
+            assert boxes_disjoint(prog.lo, prog.hi), f"{name}: overlap"
+            for b in range(prog.n_boxes):
+                plan = planner.plan(prog.lo[b][None], prog.hi[b][None])
+                entry["dispatch"].append({"card": int(plan.card[0]),
+                                          "use_scan": bool(plan.use_scan[0])})
+        entries.append(entry)
+    out = {"spec": "tiny/n=1200/d=24/m=3/seed=0", "m": M,
+           "box_budget": BOX_BUDGET, "scan_threshold": SCAN_THRESHOLD,
+           "entries": entries}
+    dst = pathlib.Path(__file__).resolve().parent.parent / "tests" / \
+        "golden" / "predicate_plans.json"
+    dst.parent.mkdir(exist_ok=True)
+    dst.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {dst} ({len(entries)} entries)")
+
+
+if __name__ == "__main__":
+    main()

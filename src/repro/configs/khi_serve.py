@@ -54,6 +54,12 @@ class KHIServeConfig:
     # scan antichain subtrees up to this many rows as contiguous DFS
     # windows, graph-walk the rest. 0 inherits scan_threshold.
     node_scan_threshold: int = 0
+    # Predicate compiler (DESIGN.md §15): max disjoint boxes a compiled
+    # boolean filter expression (--filter-expr / Request(expr=)) may
+    # lower to before the dense bitmask fallback takes over. 8 covers
+    # every IN-list/multi-range shape the bench's phase 4 measures while
+    # bounding the per-disjunct dispatch fan-out.
+    box_budget: int = 8
     buckets: Tuple[int, ...] = (1, 8, 32, 128, 256)  # micro-batch shapes
     cache_size: int = 65536             # LRU result-cache entries
     # Streaming write path (DESIGN.md §11): per-shard delta-segment rows
@@ -85,7 +91,8 @@ class KHIServeConfig:
                             scan_threshold=self.scan_threshold,
                             quant=self.quant,
                             rerank_mult=self.rerank_mult,
-                            node_scan_threshold=self.node_scan_threshold)
+                            node_scan_threshold=self.node_scan_threshold,
+                            box_budget=self.box_budget)
 
     def serve_config(self):
         from ..serve.khi_service import ServeConfig

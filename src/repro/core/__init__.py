@@ -6,8 +6,23 @@ from .query_ref import (  # noqa: F401
     Predicate,
     StreamingOracle,
     brute_force,
+    brute_force_expr,
     estimate_cardinality,
     query,
+)
+from .predicate import (  # noqa: F401
+    And,
+    Eq,
+    In,
+    Not,
+    Or,
+    Range,
+    PredicateProgram,
+    compile_expr,
+    eval_expr,
+    normalize,
+    parse_expr,
+    validate_expr,
 )
 from .build_device import build_graphs_device  # noqa: F401
 from .delta import DeltaSegment, StreamingState  # noqa: F401
@@ -18,6 +33,7 @@ from .engine import (  # noqa: F401
     DeviceIndex,
     Plan,
     Planner,
+    PredicatePlan,
     Scorer,
     SearchParams,
     derive_search_params,

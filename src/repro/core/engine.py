@@ -87,7 +87,7 @@ from .util import pow2_at_least
 
 __all__ = ["DeviceIndex", "SearchParams", "BACKENDS", "ROUTERS",
            "STRATEGIES", "SCAN_BACKENDS", "DEFAULT_SCAN_FRAC", "QUANTS",
-           "Scorer", "Plan", "Planner", "with_quant_replica",
+           "Scorer", "Plan", "PredicatePlan", "Planner", "with_quant_replica",
            "device_put_index", "resolve_dist_ids", "resolve_scorer",
            "search_batch", "make_search_fn", "required_scan_budget",
            "required_stack_cap", "required_frontier_cap",
@@ -280,6 +280,12 @@ class SearchParams:
     # (so by default every lane "auto" would scan becomes a pure
     # windowed scan that visits only its in-range windows).
     node_scan_threshold: int = 0
+    # predicate compiler (DESIGN.md §15): largest disjoint box cover a
+    # compiled boolean filter expression may execute as before lowering
+    # falls back to the dense row-bitmask brute scan. Each box costs one
+    # full per-disjunct dispatch lane; the bitmask fallback costs one
+    # exact f32 full-corpus pass regardless of strategy/quant.
+    box_budget: int = 8
 
     def __post_init__(self):
         if self.expand_width < 1:
@@ -323,6 +329,10 @@ class SearchParams:
             raise ValueError(f"node_scan_threshold must be >= 0 (0 = "
                              f"inherit scan_threshold), "
                              f"got {self.node_scan_threshold}")
+        if self.box_budget < 1:
+            raise ValueError(f"box_budget must be >= 1 (the smallest "
+                             f"compiled predicate cover is one box), "
+                             f"got {self.box_budget}")
 
     def hops(self) -> int:
         return self.max_hops or self.ef * 4
@@ -420,11 +430,17 @@ def _check_strategy_combo(p: SearchParams) -> None:
 
 
 def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
-                           on_undersized: str = "raise") -> SearchParams:
+                           on_undersized: str = "raise",
+                           expr=None) -> SearchParams:
     """Check ``p``'s index-dependent buffer bounds against ``di``, plus the
     strategy/backend/router compatibility rules (``_check_strategy_combo``
     — those raise regardless of ``on_undersized``; they are contract
     violations, not sizing choices).
+
+    ``expr``: optional predicate expression (core/predicate.py) to
+    validate against this index's attribute count — malformed ASTs are
+    rejected here, at params-validation time, with actionable messages
+    naming the bad node's path (DESIGN.md §15).
 
     on_undersized: ``"raise"`` (error with the sufficient values),
     ``"adjust"`` (return an auto-raised copy), or ``"ignore"`` (legacy
@@ -432,6 +448,9 @@ def validate_search_params(p: SearchParams, di: "DeviceIndex", *,
     for a smaller scan window).
     """
     _check_strategy_combo(p)
+    if expr is not None:
+        from .predicate import validate_expr
+        validate_expr(expr, int(di.attrs.shape[-1]))
     if on_undersized == "ignore":
         return p
     if on_undersized not in ("raise", "adjust"):
@@ -967,14 +986,18 @@ def _scan_shard_topk(di: "DeviceIndex", shard, attrs_nan, q, qlo, qhi,
 
 
 def _merge_dedup(ids_a: np.ndarray, d_a: np.ndarray, ids_b: np.ndarray,
-                 d_b: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+                 d_b: np.ndarray, k: int,
+                 out_dtype=np.int32) -> tuple[np.ndarray, np.ndarray]:
     """Merge two partial top-k streams under the (dist, id) lexicographic
     contract with id-level dedup (DESIGN.md §12): a row found by BOTH the
     graph walk and a window keeps its best (lowest) distance — the two
     paths may disagree by f32 reduce-order ulps, and without dedup a
     twice-found row could crowd a genuinely distinct k-th neighbor out.
     Two lexsort passes: group by id keeping the best occurrence first,
-    mask the rest to (+inf, -1), then rank by (dist, id) and take k."""
+    mask the rest to (+inf, -1), then rank by (dist, id) and take k.
+    ``out_dtype=np.int64`` preserves external streaming ids (DESIGN.md
+    §11/§15 — the predicate compiler's cross-disjunct merge under a live
+    delta segment); all comparisons run in int64 either way."""
     ids = np.concatenate([ids_a, ids_b], axis=1).astype(np.int64)
     d = np.concatenate([d_a, d_b], axis=1).astype(np.float32)
     sentinel = np.iinfo(np.int64).max
@@ -989,8 +1012,21 @@ def _merge_dedup(ids_a: np.ndarray, d_a: np.ndarray, ids_b: np.ndarray,
     o2 = np.lexsort((key, d), axis=-1)[:, :k]     # (dist, id) rank, take k
     out_d = np.take_along_axis(d, o2, axis=1).astype(np.float32)
     out_i = np.take_along_axis(key, o2, axis=1)
-    out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
+    out_i = np.where(np.isinf(out_d), -1, out_i).astype(out_dtype)
     return out_i, out_d
+
+
+def _mask_scan_one(vecs, mask, q, k: int, *, use_kernel: bool,
+                   interpret: bool):
+    """One shard's bitmask-fused exact brute scan (DESIGN.md §15) — the
+    predicate compiler's dense-fallback execution: the Pallas mask kernel
+    or its jnp oracle, always on the f32 corpus (the fallback trades the
+    quantized replica for unconditional exactness)."""
+    if use_kernel:
+        from ..kernels.scan_topk import scan_topk_mask_raw
+        return scan_topk_mask_raw(vecs, mask, q, k=k, interpret=interpret)
+    from ..kernels.ref import scan_topk_mask_ref
+    return scan_topk_mask_ref(vecs, mask, q, k)
 
 
 def _merge_dedup_jnp(ids_a, d_a, ids_b, d_b, k: int):
@@ -1043,6 +1079,26 @@ class Plan:
     mode: Optional[np.ndarray] = None         # (B,) int8, hybrid only
     n_windows: Optional[np.ndarray] = None    # (B,) int64, hybrid only
     small_nodes: Optional[list] = None        # per-shard (B, P) bool
+
+
+@dataclasses.dataclass
+class PredicatePlan:
+    """Host-side record of one compiled-predicate batch (DESIGN.md §15).
+
+    ``mode`` mirrors the program's: ``"boxes"`` executed the disjoint
+    cover — one full per-disjunct strategy dispatch per box, recorded in
+    ``box_plans`` (one ``Plan`` per box, in cover order) — while
+    ``"bitmask"`` ran the dense fallback scan (``box_plans`` empty).
+    ``lanes`` counts dispatched (query × disjunct) lanes per execution
+    strategy — ``{"graph", "scan", "window"}``; mixed hybrid lanes count
+    under both graph and window — the observability contract the serving
+    snapshot exposes (the per-strategy lane-count satellite)."""
+
+    mode: str
+    n_boxes: int
+    lanes: dict
+    box_plans: list
+    program: Any = None    # the compiled PredicateProgram
 
 
 class Planner:
@@ -1169,6 +1225,11 @@ class Planner:
             collections.OrderedDict() if plan_cache is None else plan_cache)
         self._plan_salt = plan_salt
         self.plan_cache_size = 65536
+        # predicate-compiler state (§15), built lazily on the first
+        # search_expr: the jitted bitmask-scan program and the host copy
+        # of the NaN-masked scan attrs the mask evaluator reads
+        self._mask_fn = None
+        self._host_scan_attrs: Optional[np.ndarray] = None
 
     def _build_pos_replica(self) -> None:
         """Position-ordered copies of the scan corpus: row i of
@@ -1278,6 +1339,7 @@ class Planner:
             valid = valid[0]
         self._scan_attrs = jnp.where(jnp.asarray(valid)[..., None],
                                      di_new.attrs, jnp.nan)
+        self._host_scan_attrs = None   # bitmask evaluator re-fetches (§15)
         if self.params.strategy in ("auto", "hybrid"):
             self._estimators = self._build_estimators(deleted_rows)
         if self.params.strategy == "hybrid":
@@ -1507,6 +1569,119 @@ class Planner:
             out_d[idx] = dists[: len(idx)]
             out_h[idx] = hops[: len(idx)]
         return out_ids, out_d, out_h, plan
+
+    # --------------------------------------------- compiled predicates (§15)
+    def _build_mask_fn(self):
+        p = self.params
+        interpret = self._interpret
+        use_kernel = p.backend == "pallas_gather_l2_filter"
+
+        if not self._sharded:
+            @jax.jit
+            def mask_scan(di, mask, q):
+                return _mask_scan_one(di.vecs, mask, q, p.k,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
+            return lambda mask, q: mask_scan(self.index, mask, q)
+
+        from .sharded import _local_to_global, _merge_topk
+        S = self.index.num_shards
+
+        @jax.jit
+        def mask_sharded(skhi, mask, q):
+            gi, gd = [], []
+            for s in range(S):   # static unroll: S identical-shape scans
+                ids, dd = _mask_scan_one(skhi.di.vecs[s], mask[s], q, p.k,
+                                         use_kernel=use_kernel,
+                                         interpret=interpret)
+                gids = _local_to_global(ids, skhi.offsets[s], S)
+                gi.append(gids)
+                gd.append(jnp.where(gids >= 0, dd, jnp.inf))
+            return _merge_topk(jnp.stack(gi), jnp.stack(gd), p.k)
+
+        return lambda mask, q: mask_sharded(self.index, mask, q)
+
+    def _run_mask(self, queries: np.ndarray, prog):
+        """Dense-fallback execution (§15): evaluate the normalized
+        expression host-side over the NaN-masked scan attrs (structural
+        padding and streaming tombstones fail every expression) into a
+        per-row plane, then one exact f32 bitmask-fused pass — same
+        query-count pow2 padding discipline as the strategy sub-batches."""
+        from .predicate import eval_expr
+
+        if self._mask_fn is None:
+            self._mask_fn = self._build_mask_fn()
+        if self._host_scan_attrs is None:
+            self._host_scan_attrs = np.asarray(
+                jax.device_get(self._scan_attrs))
+        mask = eval_expr(prog.expr, self._host_scan_attrs).astype(np.float32)
+        B = queries.shape[0]
+        bp = pow2_at_least(B)
+        qs = queries if bp == B else np.concatenate(
+            [queries, np.zeros((bp - B,) + queries.shape[1:], np.float32)])
+        ids, dd = self._mask_fn(jnp.asarray(mask), jnp.asarray(qs))
+        return (np.asarray(ids)[:B], np.asarray(dd)[:B],
+                np.zeros(B, np.int32))
+
+    @staticmethod
+    def _count_lanes(plan: Plan, lanes: dict, B: int) -> None:
+        """Fold one box's dispatch into the per-strategy lane counters
+        (PredicatePlan.lanes; mixed hybrid lanes count under both)."""
+        if plan.mode is not None:
+            lanes["graph"] += int(((plan.mode == 0) | (plan.mode == 2)).sum())
+            lanes["window"] += int(((plan.mode == 1) | (plan.mode == 2)).sum())
+        else:
+            ns = int(plan.use_scan.sum())
+            lanes["scan"] += ns
+            lanes["graph"] += B - ns
+
+    def search_expr(self, queries, expr):
+        """Compiled-predicate search (DESIGN.md §15): (B, d) queries × one
+        boolean filter expression -> (ids (B, k) int32, dists (B, k) f32,
+        hops (B,) int32, PredicatePlan).
+
+        ``"boxes"`` programs run each disjoint box through the full
+        ``search`` dispatch (graph/scan/auto/hybrid per disjunct, plan
+        cache shared) and merge the per-box streams with ``_merge_dedup``
+        — sound with plain best-dist-per-id semantics because the cover
+        is disjoint: no row can appear under two boxes, dedup only ever
+        collapses the (+inf, -1) pads. ``hops`` sums over boxes (the
+        total graph work the expression cost). ``"bitmask"`` programs
+        run one exact f32 fallback pass (hops 0)."""
+        from .predicate import compile_expr
+
+        queries = np.ascontiguousarray(queries, np.float32)
+        p = self.params
+        di = self.index.di if self._sharded else self.index
+        m = int(di.attrs.shape[-1])
+        prog = compile_expr(expr, m, box_budget=p.box_budget)
+        B, k = queries.shape[0], p.k
+        lanes = {"graph": 0, "scan": 0, "window": 0}
+        if prog.mode == "bitmask":
+            ids, dists, hops = self._run_mask(queries, prog)
+            lanes["scan"] = B
+            return ids, dists, hops, PredicatePlan(
+                mode="bitmask", n_boxes=0, lanes=lanes, box_plans=[],
+                program=prog)
+        out_ids = out_d = None
+        out_h = np.zeros(B, np.int32)
+        box_plans = []
+        for b in range(prog.n_boxes):
+            qlo = np.ascontiguousarray(
+                np.broadcast_to(prog.lo[b], (B, m)), np.float32)
+            qhi = np.ascontiguousarray(
+                np.broadcast_to(prog.hi[b], (B, m)), np.float32)
+            ids, dists, hops, plan = self.search(queries, qlo, qhi)
+            box_plans.append(plan)
+            self._count_lanes(plan, lanes, B)
+            out_h += hops
+            if out_ids is None:
+                out_ids, out_d = ids, dists
+            else:
+                out_ids, out_d = _merge_dedup(out_ids, out_d, ids, dists, k)
+        return out_ids, out_d, out_h, PredicatePlan(
+            mode="boxes", n_boxes=prog.n_boxes, lanes=lanes,
+            box_plans=box_plans, program=prog)
 
     def _search_hybrid(self, queries, qlo, qhi, plan: Plan):
         """Three-way lane split (§12): mode 0 = graph walk, mode 1 =

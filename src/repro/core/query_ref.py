@@ -18,7 +18,7 @@ from .khi import KHIIndex
 
 __all__ = ["Predicate", "range_filter", "range_filter_level", "recons_nbr",
            "estimate_cardinality", "query", "brute_force",
-           "StreamingOracle"]
+           "brute_force_expr", "StreamingOracle"]
 
 
 class Predicate:
@@ -58,6 +58,24 @@ def brute_force(index_vecs: np.ndarray, attrs: np.ndarray, q: np.ndarray,
     k = min(k, len(ids))
     top = np.argpartition(d2, kth=k - 1)[:k]
     return ids[top[np.argsort(d2[top], kind="stable")]].astype(np.int64)
+
+
+def brute_force_expr(index_vecs: np.ndarray, attrs: np.ndarray,
+                     q: np.ndarray, expr, k: int) -> np.ndarray:
+    """Exact ground truth under a boolean filter expression (DESIGN.md
+    §15): mask-then-top-k with the engine's (distance, id) lexicographic
+    tie-break — the differential predicate fuzzer's oracle
+    (tests/test_predicate.py). Shorter than k when the match count is."""
+    from .predicate import eval_expr
+
+    mask = eval_expr(expr, np.asarray(attrs, np.float32))
+    ids = np.nonzero(mask)[0].astype(np.int64)
+    if not ids.size:
+        return ids
+    diff = np.asarray(index_vecs[ids], np.float32) - np.asarray(q, np.float32)
+    d2 = np.einsum("nd,nd->n", diff, diff)
+    order = np.lexsort((ids, d2))[: min(k, ids.size)]
+    return ids[order]
 
 
 def range_filter(index: KHIIndex, pred: Predicate, c_e: int,
@@ -563,6 +581,24 @@ class StreamingOracle:
             return exts
         mask = pred.matches(attrs)
         ids = np.nonzero(mask)[0]
+        if not ids.size:
+            return ids.astype(np.int64)
+        diff = vecs[ids] - np.asarray(q, np.float32)
+        d2 = np.einsum("nd,nd->n", diff, diff)
+        order = np.lexsort((exts[ids], d2))[: min(k, ids.size)]
+        return exts[ids[order]]
+
+    def query_expr(self, q: np.ndarray, expr, k: int) -> np.ndarray:
+        """``query`` under a boolean filter expression (DESIGN.md §15):
+        exact top-k ext ids over the live corpus with the same
+        (distance, ext) tie-break — the streaming half of the predicate
+        fuzzer's differential oracle."""
+        from .predicate import eval_expr
+
+        exts, vecs, attrs = self.corpus()
+        if not exts.size:
+            return exts
+        ids = np.nonzero(eval_expr(expr, attrs))[0]
         if not ids.size:
             return ids.astype(np.int64)
         diff = vecs[ids] - np.asarray(q, np.float32)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 __all__ = ["l2dist_qn_ref", "l2dist_qc_ref", "gather_l2_ref",
            "gather_l2_filter_ref", "scan_topk_ref",
            "gather_l2_filter_q8_ref", "scan_topk_q8_ref",
-           "scan_topk_windows_ref"]
+           "scan_topk_mask_ref", "scan_topk_windows_ref"]
 
 
 def l2dist_qn_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -72,6 +72,25 @@ def scan_topk_ref(corpus: jnp.ndarray, attrs: jnp.ndarray, q: jnp.ndarray,
     ok = jnp.all((a[None] >= qlo[:, None, :]) & (a[None] <= qhi[:, None, :]),
                  axis=-1)                                # (B, N); NaN -> False
     masked = jnp.where(ok, dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-masked, k)
+    dists = -neg
+    ids = jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)
+    return ids, dists
+
+
+def scan_topk_mask_ref(corpus: jnp.ndarray, mask: jnp.ndarray,
+                       q: jnp.ndarray,
+                       k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bitmask-scan oracle for ``scan_topk_mask_raw`` (DESIGN.md §15):
+    corpus (N, d), mask (N,) or (N, 1) f32 shared across the batch
+    (> 0 = row passes — the predicate compiler's dense fallback plane),
+    q (B, d) -> (ids (B, k) int32, dists (B, k) f32), exact masked top-k
+    with ``lax.top_k`` tie-break and (-1, +inf) tail lanes."""
+    diff = corpus[None, :, :].astype(jnp.float32) - q[:, None, :].astype(
+        jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)                 # (B, N)
+    ok = mask.reshape(-1).astype(jnp.float32) > 0.0      # (N,)
+    masked = jnp.where(ok[None, :], dist, jnp.inf)
     neg, idx = jax.lax.top_k(-masked, k)
     dists = -neg
     ids = jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)

@@ -53,6 +53,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["scan_topk_kernel", "scan_topk_raw",
            "scan_topk_q8_kernel", "scan_topk_q8_raw",
+           "scan_topk_mask_kernel", "scan_topk_mask_raw",
            "scan_topk_windows_kernel", "scan_topk_windows_raw"]
 
 
@@ -234,6 +235,70 @@ def scan_topk_q8_raw(qcorpus: jax.Array, qscale: jax.Array,
         ],
         interpret=interpret,
     )(qcorpus, qscale, attrs, q, qlo, qhi)
+    return ids, dists
+
+
+def scan_topk_mask_kernel(corpus_ref, mask_ref, q_ref, ids_ref, dists_ref):
+    """Bitmask-fused variant of ``scan_topk_kernel`` (DESIGN.md §15): the
+    in-kernel range test is replaced by a precomputed per-row mask plane —
+    the predicate compiler's dense fallback for expressions whose disjoint
+    box cover exceeds the budget. The (N_BLK, 1) f32 mask tile streams in
+    place of the attrs tile (> 0 = row passes; padded rows ship 0), so
+    arbitrary boolean structure costs the same HBM traffic as one attr."""
+    j = pl.program_id(1)
+    n_blk = corpus_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        ids_ref[...] = jnp.full(ids_ref.shape, -1, jnp.int32)
+        dists_ref[...] = jnp.full(dists_ref.shape, jnp.inf, jnp.float32)
+
+    d = q_ref[...].astype(jnp.float32) - corpus_ref[...].astype(jnp.float32)
+    dist = jnp.sum(d * d, axis=-1)                       # (n_blk,)
+    ok = mask_ref[...][:, 0] > 0.0                       # (n_blk,)
+    rows = j * n_blk + jax.lax.broadcasted_iota(jnp.int32, (1, n_blk), 1)
+    _fold_tile_topk(dist, ok, rows, ids_ref, dists_ref)
+
+
+def scan_topk_mask_raw(corpus: jax.Array, mask: jax.Array, q: jax.Array,
+                       *, k: int, n_blk: int = 512,
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array]:
+    """corpus (N, d), mask (N,) or (N, 1) f32 (> 0 = row passes), q (B, d)
+    -> (ids (B, k) int32, dists (B, k) f32), exact masked top-k ascending
+    with (-1, +inf) lanes past the pass count. Unlike the predicate-fused
+    scans the mask is shared by every query in the batch (one compiled
+    predicate, B queries). Rows pad with mask 0. Oracle:
+    ``ref.scan_topk_mask_ref``."""
+    B = q.shape[0]
+    N, D = corpus.shape
+    if not 1 <= k <= N:
+        raise ValueError(f"k must be in [1, N={N}], got {k}")
+    mask = mask.reshape(N, 1).astype(jnp.float32)
+    n_blk = min(n_blk, N)
+    pad = (-N) % n_blk
+    if pad:
+        corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    n_blocks = (N + pad) // n_blk
+    ids, dists = pl.pallas_call(
+        scan_topk_mask_kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((n_blk, D), lambda i, j: (j, 0)),   # corpus tile
+            pl.BlockSpec((n_blk, 1), lambda i, j: (j, 0)),   # mask plane
+            pl.BlockSpec((1, D), lambda i, j: (i, 0)),       # query row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running ids
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),       # running dists
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(corpus, mask, q)
     return ids, dists
 
 

@@ -18,7 +18,12 @@ post-compaction answers match the pre-compaction delta-merged answers;
 open-loop replay under ``--inject`` fault injection — ``--slo-ms``,
 ``--qdepth`` and ``--degrade-ladder`` set the admission/degradation
 policy — and asserts the no-silent-drop + retry accounting contract;
-``--mode generate`` runs prefill+decode on a smoke LM.
+``--filter-expr 'a0 >= 3 and (a1 in [1, 4] or not a2 <= 0)'`` serves a
+compiled boolean predicate (DESIGN.md §15) through
+``KHIService.search_expr`` and differentially checks it against the
+numpy mask-then-top-k oracle — bit-identical under ``--strategy scan``
+(the CI gate), in-filter + overlap otherwise; ``--mode generate`` runs
+prefill+decode on a smoke LM.
 """
 
 from __future__ import annotations
@@ -63,7 +68,8 @@ def serve_khi(args):
                           scan_threshold=args.scan_threshold,
                           quant=args.quant,
                           rerank_mult=args.rerank_mult,
-                          node_scan_threshold=args.node_scan_threshold)
+                          node_scan_threshold=args.node_scan_threshold,
+                          box_budget=args.box_budget)
     buckets = tuple(sorted({1, 8, args.batch}))
     svc = KHIService(index, params, config=ServeConfig(buckets=buckets),
                      mesh=mesh)
@@ -91,10 +97,53 @@ def serve_khi(args):
           f"batches={snap['batches']} scan_lanes={snap['scan_lanes']} "
           f"pad_lanes={snap['pad_lanes']} cache_hits={snap['cache_hits']} "
           f"buckets={snap['traced_buckets']}")
+    if args.filter_expr:
+        filter_expr_smoke(svc, vecs, attrs, Q, args)
     if args.stream_smoke:
         stream_smoke(svc, vecs, attrs, Q, lo, hi, args)
     if args.load_smoke:
         load_smoke(svc, Q, lo, hi, args)
+
+
+def filter_expr_smoke(svc, vecs, attrs, Q, args):
+    """Compiled-predicate smoke (DESIGN.md §15): parse ``--filter-expr``,
+    serve it through ``KHIService.search_expr``, and differentially
+    check the answers against ``query_ref.brute_force_expr`` — the numpy
+    mask-then-top-k oracle. Under ``--strategy scan`` every lane is
+    exact, so ids must be bit-identical (what the CI step pins); under
+    graph-family strategies the smoke asserts the in-filter guarantee
+    and a recall floor instead (graph walks are approximate)."""
+    from repro.core import brute_force_expr, eval_expr, parse_expr
+    from repro.core.predicate import compile_expr
+
+    m = attrs.shape[-1]
+    expr = parse_expr(args.filter_expr, m)
+    prog = compile_expr(expr, m, box_budget=args.box_budget)
+    B = min(16, len(Q))
+    k = svc.params.k
+    t0 = time.perf_counter()
+    ids, dists = svc.search_expr(Q[:B], expr)
+    dt = time.perf_counter() - t0
+    mask = eval_expr(expr, attrs)
+    hits = ok = 0
+    for i in range(B):
+        ref_ids = brute_force_expr(vecs, attrs, Q[i], expr, k)
+        got = ids[i][ids[i] >= 0]
+        assert mask[got].all(), f"lane {i}: out-of-filter id served"
+        if args.strategy == "scan":
+            np.testing.assert_array_equal(
+                got, ref_ids, err_msg=f"lane {i}: scan lanes must be "
+                f"bit-identical to the oracle")
+        hits += len(set(got.tolist()) & set(ref_ids.tolist()))
+        ok += max(len(ref_ids), 1)
+    recall = hits / ok
+    assert recall >= (1.0 if args.strategy == "scan" else 0.6), \
+        f"filter-expr recall {recall:.2f}"
+    snap = svc.snapshot()
+    print(f"[serve] filter-expr: {args.filter_expr!r} -> {prog.mode} "
+          f"program ({prog.n_boxes} boxes, budget {args.box_budget}); "
+          f"{B} queries in {dt * 1e3:.0f}ms, recall {recall:.2f}, "
+          f"predicate_lanes={snap['predicate_lanes']}")
 
 
 def stream_smoke(svc, vecs, attrs, Q, lo, hi, args):
@@ -266,6 +315,15 @@ def main(argv=None):
     ap.add_argument("--node-scan-threshold", type=int, default=0,
                     help="hybrid per-node scan threshold in rows "
                          "(0 = inherit the resolved scan threshold)")
+    ap.add_argument("--filter-expr", default="",
+                    help="boolean predicate to serve through the "
+                         "predicate compiler (DESIGN.md §15), e.g. "
+                         "'a0 >= 2015 and (a1 in [1, 4] or a2 > 0.5)'; "
+                         "checked against the numpy oracle "
+                         "(bit-identical under --strategy scan)")
+    ap.add_argument("--box-budget", type=int, default=8,
+                    help="max disjoint boxes a compiled predicate may "
+                         "lower to before the dense bitmask fallback")
     ap.add_argument("--slo-ms", type=float, default=250.0,
                     help="default per-request deadline for the SLO "
                          "scheduler (DESIGN.md §13)")

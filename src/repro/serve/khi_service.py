@@ -50,6 +50,25 @@ program of ``make_sharded_search_fn`` — the dispatch runs in-collective
 off psum'ed routing bounds (DESIGN.md §14), so ``scan_lanes`` is not
 tracked there (the decision never surfaces to the host).
 
+**Compiled predicates** (DESIGN.md §15): ``search_expr`` (and ``Request
+(expr=...)`` through flush/serve_stream) accepts a boolean filter
+expression instead of one [lo, hi] box. The predicate compiler lowers it
+to a union of DISJOINT conjunctive boxes; each box is served through the
+normal ``_answer`` path — so per-box requests get the result cache, the
+bucket padding and the streaming delta merge for free — and the
+per-disjunct top-k streams merge under the ``_merge_dedup``
+best-dist-per-id contract (sound because the cover is disjoint: dedup
+only ever collapses pad lanes). Covers past ``SearchParams.box_budget``
+fall back to the dense bitmask program, executed by a lazily-built
+per-tier Planner (exact f32 scan; rejected under streaming — the host
+mask plane cannot see delta rows — and on a mesh, where predicates do
+not lower collectively yet; both raise actionable errors).
+``snapshot()["predicate_lanes"]`` counts the (query × disjunct) device
+lanes a compiled predicate dispatched per execution strategy
+(graph/scan/window/bitmask; bucket-pad lanes count as graph — their
+empty box is a cardinality-0 graph exit) — the host-path answer to PR-9's
+"scan_lanes is not tracked under mesh" observability gap.
+
 **Degradation tiers** (DESIGN.md §13): the service can carry a ladder of
 ``SearchParams`` variants (``tiers=`` / ``set_tiers``), and every entry
 point takes ``tier=`` — tier 0 is the full-quality default, higher tiers
@@ -78,9 +97,11 @@ import numpy as np
 
 from ..core.delta import StreamingState
 from ..core.engine import (SCAN_BACKENDS, DeviceIndex, Planner, SearchParams,
-                           _query_one, device_put_index, resolve_scorer_pair,
-                           validate_search_params, with_quant_replica)
+                           _merge_dedup, _query_one, device_put_index,
+                           resolve_scorer_pair, validate_search_params,
+                           with_quant_replica)
 from ..core.khi import KHIConfig, KHIIndex
+from ..core.predicate import canonical_key, compile_expr, validate_expr
 from ..core.sharded import (ShardedKHI, _merge_topk, _shard_search,
                             build_sharded)
 
@@ -110,11 +131,26 @@ class ServeConfig:
 
 @dataclasses.dataclass
 class Request:
-    """One RFANNS query: vector + per-attribute [lo, hi] box."""
+    """One RFANNS query: vector + exactly ONE filter form — a
+    per-attribute [lo, hi] box (``lo``/``hi``), or a boolean predicate
+    expression (``expr=``, DESIGN.md §15) that the compiler lowers to a
+    disjoint box cover / bitmask program at serve time."""
 
-    query: np.ndarray  # (d,) float32
-    lo: np.ndarray     # (m,) float32, -inf = unconstrained
-    hi: np.ndarray     # (m,) float32, +inf = unconstrained
+    query: np.ndarray                 # (d,) float32
+    lo: Optional[np.ndarray] = None   # (m,) float32, -inf = unconstrained
+    hi: Optional[np.ndarray] = None   # (m,) float32, +inf = unconstrained
+    expr: Optional[object] = None     # core.predicate.Expr
+
+    def __post_init__(self):
+        if self.expr is None:
+            if self.lo is None or self.hi is None:
+                raise ValueError(
+                    "Request needs a filter: pass both lo= and hi= (range "
+                    "box) or expr= (predicate expression, DESIGN.md §15)")
+        elif self.lo is not None or self.hi is not None:
+            raise ValueError(
+                "Request mixes expr= with lo/hi — a compiled predicate "
+                "already encodes its boxes; pass exactly one filter form")
 
 
 @dataclasses.dataclass
@@ -165,7 +201,12 @@ class KHIService:
             "inserts": 0, "deletes": 0, "compactions": 0,
             "ingest_seconds": 0.0, "compact_seconds": 0.0,
             "tier_lanes": collections.Counter(),
+            "predicate_lanes": collections.Counter(),
         }
+        # set to stats["predicate_lanes"] for the duration of a compiled-
+        # predicate run so the dispatch chokepoints attribute their device
+        # lanes to it (DESIGN.md §15); None outside search_expr
+        self._pred_lanes: Optional[collections.Counter] = None
         self._stream: Optional[StreamingState] = None
         self._mutation_seq = 0      # cache-key component (DESIGN.md §11)
         self._compacting = False
@@ -242,6 +283,7 @@ class KHIService:
         self._plan_cache: "collections.OrderedDict[bytes, int]" = (
             collections.OrderedDict())
         self._planners: dict = {}
+        self._pred_planners: dict = {}   # bitmask-fallback tiers (§15)
         self._search_fns: dict = {}
         self._search = self._get_search_fn(0)   # prebuild the hot tier
 
@@ -343,6 +385,11 @@ class KHIService:
                 ids, dists, _hops, plan = planner.search(
                     np.asarray(q), np.asarray(lo), np.asarray(hi))
                 self.stats["scan_lanes"] += int(plan.use_scan.sum())
+                if self._pred_lanes is not None:
+                    # compiled-predicate observability (§15): fold this
+                    # box's per-lane dispatch into predicate_lanes
+                    Planner._count_lanes(plan, self._pred_lanes,
+                                         np.asarray(q).shape[0])
                 return ids, dists
 
             return run
@@ -445,6 +492,11 @@ class KHIService:
         self.stats["device_queries"] += bucket
         self.stats["traced_buckets"].add(bucket)
         self.stats["tier_lanes"][tier] += b
+        if self._pred_lanes is not None \
+                and self._tier_params[tier].strategy == "graph":
+            # strategy="graph" has no per-lane Plan — every device lane of
+            # a predicate box (pads included) is a graph lane (§15)
+            self._pred_lanes["graph"] += bucket
         return ids[:b], dists[:b]
 
     # -------------------------------------------------------------- serving
@@ -504,6 +556,90 @@ class KHIService:
         ids, dists, _ = self._answer(queries, lo, hi, tier)
         return ids, dists
 
+    # ------------------------------------------- compiled predicates (§15)
+    def _pred_planner(self, tier: int) -> Planner:
+        """Planner executing the bitmask-fallback program at ``tier``.
+        Reuses the dispatch planner when the tier already built one
+        (strategy != "graph"); otherwise builds a dedicated instance
+        lazily — reset on every epoch swap by ``_install_index``."""
+        planner = self._planners.get(tier) or self._pred_planners.get(tier)
+        if planner is None:
+            planner = Planner(
+                self.index, self._tier_params[tier],
+                dist_fn=self._legacy_dist_fn,
+                on_undersized=self._on_undersized,
+                plan_cache=self._plan_cache,
+                plan_salt=self.epoch.to_bytes(8, "little"))
+            self._pred_planners[tier] = planner
+        return planner
+
+    def search_expr(self, queries: np.ndarray, expr, *, tier: int = 0
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Predicate front door (DESIGN.md §15): (B, d) queries × one
+        boolean filter expression -> ids/dists (B, k).
+
+        Box-mode programs serve each disjoint disjunct through the normal
+        cached/bucketed/stream-merged ``_answer`` path and merge the
+        per-box streams with ``_merge_dedup`` (int64 ext ids under
+        streaming); bitmask fallbacks run one exact f32 scan through the
+        tier's Planner. ``stats["predicate_lanes"]`` picks up the per-
+        strategy device-lane counts either way."""
+        if not 0 <= tier < len(self._tier_params):
+            raise ValueError(f"tier must be in [0, {len(self._tier_params)})"
+                             f", got {tier} (install ladders via tiers= / "
+                             f"set_tiers)")
+        if self._mesh is not None:
+            raise ValueError(
+                "search_expr with mesh=: compiled predicates do not lower "
+                "through the collective shard_map program yet — the per-"
+                "disjunct dispatch and the dedup merge run host-side. "
+                "Serve predicates without a mesh (vmap fan-out answers a "
+                "ShardedKHI with identical semantics), or pre-lower the "
+                "expression with core.predicate.compile_expr and issue its "
+                "boxes as plain search() calls (DESIGN.md §15)")
+        validate_expr(expr, self.m)
+        queries = np.ascontiguousarray(queries, np.float32)
+        B, k = queries.shape[0], self.params.k
+        p = self._tier_params[tier]
+        prog = compile_expr(expr, self.m, box_budget=p.box_budget)
+        if prog.mode == "bitmask":
+            if self._stream is not None:
+                raise ValueError(
+                    f"predicate compiled to the bitmask fallback (cover "
+                    f"exceeds box_budget={p.box_budget}) while streaming "
+                    f"is enabled: the host mask plane cannot see delta "
+                    f"rows (DESIGN.md §11/§15). Raise "
+                    f"SearchParams.box_budget so the cover fits, simplify "
+                    f"the expression, or compact() first")
+            self.stats["requests"] += B
+            self.stats["predicate_lanes"]["bitmask"] += B
+            ids, dists, _hops = self._pred_planner(tier)._run_mask(
+                queries, prog)
+            return ids, dists
+        id_dtype = np.int64 if self._stream is not None else np.int32
+        out_ids = np.full((B, k), -1, id_dtype)
+        out_d = np.full((B, k), np.inf, np.float32)
+        m = self.m
+        self._pred_lanes = self.stats["predicate_lanes"]
+        try:
+            for b in range(prog.n_boxes):
+                lo = np.ascontiguousarray(
+                    np.broadcast_to(prog.lo[b], (B, m)), np.float32)
+                hi = np.ascontiguousarray(
+                    np.broadcast_to(prog.hi[b], (B, m)), np.float32)
+                ids, dists, _hit = self._answer(queries, lo, hi, tier)
+                if b == 0:
+                    out_ids, out_d = ids.astype(id_dtype), dists
+                else:
+                    # disjoint cover: no row appears under two boxes, so
+                    # best-dist-per-id dedup only collapses (-1, inf) pads
+                    out_ids, out_d = _merge_dedup(out_ids, out_d, ids,
+                                                  dists, k,
+                                                  out_dtype=id_dtype)
+        finally:
+            self._pred_lanes = None
+        return out_ids, out_d
+
     def submit(self, req: Request) -> int:
         """Enqueue one request; returns a ticket for flush()'s result list."""
         ticket = self._next_ticket
@@ -511,38 +647,58 @@ class KHIService:
         self._pending.append((ticket, req))
         return ticket
 
+    def _run_batch(self, batch: Sequence[Request]) -> List[Result]:
+        """Answer one mixed batch of box and predicate requests (§15).
+
+        Box requests run as ONE micro-batch through ``_answer``;
+        predicate requests are grouped by the expression's canonical key
+        (``parse_expr("a0>=1 and a0<=2")`` and ``Range(0, 1, 2)`` share a
+        compiled program and a group) and each group serves as its own
+        ``search_expr`` batch. Predicate Results report ``cached=False``
+        — the per-box answers still hit the LRU underneath, but a merged
+        multi-box result is not itself a single cache entry."""
+        results: List[Optional[Result]] = [None] * len(batch)
+        box_idx = [j for j, r in enumerate(batch) if r.expr is None]
+        if box_idx:
+            qs = np.stack([batch[j].query for j in box_idx]).astype(np.float32)
+            los = np.stack([batch[j].lo for j in box_idx]).astype(np.float32)
+            his = np.stack([batch[j].hi for j in box_idx]).astype(np.float32)
+            ids, dists, hit = self._answer(qs, los, his)
+            for i, j in enumerate(box_idx):
+                results[j] = Result(ids=ids[i], dists=dists[i],
+                                    cached=bool(hit[i]))
+        groups: "collections.OrderedDict[bytes, List[int]]" = (
+            collections.OrderedDict())
+        for j, r in enumerate(batch):
+            if r.expr is not None:
+                groups.setdefault(canonical_key(r.expr), []).append(j)
+        for idx in groups.values():
+            qs = np.stack([batch[j].query for j in idx]).astype(np.float32)
+            ids, dists = self.search_expr(qs, batch[idx[0]].expr)
+            for i, j in enumerate(idx):
+                results[j] = Result(ids=ids[i], dists=dists[i])
+        return results
+
     def flush(self) -> dict:
         """Run all pending requests (micro-batched); {ticket: Result}."""
         if not self._pending:
             return {}
         pending, self._pending = self._pending, []
-        qs = np.stack([r.query for _, r in pending]).astype(np.float32)
-        los = np.stack([r.lo for _, r in pending]).astype(np.float32)
-        his = np.stack([r.hi for _, r in pending]).astype(np.float32)
-        ids, dists, hit = self._answer(qs, los, his)
-        return {ticket: Result(ids=ids[j], dists=dists[j], cached=bool(hit[j]))
+        results = self._run_batch([r for _, r in pending])
+        return {ticket: results[j]
                 for j, (ticket, _) in enumerate(pending)}
 
     def serve_stream(self, requests: Iterable[Request]) -> Iterator[Result]:
         """Consume an iterator of requests, yield Results in order,
         micro-batching up to ``config.max_batch`` at a time."""
         batch: List[Request] = []
-
-        def drain(batch):
-            qs = np.stack([r.query for r in batch]).astype(np.float32)
-            los = np.stack([r.lo for r in batch]).astype(np.float32)
-            his = np.stack([r.hi for r in batch]).astype(np.float32)
-            ids, dists, hit = self._answer(qs, los, his)
-            for j in range(len(batch)):
-                yield Result(ids=ids[j], dists=dists[j], cached=bool(hit[j]))
-
         for req in requests:
             batch.append(req)
             if len(batch) >= self.config.max_batch:
-                yield from drain(batch)
+                yield from self._run_batch(batch)
                 batch = []
         if batch:
-            yield from drain(batch)
+            yield from self._run_batch(batch)
 
     # ---------------------------------------------------------- streaming
     def enable_streaming(self, *, capacity: int = 4096,
@@ -664,6 +820,8 @@ class KHIService:
         s["traced_buckets"] = sorted(s["traced_buckets"])
         s["tier_lanes"] = {str(t): int(n)
                            for t, n in sorted(s["tier_lanes"].items())}
+        s["predicate_lanes"] = {str(strat): int(n) for strat, n
+                                in sorted(s["predicate_lanes"].items())}
         s["cache_entries"] = len(self._cache)
         s["epoch"] = self.epoch
         dq, ds = s["device_queries"], s["device_seconds"]

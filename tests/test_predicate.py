@@ -1,0 +1,506 @@
+"""Differential predicate-fuzz suite for the compiler (DESIGN.md §15).
+
+Three layers, each differential against an independent reference:
+
+* **IR fuzz** — property-based (hypothesis, or the deterministic fallback
+  shim) over random ASTs: normalization is idempotent and semantics-
+  preserving (numpy mask equality on a quantized attribute grid with NaN
+  tombstone rows), box-mode covers are pairwise DISJOINT and their union
+  reproduces the expression's row mask exactly, serialization round-trips
+  the canonical key. 6 examples x 35 expressions = 210 fuzzed predicates.
+
+* **Engine fuzz** — compiled ``search_expr`` answers versus
+  ``query_ref.brute_force_expr`` (numpy mask-then-top-k with the engine's
+  (dist, id) tie-break) on a 1/32-grid corpus where every squared L2 is
+  exactly representable in f32. Following the repo's verification
+  discipline (scan/window lanes are pinned bit-identical; graph walks get
+  recall floors — tests/test_planner.py, tests/test_query.py), the
+  contract is per-strategy:
+
+    - every structurally EXACT configuration — ``strategy="scan"`` at
+      all quant tiers, ``"auto"`` with the dispatch threshold at n (all
+      nonzero-cardinality lanes scan), ``"hybrid"`` with every node under
+      the window threshold (pure-window lanes), the bitmask fallback, and
+      the sharded twins — must be BIT-IDENTICAL to the oracle;
+    - ``strategy="graph"`` (approximate by design: the router yields one
+      entry per antichain node, so partially covered scannable nodes can
+      disconnect in-range rows) pins the COMPILER differential instead —
+      compiled output bit-identical to a hand-decomposed per-box loop
+      through the same engine + ``_merge_dedup`` — plus the in-filter /
+      no-duplicate / sorted contracts and an aggregate recall floor.
+
+* **Streaming fuzz** — the PR-6 mutation-oracle harness with predicate
+  queries: insert / delete / compact interleavings where ``search_expr``
+  must agree exactly with ``StreamingOracle.query_expr`` (stable int64
+  ext ids) at every step.
+
+Plus negative-path pins (malformed ASTs rejected with actionable paths at
+``validate_search_params`` time, bitmask-under-streaming and mesh serving
+rejected with actionable errors) and golden-plan pins (normalized IR,
+disjoint covers and per-disjunct dispatch byte-stable against
+``tests/golden/predicate_plans.json`` — regenerate with
+``scripts/gen_golden_predicates.py``).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core.engine import Planner, SearchParams, _merge_dedup
+from repro.core.khi import KHIConfig, KHIIndex
+from repro.core.predicate import (And, Eq, In, Not, Or, Range, boxes_disjoint,
+                                  canonical_key, compile_expr, eval_expr,
+                                  expr_from_dict, expr_to_dict, normalize,
+                                  parse_expr, validate_expr)
+from repro.core.query_ref import StreamingOracle, brute_force_expr
+from repro.core.sharded import build_sharded
+from repro.serve import KHIService, Request, ServeConfig
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "predicate_plans.json"
+
+N, D, M = 96, 8, 3
+K = 10
+
+
+# --------------------------------------------------------- random ASTs
+
+def _rand_leaf(rng, m):
+    a = int(rng.integers(0, m))
+    kind = int(rng.integers(0, 4))
+    if kind == 0:                                   # two-sided range
+        lo = float(rng.integers(-1, 8))
+        return Range(a, lo, lo + float(rng.integers(0, 5)))
+    if kind == 1:                                   # one-sided range
+        v = float(rng.integers(0, 8))
+        return (Range(a, v, None) if rng.random() < 0.5
+                else Range(a, None, v))
+    if kind == 2:
+        return Eq(a, float(rng.integers(0, 8)))
+    vals = rng.choice(8, size=int(rng.integers(1, 5)), replace=False)
+    return In(a, tuple(float(v) for v in vals))
+
+
+def _rand_expr(rng, m, depth=3):
+    r = rng.random()
+    if depth == 0 or r < 0.45:
+        return _rand_leaf(rng, m)
+    if r < 0.62:
+        return Not(_rand_expr(rng, m, depth - 1))
+    op = And if r < 0.84 else Or
+    return op(tuple(_rand_expr(rng, m, depth - 1)
+                    for _ in range(int(rng.integers(2, 4)))))
+
+
+# ----------------------------------------------------------- grid corpus
+# 1/32 quantization grid: every squared L2 is a sum of D exact multiples
+# of 2^-10 — bit-exact in f32 regardless of reduce order (the same trick
+# tests/test_streaming.py uses), so scan-lane bit-identity is honest.
+
+def _grid_vecs(rng, n, d=D):
+    return (rng.integers(-64, 64, size=(n, d)) / 32).astype(np.float32)
+
+
+def _grid_attrs(rng, n, m=M):
+    return rng.integers(0, 8, size=(n, m)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0xF1)
+    vecs, attrs = _grid_vecs(rng, N), _grid_attrs(rng, N)
+    index = KHIIndex.build(vecs, attrs, KHIConfig(M=8, merge_chunk=16))
+    queries = _grid_vecs(rng, 4)
+    return vecs, attrs, index, queries
+
+
+def _params(strategy, quant="none", shards=1, **kw):
+    base = dict(k=K, ef=N, c_e=10, c_n=64, backend="jnp",
+                rerank_mult=16, strategy=strategy, quant=quant)
+    if strategy == "auto":
+        # dispatch threshold at n: every nonzero-cardinality lane scans
+        # (exact); zero-card lanes graph-exit empty (also exact)
+        base["scan_threshold"] = N
+    if strategy == "hybrid":
+        # every antichain node under the window threshold: pure-window
+        # dispatch, exact by construction (DESIGN.md §12)
+        base["node_scan_threshold"] = N
+    base.update(kw)
+    return SearchParams(**base)
+
+
+def _exprs(n, seed=0xE0, m=M):
+    rng = np.random.default_rng(seed)
+    out = [
+        Range(0, 2, 5),                              # plain box
+        Range(1, None, 3),                           # one-sided
+        Eq(2, 4.0),                                  # point
+        In(0, (1.0, 4.0, 6.0)),                      # IN-list
+        Or((Range(0, 0, 1), Range(1, 6, None))),     # overlapping union
+        And((Range(0, 5, 2),)),                      # unsatisfiable
+        Not(In(1, (0.0, 7.0))),                      # complement ranges
+        And((Range(0, 2, None), Or((Eq(1, 3.0), Range(2, 5, 7))))),
+    ]
+    while len(out) < n:
+        out.append(_rand_expr(rng, m))
+    return out[:n]
+
+
+def _oracle_check(ids, dists, vecs, attrs, queries, expr):
+    """Bit-identity against the numpy mask-then-top-k oracle."""
+    for i in range(len(queries)):
+        ref = brute_force_expr(vecs, attrs, queries[i], expr, K)
+        got = ids[i][ids[i] >= 0]
+        np.testing.assert_array_equal(got, ref)
+        assert np.all(ids[i][len(ref):] == -1)
+        assert np.all(np.isinf(dists[i][len(ref):]))
+        if len(ref):
+            diff = vecs[ref].astype(np.float64) - queries[i].astype(np.float64)
+            want = ((diff ** 2).sum(axis=1)).astype(np.float32)
+            np.testing.assert_array_equal(dists[i][: len(ref)], want)
+
+
+# ------------------------------------------------------------- IR fuzz
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_ir_fuzz_normalize_and_lower(seed):
+    """210 random ASTs: normalization is idempotent and mask-preserving,
+    box covers are disjoint and reproduce the mask, serialization
+    round-trips the canonical key, bitmask fallbacks agree too."""
+    rng = np.random.default_rng(seed)
+    # quantized attribute grid + one NaN tombstone row (must fail every
+    # expression, including through raw Not)
+    attrs = _grid_attrs(rng, 64)
+    attrs[-1] = np.nan
+    for _ in range(35):
+        e = _rand_expr(rng, M)
+        validate_expr(e, M)
+        norm = normalize(e, M)
+        assert normalize(norm) == norm                   # idempotent
+        mask = eval_expr(e, attrs)
+        np.testing.assert_array_equal(eval_expr(norm, attrs), mask)
+        assert not mask[-1]                              # NaN row fails
+        prog = compile_expr(e, M, box_budget=8)
+        if prog.mode == "boxes":
+            assert 1 <= prog.n_boxes <= 8
+            assert boxes_disjoint(prog.lo, prog.hi)
+            cover = np.zeros(len(attrs), bool)
+            for b in range(prog.n_boxes):
+                cover |= np.all((attrs >= prog.lo[b]) &
+                                (attrs <= prog.hi[b]), axis=-1)
+            np.testing.assert_array_equal(cover, mask)
+        else:
+            np.testing.assert_array_equal(eval_expr(prog.expr, attrs), mask)
+        rt = expr_from_dict(expr_to_dict(e))
+        assert rt == e
+        assert canonical_key(rt) == canonical_key(e)
+
+
+# ----------------------------------------------------------- engine fuzz
+
+EXACT_CONFIGS = [
+    ("scan", "none", 1), ("scan", "bf16", 1), ("scan", "int8", 1),
+    ("auto", "none", 1), ("auto", "int8", 1),
+    ("hybrid", "none", 1),
+    ("scan", "none", 2), ("auto", "none", 2),
+]
+
+
+@pytest.mark.parametrize("strategy,quant,shards", EXACT_CONFIGS)
+def test_engine_fuzz_exact_paths(corpus, strategy, quant, shards):
+    """Every structurally exact strategy x quant x sharding point:
+    compiled ids/dists bit-identical to the numpy oracle. The quantized
+    scans stay exact because ``rerank_mult=16`` makes the f32 rerank's
+    over-fetch cover the whole corpus (DESIGN.md §12)."""
+    vecs, attrs, index, queries = corpus
+    if shards > 1:
+        index = build_sharded(vecs, attrs, shards,
+                              KHIConfig(M=8, merge_chunk=16))
+    planner = Planner(index, _params(strategy, quant))
+    for expr in _exprs(20):
+        ids, dists, _hops, pplan = planner.search_expr(queries, expr)
+        assert pplan.mode in ("boxes", "bitmask")
+        _oracle_check(ids, dists, vecs, attrs, queries, expr)
+
+
+@pytest.mark.parametrize("quant,shards", [("none", 1), ("int8", 1),
+                                          ("none", 2)])
+def test_engine_fuzz_graph_differential(corpus, quant, shards):
+    """strategy="graph": the compiler differential — ``search_expr``
+    bit-identical to a hand-decomposed loop that searches each disjoint
+    box through the SAME planner and merges with ``_merge_dedup`` — plus
+    the in-filter / no-dup / sorted contracts and an aggregate recall
+    floor (the repo's graph-lane bar; graph walks are approximate)."""
+    vecs, attrs, index, queries = corpus
+    if shards > 1:
+        index = build_sharded(vecs, attrs, shards,
+                              KHIConfig(M=8, merge_chunk=16))
+    planner = Planner(index, _params("graph", quant))
+    hits = total = 0
+    for expr in _exprs(12, seed=0xE1):
+        ids, dists, _hops, pplan = planner.search_expr(queries, expr)
+        if pplan.mode == "bitmask":
+            # the fallback is exact regardless of strategy
+            _oracle_check(ids, dists, vecs, attrs, queries, expr)
+            continue
+        prog = pplan.program
+        ref_i = np.full((len(queries), K), -1, np.int32)
+        ref_d = np.full((len(queries), K), np.inf, np.float32)
+        for b in range(prog.n_boxes):
+            lo = np.ascontiguousarray(
+                np.broadcast_to(prog.lo[b], (len(queries), M)), np.float32)
+            hi = np.ascontiguousarray(
+                np.broadcast_to(prog.hi[b], (len(queries), M)), np.float32)
+            bi, bd, _h, _p = planner.search(queries, lo, hi)
+            if b == 0:
+                ref_i, ref_d = bi, bd
+            else:
+                ref_i, ref_d = _merge_dedup(ref_i, ref_d, bi, bd, K)
+        np.testing.assert_array_equal(ids, ref_i)
+        np.testing.assert_array_equal(dists, ref_d)
+        mask = eval_expr(expr, attrs)
+        for i in range(len(queries)):
+            got = ids[i][ids[i] >= 0]
+            assert mask[got].all()                       # in-filter
+            assert len(set(got.tolist())) == len(got)    # no dups
+            fin = dists[i][np.isfinite(dists[i])]
+            assert np.all(np.diff(fin) >= 0)             # sorted
+            ref = brute_force_expr(vecs, attrs, queries[i], expr, K)
+            hits += len(set(got.tolist()) & set(ref.tolist()))
+            total += max(len(ref), 1)
+    assert hits / total >= 0.6, f"graph predicate recall {hits/total:.2f}"
+
+
+def test_bitmask_and_boxes_agree(corpus):
+    """Box-budget overflow: the same expression compiled under a budget
+    that fits (boxes) and one that doesn't (bitmask fallback) must give
+    bit-identical answers — both are exact under strategy="scan"."""
+    vecs, attrs, index, queries = corpus
+    expr = Or(tuple(Eq(0, float(v)) for v in (0, 2, 4, 6)))
+    lo_budget = compile_expr(expr, M, box_budget=1)
+    hi_budget = compile_expr(expr, M, box_budget=8)
+    assert lo_budget.mode == "bitmask" and hi_budget.mode == "boxes"
+    wide = Planner(index, _params("scan", box_budget=8))
+    narrow = Planner(index, _params("scan", box_budget=1))
+    ids_w, d_w, _h, plan_w = wide.search_expr(queries, expr)
+    ids_n, d_n, _h, plan_n = narrow.search_expr(queries, expr)
+    assert plan_w.mode == "boxes" and plan_n.mode == "bitmask"
+    np.testing.assert_array_equal(ids_w, ids_n)
+    np.testing.assert_array_equal(d_w, d_n)
+    _oracle_check(ids_w, d_w, vecs, attrs, queries, expr)
+
+
+def test_unsatisfiable_lowers_to_empty_box_lane(corpus):
+    """A provably-false expression compiles to ONE empty box (lo=+inf >
+    hi=-inf) — the engine's masked pad lane — and every strategy answers
+    all (-1, +inf) without error."""
+    vecs, attrs, index, queries = corpus
+    expr = And((Range(0, 5, 2), Eq(1, 3.0)))
+    prog = compile_expr(expr, M)
+    assert prog.mode == "boxes" and prog.n_boxes == 1
+    assert prog.lo[0, 0] > prog.hi[0, 0]
+    for strategy in ("scan", "graph"):
+        ids, dists, hops, _p = Planner(
+            index, _params(strategy)).search_expr(queries, expr)
+        assert np.all(ids == -1) and np.all(np.isinf(dists))
+        assert np.all(hops == 0) if strategy == "scan" else True
+
+
+# --------------------------------------------------------- streaming fuzz
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_streaming_mutation_oracle_with_predicates(seed):
+    """The PR-6 mutation-oracle harness with predicate queries: random
+    insert / delete / compact interleavings where ``search_expr`` must
+    agree EXACTLY (stable int64 ext ids, (dist, ext) tie-break) with
+    ``StreamingOracle.query_expr`` at every step — delta-merged and
+    post-compaction."""
+    rng = np.random.default_rng(seed)
+    vecs, attrs = _grid_vecs(rng, 64), _grid_attrs(rng, 64)
+    cfg = KHIConfig(M=8, builder="device")
+    svc = KHIService(KHIIndex.build(vecs, attrs, cfg),
+                     _params("scan"),
+                     config=ServeConfig(buckets=(4, 8), cache_size=64))
+    svc.enable_streaming(capacity=32, build_config=cfg)
+    oracle = StreamingOracle(vecs, attrs)
+    # box-mode expressions only: the bitmask fallback is (deliberately)
+    # rejected under streaming — pinned separately below
+    exprs = [e for e in _exprs(10, seed=seed ^ 0x51)
+             if compile_expr(e, M).mode == "boxes"]
+
+    def check(step):
+        q = _grid_vecs(np.random.default_rng(seed * 1000 + step), 3)
+        for expr in exprs[:4]:
+            ids, dists = svc.search_expr(q, expr)
+            assert ids.dtype == np.int64
+            for i in range(len(q)):
+                want = oracle.query_expr(q[i], expr, K)
+                got = ids[i][ids[i] >= 0]
+                np.testing.assert_array_equal(got, want)
+                assert np.all(np.isinf(dists[i][len(want):]))
+
+    check(0)
+    for step in range(1, 7):
+        op = ("insert", "insert", "delete", "query",
+              "compact")[int(rng.integers(0, 5))]
+        if op == "insert":
+            b = int(rng.integers(1, 9))
+            nv, na = _grid_vecs(rng, b), _grid_attrs(rng, b)
+            np.testing.assert_array_equal(svc.insert(nv, na),
+                                          oracle.insert(nv, na))
+        elif op == "delete":
+            pick = rng.choice(oracle.next_ext,
+                              size=int(rng.integers(1, 5)), replace=False)
+            assert svc.delete(pick) == oracle.delete(pick)
+        elif op == "compact":
+            svc.compact()
+        check(step)
+
+
+def test_bitmask_under_streaming_rejected():
+    """The dense fallback's host mask plane cannot see delta rows — the
+    service must refuse with an actionable error, and the same expression
+    under a budget that fits must keep working."""
+    rng = np.random.default_rng(5)
+    vecs, attrs = _grid_vecs(rng, 64), _grid_attrs(rng, 64)
+    cfg = KHIConfig(M=8, builder="device")
+    svc = KHIService(KHIIndex.build(vecs, attrs, cfg),
+                     _params("scan", box_budget=1),
+                     config=ServeConfig(buckets=(4,)))
+    svc.enable_streaming(capacity=16, build_config=cfg)
+    svc.insert(_grid_vecs(rng, 2), _grid_attrs(rng, 2))
+    multi = Or((Eq(0, 1.0), Eq(0, 5.0)))         # 2 boxes > budget 1
+    q = _grid_vecs(rng, 2)
+    with pytest.raises(ValueError, match="box_budget"):
+        svc.search_expr(q, multi)
+    single = Range(0, 2, 6)                      # fits any budget
+    ids, _d = svc.search_expr(q, single)
+    assert ids.dtype == np.int64
+
+
+# ---------------------------------------------------------- negative paths
+
+def _di(corpus):
+    _, _, index, _ = corpus
+    return eng.device_put_index(index) if isinstance(index, KHIIndex) \
+        else index
+
+
+@pytest.mark.parametrize("bad,msg", [
+    (Range(7, 0, 1), r"Range\.attr must be an int in \[0, 3\)"),
+    (Range(0, float("nan"), 1), "must not be NaN"),
+    (In(1, ()), "non-empty"),
+    (And(()), "at least one child"),
+    (Not(None), "Not needs a child"),
+    (And((Range(0, 0, 1), "a0 > 2")), r"expr\.And\[1\].*expected a "
+                                      r"predicate node"),
+    (Eq(0, float("inf")), "must be finite"),
+])
+def test_malformed_asts_rejected_at_validation(corpus, bad, msg):
+    """Malformed ASTs die at ``validate_search_params(..., expr=)`` time
+    with the offending node's path in the message — before any compile
+    or device work."""
+    di = _di(corpus)
+    with pytest.raises(ValueError, match=msg):
+        eng.validate_search_params(_params("scan"), di, expr=bad)
+
+
+def test_request_validation():
+    q = np.zeros(D, np.float32)
+    box = np.zeros(M, np.float32)
+    with pytest.raises(ValueError, match="exactly one filter form"):
+        Request(q, box, box, expr=Range(0, 0, 1))
+    with pytest.raises(ValueError, match="needs a filter"):
+        Request(q)
+    with pytest.raises(ValueError, match="needs a filter"):
+        Request(q, lo=box)
+    assert Request(q, box, box).expr is None
+    assert Request(q, expr=Range(0, 0, 1)).lo is None
+
+
+def test_box_budget_validated():
+    with pytest.raises(ValueError, match="box_budget"):
+        SearchParams(box_budget=0)
+    with pytest.raises(ValueError, match="box_budget"):
+        compile_expr(Range(0, 0, 1), M, box_budget=0)
+
+
+def test_mesh_serving_rejected_with_actionable_error(corpus):
+    """Compiled predicates do not lower through the collective shard_map
+    program yet — the service must say so (and say what to do) rather
+    than silently answering host-side (DESIGN.md §15)."""
+    vecs, attrs, _index, queries = corpus
+    from repro.launch.mesh import make_query_mesh
+    skhi = build_sharded(vecs, attrs, 1, KHIConfig(M=8, merge_chunk=16))
+    svc = KHIService(skhi, _params("scan"), mesh=make_query_mesh(1, 1))
+    with pytest.raises(ValueError, match="collective"):
+        svc.search_expr(queries, Range(0, 2, 5))
+
+
+# ------------------------------------------------------- service predicates
+
+def test_service_flush_and_lane_stats(corpus):
+    """Mixed box + predicate flush through the service front door: group-
+    by-canonical-key batching, correct per-ticket results, and the §15
+    observability contract — ``snapshot()["predicate_lanes"]`` counts the
+    per-strategy device lanes compiled predicates dispatched."""
+    vecs, attrs, index, queries = corpus
+    svc = KHIService(index, _params("auto"),
+                     config=ServeConfig(buckets=(4, 8)))
+    expr = Or((Range(0, 0, 2), Range(1, 6, None)))
+    t_box = svc.submit(Request(queries[0], np.full(M, -np.inf, np.float32),
+                               np.full(M, np.inf, np.float32)))
+    t_e1 = svc.submit(Request(queries[1], expr=expr))
+    # same canonical form, different construction: must share the group
+    t_e2 = svc.submit(Request(queries[2],
+                              expr=Or((Range(1, 6, None), Range(0, 0, 2)))))
+    out = svc.flush()
+    assert set(out) == {t_box, t_e1, t_e2}
+    for t, qi in ((t_e1, 1), (t_e2, 2)):
+        ref = brute_force_expr(vecs, attrs, queries[qi], expr, K)
+        got = out[t].ids[out[t].ids >= 0]
+        np.testing.assert_array_equal(got, ref)
+    lanes = svc.snapshot()["predicate_lanes"]
+    assert sum(lanes.values()) > 0
+    assert set(lanes) <= {"graph", "scan", "window", "bitmask"}
+    # auto at threshold=n sends every nonzero-cardinality lane to scan
+    assert lanes.get("scan", 0) > 0
+
+
+# ------------------------------------------------------------ golden plans
+
+def test_golden_predicate_plans(tiny_index):
+    """Byte-stability of the compiler against the committed golden plans
+    (scripts/gen_golden_predicates.py): normalized IR, canonical keys,
+    disjoint box covers and the per-disjunct cardinality/dispatch record
+    on the _TINY index must all reproduce exactly."""
+    golden = json.loads(GOLDEN.read_text())
+    planner = Planner(tiny_index, SearchParams(
+        k=10, ef=64, c_e=10, c_n=32, backend="jnp", strategy="auto",
+        scan_threshold=golden["scan_threshold"]))
+    m = golden["m"]
+    for entry in golden["entries"]:
+        expr = expr_from_dict(entry["expr"])
+        norm = normalize(expr, m)
+        assert expr_to_dict(norm) == entry["normalized"]
+        assert normalize(norm) == norm
+        assert canonical_key(expr).hex() == entry["canonical_key"]
+        prog = compile_expr(expr, m, box_budget=golden["box_budget"])
+        assert prog.to_json_dict() == entry["program"]
+        if prog.mode == "boxes":
+            assert boxes_disjoint(prog.lo, prog.hi)
+            dispatch = []
+            for b in range(prog.n_boxes):
+                plan = planner.plan(prog.lo[b][None], prog.hi[b][None])
+                dispatch.append({"card": int(plan.card[0]),
+                                 "use_scan": bool(plan.use_scan[0])})
+            assert dispatch == entry["dispatch"]
